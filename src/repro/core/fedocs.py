@@ -1,0 +1,149 @@
+"""FedOCS feature aggregation — the paper's core technique as a JAX module.
+
+All aggregators operate on a *worker-leading* tensor ``h: (N, ...)`` — the
+paper's h = [h_1 … h_N].  Inside the distributed model the worker axis is
+sharded over the ``model`` mesh axis, so a reduction over axis 0 lowers to a
+single ``all-reduce`` collective on the ICI fabric:
+
+  * ``sum``      -> all-reduce(add)      (Megatron-style TP; reference)
+  * ``max``      -> all-reduce(max)      (FedOCS, paper Eq. 4)
+  * ``max_q16``  -> all-reduce(max) on uint16 monotone codes (paper Eq. 7 as
+                    a lossy-but-order-exact collective compression; DESIGN §2.1)
+  * ``max_q8``   -> all-reduce(max) on uint8 codes (4x byte reduction vs f32)
+  * ``mean``     -> all-reduce(add) / N  (paper baseline "Avg. Workers Embed")
+  * ``concat``   -> all-gather           (paper baseline "Concat Workers Embed",
+                    O(N·K) bytes — the comm-heavy upper bound)
+
+Backward (paper Eq. 5-6): the cotangent of the pooled feature is routed only
+to the winning worker(s).  Both pooled variants use a ``custom_vjp`` whose
+backward is **collective-free**: the pooled value is already replicated across
+the worker axis after the forward all-reduce, so each shard computes its own
+winner mask locally and multiplies — this is the TPU realization of "the
+fusion center broadcasts dL/dv once" (§II-B).
+
+Tie handling: with ``tie_break='all'`` (default) every worker tied at the max
+receives the full cotangent — a valid subgradient, zero extra communication,
+and identical to Eq. 6 whenever the argmax is unique (ties are measure-zero
+for continuous features).  ``tie_break='first'`` reproduces the OCS protocol
+exactly (lowest worker index wins, one extra tiny all-reduce(min) of int32
+indices); equality with the protocol simulator is property-tested.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize as qz
+
+VALID_MODES = ("sum", "max", "max_q16", "max_q8", "mean", "concat")
+
+
+def _winner_mask(h: jax.Array, pooled: jax.Array, tie_break: str) -> jax.Array:
+    """Mask of workers receiving gradient. pooled is broadcast over axis 0."""
+    mask = (h == pooled[None]).astype(h.dtype)
+    if tie_break == "all":
+        return mask
+    if tie_break == "first":
+        n = h.shape[0]
+        idx = jnp.arange(n, dtype=jnp.int32).reshape((n,) + (1,) * (h.ndim - 1))
+        cand = jnp.where(mask > 0, idx, jnp.int32(n))
+        first = jnp.min(cand, axis=0)            # all-reduce(min) when sharded
+        return (idx == first[None]).astype(h.dtype) * mask
+    raise ValueError(f"unknown tie_break {tie_break!r}")
+
+
+# ---------------------------------------------------------------------------
+# max-pool (paper Eq. 4) with winner-routed backward (Eq. 6)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def maxpool(h: jax.Array, tie_break: str = "all") -> jax.Array:
+    return jnp.max(h, axis=0)
+
+
+def _maxpool_fwd(h, tie_break):
+    pooled = jnp.max(h, axis=0)
+    return pooled, (h, pooled)
+
+
+def _maxpool_bwd(tie_break, res, g):
+    h, pooled = res
+    return (g[None] * _winner_mask(h, pooled, tie_break),)
+
+
+maxpool.defvjp(_maxpool_fwd, _maxpool_bwd)
+
+
+# ---------------------------------------------------------------------------
+# quantized max-pool: all-reduce(max) over D-bit monotone codes (DESIGN §2.1)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def maxpool_quantized(h: jax.Array, bits: int, tie_break: str = "all") -> jax.Array:
+    codes = qz.quantize(h, bits)
+    pooled_code = jnp.max(codes, axis=0)         # AR(max) on uint8/uint16 codes
+    return qz.dequantize(pooled_code, bits, h.dtype)
+
+
+def _maxpool_q_fwd(h, bits, tie_break):
+    codes = qz.quantize(h, bits)
+    pooled_code = jnp.max(codes, axis=0)
+    pooled = qz.dequantize(pooled_code, bits, h.dtype)
+    return pooled, (codes, pooled_code)
+
+
+def _maxpool_q_bwd(bits, tie_break, res, g):
+    codes, pooled_code = res
+    # Straight-through: gradient flows to the worker(s) whose code won the
+    # contention (exactly the OCS winner set); quantizer Jacobian ~ identity.
+    mask = (codes == pooled_code[None]).astype(g.dtype)
+    if tie_break == "first":
+        n = codes.shape[0]
+        idx = jnp.arange(n, dtype=jnp.int32).reshape((n,) + (1,) * (codes.ndim - 1))
+        cand = jnp.where(mask > 0, idx, jnp.int32(n))
+        first = jnp.min(cand, axis=0)
+        mask = mask * (idx == first[None]).astype(g.dtype)
+    return (g[None] * mask,)
+
+
+maxpool_quantized.defvjp(_maxpool_q_fwd, _maxpool_q_bwd)
+
+
+# ---------------------------------------------------------------------------
+# baselines + dispatcher
+# ---------------------------------------------------------------------------
+
+def meanpool(h: jax.Array) -> jax.Array:
+    return jnp.mean(h, axis=0)
+
+
+def concat(h: jax.Array) -> jax.Array:
+    """(N, ..., K) -> (..., N*K): all-gather + feature concat (paper baseline)."""
+    moved = jnp.moveaxis(h, 0, -2)                 # (..., N, K)
+    return moved.reshape(h.shape[1:-1] + (h.shape[0] * h.shape[-1],))
+
+
+def aggregate(h: jax.Array, mode: str, *, tie_break: str = "all") -> jax.Array:
+    """Pool a worker-leading feature tensor. h: (N, ..., K)."""
+    if mode == "sum":
+        return jnp.sum(h, axis=0)
+    if mode == "max":
+        return maxpool(h, tie_break)
+    if mode == "max_q16":
+        return maxpool_quantized(h, 16, tie_break)
+    if mode == "max_q8":
+        return maxpool_quantized(h, 8, tie_break)
+    if mode == "mean":
+        return meanpool(h)
+    if mode == "concat":
+        return concat(h)
+    raise ValueError(f"unknown aggregation mode {mode!r}; valid: {VALID_MODES}")
+
+
+def output_dim(mode: str, n_workers: int, k: int) -> int:
+    """Feature width the fusion head sees for a given aggregation mode."""
+    return n_workers * k if mode == "concat" else k

@@ -1,0 +1,237 @@
+"""Opportunistic Carrier Sensing (OCS) max-pooling protocol — paper §III, Alg. 1.
+
+Discrete-event simulation of the MAC-layer distributed argmax.  The protocol
+runs K sub-frames (one per feature element).  In sub-frame k, each worker n
+derives a D-bit backoff code from its feature value ``h[n, k]`` (Eq. 7) and
+contends bit-by-bit, MSB first:
+
+  * sub-slot d: workers whose backoff bit is 0 transmit a *blocking signal*;
+    workers whose backoff bit is 1 stay silent and *sense*.
+  * a sensing worker that hears a blocking signal quits the contention
+    (Alg. 1 line 4) — some still-alive worker provably holds a larger code;
+  * if nobody transmitted in the slot, every survivor continues (no
+    information was revealed; Alg. 1 line 7, "no ACK received").
+
+After D sub-slots, the survivors are exactly the workers holding the maximal
+D-bit code.  The paper's ACK mechanism resolves ties; we realize it as a
+deterministic extension: ``ceil(log2 N)`` extra ID sub-slots in which each
+survivor contends with the bitwise complement of its unique worker index, so
+the *lowest-indexed* tied worker wins (this is the fusion center ACK-ing a
+single decodable preamble).  The winner then transmits its payload
+(Alg. 1 line 9).
+
+The simulator is fully vectorized (a `lax.scan` over bit-slots) and jittable;
+it returns both the selection result and the channel accounting used by
+``benchmarks/bench_comm.py`` to reproduce the paper's O(K)-vs-O(N·K) claim.
+
+The TPU system does not use this MAC (DESIGN.md §2 — ICI is a switched
+fabric); the simulator exists to validate the protocol the paper actually
+proposes and to generate the wireless-side communication-load tables.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize as qz
+
+
+@dataclasses.dataclass(frozen=True)
+class OCSResult:
+    """Outcome of one max-pooling round over the shared channel."""
+
+    winner: jax.Array            # (K,) int32 — worker index that transmits element k
+    value: jax.Array             # (K,) float — payload transmitted (winner's h)
+    pooled_code: jax.Array       # (K,) uint  — max D-bit code (what contention decides)
+    ties: jax.Array              # (K,) int32 — number of workers tied at the max code
+    contention_slots: jax.Array  # ()  int32  — total contention sub-slots consumed
+    blocking_tx: jax.Array       # ()  int32  — total blocking-signal transmissions
+    payload_tx: jax.Array        # ()  int32  — total payload transmissions (== K)
+    # baselines for the same round (paper §IV comparison):
+    concat_payload_tx: jax.Array  # () int32 — N*K payloads (concat / mean-pool)
+
+
+def _id_codes(n_workers: int, id_bits: int) -> jax.Array:
+    """Per-worker tie-break codes: complement of index => lowest index wins max."""
+    idx = jnp.arange(n_workers, dtype=jnp.uint32)
+    return (jnp.uint32((1 << id_bits) - 1) - idx).astype(jnp.uint32)
+
+
+def ocs_maxpool(h: jax.Array, bits: int = 16) -> OCSResult:
+    """Run Algorithm 1 for all K sub-frames of one aggregation round.
+
+    Args:
+      h:    (N, K) worker feature matrix (float32/bf16/f16).
+      bits: D, the backoff quantization depth (paper Eq. 7).
+
+    Returns:
+      OCSResult. ``winner``/``pooled_code`` are exactly
+      ``argmax/max(quantize(h), axis=0)`` with lowest-index tie-break — this
+      equivalence is property-tested in ``tests/test_ocs.py``.
+    """
+    if h.ndim != 2:
+        raise ValueError(f"h must be (N, K), got {h.shape}")
+    n_workers, k_elems = h.shape
+    id_bits = max(1, math.ceil(math.log2(max(n_workers, 2))))
+
+    codes = qz.quantize(h, bits).astype(jnp.uint32)            # (N, K)
+    ids = _id_codes(n_workers, id_bits)                        # (N,)
+    # Full contention word: [ value code | id code ] — MSB-first tournament
+    # over this word is (a) Alg. 1 for the top `bits` slots, (b) the ACK
+    # tie-break for the bottom `id_bits` slots.
+    word = (codes << id_bits) | ids[:, None].astype(jnp.uint32)  # (N, K)
+    total_bits = bits + id_bits
+
+    def slot(carry, d):
+        alive, slots, blocks = carry
+        bit = (word >> (total_bits - 1 - d)) & 1               # (N, K)
+        tx = alive & (bit == 1)                                # blocking transmitters
+        any_tx = jnp.any(tx, axis=0, keepdims=True)            # (1, K)
+        # sensing workers (bit==0) quit iff someone transmitted (Alg.1 l.3-4);
+        # otherwise everyone continues (Alg.1 l.6-7).
+        alive = alive & (tx | ~any_tx)
+        slots = slots + k_elems                                # one sub-slot per sub-frame
+        blocks = blocks + jnp.sum(tx, dtype=jnp.int32)
+        return (alive, slots, blocks), None
+
+    alive0 = jnp.ones((n_workers, k_elems), dtype=bool)
+    (alive, slots, blocks), _ = jax.lax.scan(
+        slot,
+        (alive0, jnp.int32(0), jnp.int32(0)),
+        jnp.arange(total_bits),
+    )
+
+    # After value+id slots exactly one worker survives per sub-frame.
+    winner = jnp.argmax(alive, axis=0).astype(jnp.int32)       # (K,)
+    pooled_code = jnp.max(codes, axis=0)
+    ties = jnp.sum(codes == pooled_code[None, :], axis=0).astype(jnp.int32)
+    value = jnp.take_along_axis(h, winner[None, :], axis=0)[0]
+
+    return OCSResult(
+        winner=winner,
+        value=value,
+        pooled_code=pooled_code.astype(qz.quantize(h, bits).dtype),
+        ties=ties,
+        contention_slots=slots,
+        blocking_tx=blocks,
+        payload_tx=jnp.int32(k_elems),
+        concat_payload_tx=jnp.int32(n_workers * k_elems),
+    )
+
+
+def ocs_maxpool_multichannel(h: jax.Array, bits: int = 16,
+                             n_channels: int = 4) -> OCSResult:
+    """Multi-channel (OFDMA) variant — paper §III ref [16].
+
+    K sub-frames are striped over ``n_channels`` orthogonal channels running
+    the same contention in parallel; selection results are identical, wall
+    time divides by ``n_channels``.  We simulate by reshaping the sub-frame
+    axis; accounting reports per-channel slots (total slots unchanged, the
+    *latency* benefit is slots / n_channels, recorded by the benchmark).
+    """
+    res = ocs_maxpool(h, bits)
+    # contention latency improves; transmission counts are unchanged.
+    return dataclasses.replace(
+        res,
+        contention_slots=(res.contention_slots + n_channels - 1) // n_channels,
+    )
+
+
+def reference_maxpool(h: jax.Array, bits: int):
+    """Pure-jnp oracle for the protocol outcome (used by tests)."""
+    codes = qz.quantize(h, bits)
+    pooled_code = jnp.max(codes, axis=0)
+    winner = jnp.argmax(codes == pooled_code[None, :], axis=0).astype(jnp.int32)
+    value = jnp.take_along_axis(h, winner[None, :], axis=0)[0]
+    return winner, value, pooled_code
+
+
+# ---------------------------------------------------------------------------
+# beyond-paper: imperfect carrier sensing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class NoisyOCSResult:
+    """Outcome under imperfect sensing (the paper assumes error-free §IV)."""
+
+    winner: jax.Array            # (K,) int32 — final payload transmitter
+    correct: jax.Array           # (K,) bool  — winner holds the true max code
+    collisions: jax.Array        # ()  int32  — sub-frames needing re-contention
+    rounds: jax.Array            # ()  int32  — contention rounds used
+    contention_slots: jax.Array  # ()  int32
+
+
+def ocs_maxpool_noisy(h: jax.Array, rng: jax.Array, bits: int = 16,
+                      p_miss: float = 0.0, max_rounds: int = 3
+                      ) -> NoisyOCSResult:
+    """Algorithm 1 with miss-detection: a sensing worker overhears a blocking
+    signal with probability ``1 - p_miss`` per sub-slot.  Missed detections
+    create false survivors; when several survivors transmit payloads the
+    fusion center detects the collision (no clean ACK) and the survivors
+    re-contend (up to ``max_rounds``, then lowest-index capture).
+
+    With ``p_miss=0`` this reduces exactly to :func:`ocs_maxpool`
+    (property-tested).  The fusion result degrades gracefully: an incorrect
+    winner still transmits *its own true value*, so the pooled feature is a
+    lower bound of the true max — the learner sees a noisy max-pool, never a
+    corrupted value.
+    """
+    if h.ndim != 2:
+        raise ValueError(f"h must be (N, K), got {h.shape}")
+    n_workers, k_elems = h.shape
+    id_bits = max(1, math.ceil(math.log2(max(n_workers, 2))))
+    codes = qz.quantize(h, bits).astype(jnp.uint32)
+    ids = _id_codes(n_workers, id_bits)
+    word = (codes << id_bits) | ids[:, None].astype(jnp.uint32)
+    total_bits = bits + id_bits
+
+    def contention_round(alive, key):
+        def slot(carry, d):
+            alive, slots = carry
+            bit = (word >> (total_bits - 1 - d)) & 1
+            tx = alive & (bit == 1)
+            any_tx = jnp.any(tx, axis=0, keepdims=True)
+            heard = jax.random.bernoulli(
+                jax.random.fold_in(key, d), 1.0 - p_miss,
+                (n_workers, k_elems))
+            # a sensing worker quits only if someone transmitted AND it heard
+            alive = alive & (tx | ~(any_tx & heard))
+            return (alive, slots + k_elems), None
+
+        (alive, slots), _ = jax.lax.scan(
+            slot, (alive, jnp.int32(0)), jnp.arange(total_bits))
+        return alive, slots
+
+    def round_body(carry, r):
+        alive, slots, done = carry
+        key = jax.random.fold_in(rng, r)
+        survivors, round_slots = contention_round(alive, key)
+        n_surv = jnp.sum(survivors, axis=0)               # (K,)
+        collided = n_surv > 1
+        # collided sub-frames re-contend among survivors; resolved keep winner
+        new_alive = jnp.where(collided[None, :], survivors, survivors)
+        new_done = done | ~collided
+        slots = slots + jnp.where(jnp.any(~done), round_slots, 0)
+        return (new_alive, slots, new_done), jnp.sum(collided,
+                                                     dtype=jnp.int32)
+
+    alive0 = jnp.ones((n_workers, k_elems), dtype=bool)
+    done0 = jnp.zeros((k_elems,), dtype=bool)
+    (alive, slots, done), collisions = jax.lax.scan(
+        round_body, (alive0, jnp.int32(0), done0), jnp.arange(max_rounds))
+
+    winner = jnp.argmax(alive, axis=0).astype(jnp.int32)  # capture: lowest idx
+    true_code = jnp.max(codes, axis=0)
+    correct = jnp.take_along_axis(codes, winner[None, :], axis=0)[0] \
+        == true_code
+    return NoisyOCSResult(
+        winner=winner,
+        correct=correct,
+        collisions=jnp.sum(collisions),
+        rounds=jnp.int32(max_rounds),
+        contention_slots=slots,
+    )

@@ -1,0 +1,105 @@
+"""Monotone D-bit quantization of floating-point features (paper Eq. 7).
+
+The OCS protocol maps a feature value ``h`` to a backoff period
+``g(h) = 2^D - INT(h)`` where ``INT`` reinterprets the float's bit pattern as
+an integer (paper §III, footnote 2).  The IEEE-754 trick: for bit pattern
+``b`` of a float,
+
+    code(b) = ~b            if the sign bit is set   (negative values)
+    code(b) = b | SIGN_BIT  otherwise                (non-negative values)
+
+is a *strictly increasing* total order embedding of float values into unsigned
+integers (NaNs excluded).  Truncating to the top ``D`` bits gives the paper's
+D-bit backoff code: still monotone (non-strict), so ``max`` over workers of
+the D-bit codes selects a true argmax worker up to D-bit resolution — ties in
+code space are exactly the paper's contention ties.
+
+Because ``max`` commutes with any monotone map, an ``all-reduce(max)`` may run
+directly on the integer codes; this is the basis of the quantized max
+collective (DESIGN.md §2.1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_F32_SIGN = jnp.uint32(0x80000000)
+_F16_SIGN = jnp.uint16(0x8000)
+
+
+def _sign_bit_and_width(dtype):
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.float32:
+        return _F32_SIGN, jnp.uint32, 32
+    if dtype in (jnp.bfloat16, jnp.float16):
+        return _F16_SIGN, jnp.uint16, 16
+    raise ValueError(f"unsupported dtype for monotone code: {dtype}")
+
+
+def monotone_code(x: jax.Array) -> jax.Array:
+    """Order-embed floats into unsigned ints: x < y  <=>  code(x) < code(y).
+
+    Caveat (paper footnote 2 applies equally): -0.0 orders strictly below
+    +0.0 although IEEE comparison treats them as equal — harmless for
+    max-pooling since both decode back to zero."""
+    sign, utype, _ = _sign_bit_and_width(x.dtype)
+    b = jax.lax.bitcast_convert_type(x, utype)
+    neg = (b & sign) != 0
+    return jnp.where(neg, ~b, b | sign)
+
+
+def monotone_decode(code: jax.Array, dtype) -> jax.Array:
+    """Inverse of :func:`monotone_code`."""
+    sign, utype, _ = _sign_bit_and_width(dtype)
+    code = code.astype(utype)
+    neg = (code & sign) == 0          # codes below SIGN_BIT came from negatives
+    b = jnp.where(neg, ~code, code & ~sign)
+    return jax.lax.bitcast_convert_type(b, jnp.dtype(dtype))
+
+
+def quantize(x: jax.Array, bits: int) -> jax.Array:
+    """D-bit monotone code in ``[0, 2^bits)`` (top ``bits`` of the full code)."""
+    _, _, width = _sign_bit_and_width(x.dtype)
+    if not (1 <= bits <= width):
+        raise ValueError(f"bits must be in [1, {width}], got {bits}")
+    code = monotone_code(x)
+    shifted = jax.lax.shift_right_logical(
+        code, jnp.array(width - bits, code.dtype)
+    )
+    if bits <= 8:
+        return shifted.astype(jnp.uint8)
+    if bits <= 16:
+        return shifted.astype(jnp.uint16)
+    return shifted.astype(jnp.uint32)
+
+
+def dequantize(code: jax.Array, bits: int, dtype) -> jax.Array:
+    """Representative float for a D-bit code (low bits zero-filled).
+
+    Zero-filling the truncated bits makes dequantize(quantize(x)) a
+    *round-toward-negative* D-bit rounding of x, so the dequantized max is
+    always achievable by a worker (matches the paper: the winner transmits its
+    real payload; the code only drives contention).
+    """
+    _, utype, width = _sign_bit_and_width(dtype)
+    full = jax.lax.shift_left(
+        code.astype(utype), jnp.array(width - bits, utype)
+    )
+    out = monotone_decode(full, dtype)
+    # The lowest bucket zero-fills into negative-NaN bit space; its monotone-
+    # consistent representative is -inf.
+    return jnp.where(jnp.isnan(out), jnp.array(-jnp.inf, out.dtype), out)
+
+
+def backoff_code(x: jax.Array, bits: int) -> jax.Array:
+    """Paper Eq. 7: g(h) = 2^D - INT(h) — strictly decreasing in h.
+
+    Returned in the same integer width as :func:`quantize`; the worker with
+    the *smallest* backoff (earliest transmission) holds the max feature.
+    ``2^D - 1 - code`` keeps the value in [0, 2^D): Eq. 7's offset by one slot
+    has no effect on ordering.
+    """
+    q = quantize(x, bits)
+    maxcode = jnp.array((1 << bits) - 1, q.dtype)
+    return maxcode - q

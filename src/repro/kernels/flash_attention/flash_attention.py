@@ -1,0 +1,108 @@
+"""Block-wise online-softmax (flash) attention forward — Pallas TPU kernel.
+
+TPU-native adaptation (DESIGN.md §2): instead of the CUDA shared-memory /
+warp-shuffle structure, the kernel uses the canonical Pallas TPU pattern —
+a 4D grid (B, H, Sq/BQ, Sk/BK) whose last dimension executes *sequentially*
+per core, carrying the online-softmax state (m, l, acc) in VMEM scratch.
+BlockSpecs keep every operand tile MXU-aligned: BQ=BK=128 (multiples of the
+128-lane register width), head_dim padded to 128 by the callers' configs.
+
+GQA is handled in the index map (query head h reads KV head h // group).
+Causal masking skips fully-masked KV blocks via ``pl.when`` (halves the
+work, the same effect as a CUDA early-exit).
+
+Forward-only: serving/prefill path.  Training uses the einsum path (or this
+kernel under ``jax.checkpoint`` with the jnp ref as the backward).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
+                  scale: float, causal: bool, bq: int, bk: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc[...] = jnp.zeros_like(acc)
+
+    q_start = i * bq
+    k_start = j * bk
+    # skip KV blocks strictly above the causal diagonal
+    live = (not causal) or (k_start <= q_start + bq - 1)
+
+    @pl.when(live)
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32)              # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)              # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)              # (BK, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_s[...]
+        l_prev = l_s[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc[...] = acc[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_s[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _final():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l_s[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True) -> jax.Array:
+    """q: (B, H, Sq, D); k/v: (B, Hkv, Sk, D) -> (B, H, Sq, D)."""
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = h // hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (q.shape, k.shape, bq, bk)
+    scale = d ** -0.5
+    grid = (b, h, sq // bq, sk // bk)
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               bq=bq, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, i, j: (b_, h_ // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, i, j: (b_, h_ // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,31 @@
+"""jit'd wrapper with a recompute (jnp-oracle) backward for training use."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as K
+from repro.kernels.flash_attention import ref
+
+INTERPRET = True   # CPU container: interpret mode; False on real TPU
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def flash_attention(q, k, v, causal: bool = True):
+    return K.flash_attention(q, k, v, causal=causal, interpret=INTERPRET)
+
+
+def _fwd(q, k, v, causal):
+    return flash_attention(q, k, v, causal), (q, k, v)
+
+
+def _bwd(causal, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.flash_attention(
+        q_, k_, v_, causal=causal), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for flash attention (materialized-scores softmax)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True) -> jax.Array:
+    """q: (B, H, Sq, D); k/v: (B, Hkv, Sk, D) -> (B, H, Sq, D)."""
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    qg = q.reshape(b, hkv, group, sq, d)
+    s = jnp.einsum("bkgqd,bktd->bkgqt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    if causal:
+        sk = k.shape[2]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,bktd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, sq, d).astype(q.dtype)

@@ -1,0 +1,40 @@
+"""jit'd public wrapper: differentiable fused max-pool.
+
+``maxpool(h)`` is a drop-in for ``jnp.max(h, axis=0)`` with the paper's
+Eq.-6 single-winner backward, fwd and bwd both running as Pallas kernels.
+On the CPU dry-run host the kernels execute in interpret mode; flip
+``INTERPRET = False`` on real TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.maxpool import maxpool as K
+
+INTERPRET = True   # CPU container: interpret mode; False on real TPU
+
+
+@functools.lru_cache(maxsize=None)
+def _make(n: int):
+    @jax.custom_vjp
+    def mp(h):
+        v, _ = K.maxpool_fused(h, interpret=INTERPRET)
+        return v
+
+    def fwd(h):
+        v, w = K.maxpool_fused(h, interpret=INTERPRET)
+        return v, w
+
+    def bwd(w, g):
+        return (K.maxpool_winner_bwd(w, g, n, interpret=INTERPRET),)
+
+    mp.defvjp(fwd, bwd)
+    return mp
+
+
+def maxpool(h: jax.Array) -> jax.Array:
+    """h: (N, M, K) -> (M, K), single-winner-routed backward."""
+    return _make(h.shape[0])(h)

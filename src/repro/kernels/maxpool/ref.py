@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused max-pool kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def maxpool_fused(h: jax.Array):
+    v = jnp.max(h, axis=0)
+    w = jnp.argmax(h, axis=0).astype(jnp.int32)
+    return v, w
+
+
+def maxpool_winner_bwd(winner: jax.Array, g: jax.Array, n: int):
+    workers = jnp.arange(n, dtype=jnp.int32).reshape(
+        (n,) + (1,) * winner.ndim)
+    return jnp.where(workers == winner[None], g[None], 0).astype(g.dtype)

@@ -1,0 +1,38 @@
+"""jit'd wrappers for the monotone-code kernels with straight-through grads."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ocs_quant import ocs_quant as K
+
+INTERPRET = True   # CPU container: interpret mode; False on real TPU
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def quantize_st(x: jax.Array, bits: int) -> jax.Array:
+    """dequantize(encode(x)) with a straight-through gradient."""
+    c = K.encode(x, bits, interpret=INTERPRET)
+    return K.decode(c, bits, x.dtype, interpret=INTERPRET)
+
+
+def _fwd(x, bits):
+    return quantize_st(x, bits), None
+
+
+def _bwd(bits, _, g):
+    return (g,)
+
+
+quantize_st.defvjp(_fwd, _bwd)
+
+
+def encode(x, bits):
+    return K.encode(x, bits, interpret=INTERPRET)
+
+
+def decode(c, bits, dtype):
+    return K.decode(c, bits, dtype, interpret=INTERPRET)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle: core/quantize.py is the reference implementation."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import quantize as qz
+
+
+def encode(x: jax.Array, bits: int) -> jax.Array:
+    return qz.quantize(x, bits)
+
+
+def decode(c: jax.Array, bits: int, dtype) -> jax.Array:
+    return qz.dequantize(c, bits, dtype)

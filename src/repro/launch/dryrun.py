@@ -1,0 +1,391 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). 512 placeholder host devices back both the single-pod
+# (16,16) and multi-pod (2,16,16) production meshes.
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input-shape x mesh) cell this lowers + compiles the
+real step function (train_step incl. optimizer update / prefill / decode) at
+the production mesh, prints ``memory_analysis()`` and ``cost_analysis()``,
+parses per-device collective bytes out of the partitioned HLO, and writes a
+JSON artifact consumed by the roofline benchmark and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  python -m repro.launch.dryrun --arch glm4-9b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all --out artifacts/dryrun
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_IDS, SHAPES, get_config, shape_applicable)
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh, rules_for
+from repro.models import model as M
+from repro.optim import optimizers, schedules
+from repro.parallel import sharding as sh
+from repro.train.train_step import make_train_step
+
+
+def _shardings(axes_tree, values_tree, mesh, rules):
+    return sh.tree_shardings_for_values(axes_tree, values_tree, mesh, rules)
+
+
+def _replicated(tree, mesh):
+    rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    return jax.tree.map(lambda _: rep, tree)
+
+
+# activation-memory control: grad-accumulation microbatches per train cell
+TRAIN_MICROBATCHES = {
+    "jamba-1.5-large-398b": 8,
+    "qwen2.5-32b": 2,
+    "llama4-scout-17b-a16e": 2,
+}
+# FSDP threshold: shard compute params over the fsdp axes too when the plain
+# TP layout leaves more than this many bytes per device (jamba-398B)
+FSDP_PARAM_BYTES = 8 << 30
+
+
+def _per_dev_bytes(values_sds, shardings) -> int:
+    import math
+    total = 0
+    for leaf, shd in zip(jax.tree.leaves(values_sds),
+                         jax.tree.leaves(shardings, is_leaf=lambda x: hasattr(
+                             x, "shard_shape"))):
+        total += math.prod(shd.shard_shape(leaf.shape)) * leaf.dtype.itemsize
+    return total
+
+
+def build_cell(arch: str, shape_name: str, mesh, tp_fusion: str = "max",
+               overrides: Optional[Dict[str, Any]] = None):
+    """Returns (jitted fn, example args as ShapeDtypeStructs, cfg)."""
+    shape = SHAPES[shape_name]
+    overrides = dict(overrides or {})
+    microbatches = overrides.pop(
+        "microbatches",
+        TRAIN_MICROBATCHES.get(arch, 1) if shape_name == "train_4k" else 1)
+    cfg = get_config(arch, n_workers=16, tp_fusion=tp_fusion, **overrides)
+    rules = rules_for(shape_name, shape.global_batch, mesh)
+    m = M.build(cfg)
+
+    params_tagged = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+    values_sds, axes = sh.split_tree(params_tagged)
+    param_sh = _shardings(axes, values_sds, mesh, rules)
+    # FSDP for very large models: TP alone leaves too many bytes per device
+    if _per_dev_bytes(values_sds, param_sh) > FSDP_PARAM_BYTES:
+        axes = sh.zero_axes_tree(axes, values_sds, mesh, rules)
+        param_sh = _shardings(axes, values_sds, mesh, rules)
+    specs, in_axes = m.input_specs(shape)
+    batch_sh = _shardings(in_axes, specs, mesh, rules)
+
+    if shape.kind == "train":
+        opt = optimizers.adamw(schedules.constant(1e-4))
+        opt_sds = jax.eval_shape(opt.init, values_sds)
+        zaxes = sh.zero_axes_tree(axes, values_sds, mesh, rules)
+        opt_axes = {
+            "step": (),
+            "master": zaxes,
+            "m": zaxes,
+            "v": zaxes,
+        }
+        opt_sh = _shardings(opt_axes, opt_sds, mesh, rules)
+        step = make_train_step(m.loss, opt, microbatches=microbatches)
+        fn = jax.jit(step,
+                     in_shardings=(param_sh, opt_sh, batch_sh),
+                     out_shardings=(param_sh, opt_sh, None),
+                     donate_argnums=(0, 1))
+        args = (values_sds, opt_sds, specs)
+    elif shape.kind == "prefill":
+        def prefill_fn(values, batch):
+            return m.prefill(values, batch, max_seq=_prefill_len(cfg, shape))
+        fn = jax.jit(prefill_fn, in_shardings=(param_sh, batch_sh))
+        args = (values_sds, specs)
+    elif shape.kind == "decode":
+        cache_sds = specs["cache"]
+        cache_sh = _shardings(in_axes["cache"], cache_sds, mesh, rules)
+        fn = jax.jit(m.decode_step,
+                     in_shardings=(param_sh, batch_sh["token"],
+                                   batch_sh["positions"], cache_sh),
+                     out_shardings=(None, cache_sh),
+                     donate_argnums=(3,))
+        args = (values_sds, specs["token"], specs["positions"], cache_sds)
+    else:
+        raise ValueError(shape.kind)
+    return fn, args, cfg, rules
+
+
+def _prefill_len(cfg, shape):
+    if cfg.encoder_decoder:
+        return min(M.WHISPER_DECODER_LEN, shape.seq_len)
+    return shape.seq_len
+
+
+def _memory_dict(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:                                  # CPU backend gaps
+        return {"error": str(e)}
+    out = {}
+    for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+        val = getattr(ma, field, None)
+        if val is not None:
+            out[field] = int(val)
+    if not out:
+        out["repr"] = repr(ma)
+    return out
+
+
+def _cost_dict(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    keep = {}
+    for k, v in dict(ca).items():
+        if k in ("flops", "bytes accessed", "transcendentals",
+                 "optimal_seconds") or k.startswith("bytes accessed"):
+            keep[k] = float(v)
+    return keep
+
+
+def _compile_and_measure(arch, shape_name, mesh, tp_fusion, overrides,
+                         save_hlo=None):
+    t0 = time.time()
+    fn, args, cfg, rules = build_cell(arch, shape_name, mesh, tp_fusion,
+                                      overrides)
+    with sh.use_mesh(mesh, rules):
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    cost = _cost_dict(compiled)
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    coll = hlo_analysis.parse_collectives(hlo, default_group=16)
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    return {
+        "cfg": cfg,
+        "compiled": compiled,
+        "cost": cost,
+        "coll": coll,
+        "t_lower": t_lower,
+        "t_compile": t_compile,
+    }
+
+
+def _scaled_variants(cfg, microbatches: int
+                     ) -> Optional[Dict[str, Any]]:
+    """Scan-cost extrapolation variants.
+
+    XLA's cost_analysis counts a while-loop (lax.scan) body ONCE regardless
+    of trip count (verified empirically), so both the layer scan and the
+    microbatch-accumulation scan under-report.  We lower the cell with
+      B: 1 period,  unrolled layers, microbatches=1 (full batch in one shot)
+      C: 2 periods, unrolled layers, microbatches=1
+    and apply the two-point rule per metric (period clamped at >= 0):
+      true = B + (n_periods - 1) * (C - B)
+    Because every per-step cost (FLOPs, HBM bytes, collective payloads) is
+    linear in the batch dimension, gradient accumulation does not change the
+    per-step total — lowering the variants at microbatches=1 with the full
+    batch makes the whole step visible to cost_analysis, which is all the
+    correction the accumulation scan needs.  Encoder stacks (whisper) scale
+    alongside — their trip count equals the decoder's.
+    """
+    period = cfg.period
+    n = cfg.n_periods
+    if n <= 1 and not cfg.encoder_decoder and microbatches == 1:
+        return None
+    enc1 = len(cfg.encoder_layer_plan()) if cfg.encoder_decoder else 0
+    over_b = {"n_layers": period, "scan_layers": False, "microbatches": 1}
+    over_c = {"n_layers": 2 * period, "scan_layers": False,
+              "microbatches": 1}
+    if cfg.encoder_decoder:
+        n_enc = cfg.n_encoder_layers // enc1
+        assert n_enc == n, "enc/dec trip counts must match for extrapolation"
+        over_b["n_encoder_layers"] = enc1
+        over_c["n_encoder_layers"] = 2 * enc1
+    return {"b": over_b, "c": over_c, "n_periods": n,
+            "microbatches": microbatches}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             tp_fusion: str = "max",
+             overrides: Optional[Dict[str, Any]] = None,
+             save_hlo: Optional[str] = None,
+             extrapolate: bool = True) -> Dict[str, Any]:
+    shape = SHAPES[shape_name]
+    cfg_probe = get_config(arch)
+    ok, why = shape_applicable(cfg_probe, shape)
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "tp_fusion": tp_fusion,
+    }
+    if not ok:
+        record["status"] = "skipped"
+        record["reason"] = why
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    try:
+        full = _compile_and_measure(arch, shape_name, mesh, tp_fusion,
+                                    overrides, save_hlo=save_hlo)
+        cfg = full["cfg"]
+        mem = _memory_dict(full["compiled"])
+        flops = full["cost"].get("flops", 0.0)
+        hbm_bytes = full["cost"].get("bytes accessed", 0.0)
+        link_bytes = full["coll"].link_bytes
+        extrap_info = None
+
+        cell_mb = (overrides or {}).get(
+            "microbatches",
+            TRAIN_MICROBATCHES.get(arch, 1)
+            if shape_name == "train_4k" else 1)
+        variants = (_scaled_variants(cfg, cell_mb) if extrapolate else None)
+        if variants is not None:
+            ov = dict(overrides or {})
+            ov.pop("microbatches", None)
+            b = _compile_and_measure(arch, shape_name, mesh, tp_fusion,
+                                     {**ov, **variants["b"]})
+            c = _compile_and_measure(arch, shape_name, mesh, tp_fusion,
+                                     {**ov, **variants["c"]})
+            n = variants["n_periods"]
+
+            def metric(rec, key):
+                if key == "link":
+                    return rec["coll"].link_bytes
+                return rec["cost"].get(key, 0.0)
+
+            def extrap(key):
+                vb, vc = metric(b, key), metric(c, key)
+                return vb + (n - 1) * max(vc - vb, 0.0)
+
+            flops = extrap("flops")
+            hbm_bytes = extrap("bytes accessed")
+            link_bytes = extrap("link")
+            extrap_info = {
+                "n_periods": n,
+                "microbatches": variants["microbatches"],
+                "period_flops": metric(c, "flops") - metric(b, "flops"),
+                "period_link_bytes": metric(c, "link") - metric(b, "link"),
+                "collective_counts_2p": c["coll"].counts,
+            }
+
+        terms = hlo_analysis.roofline_terms(flops, hbm_bytes, link_bytes)
+        model_flops = _model_flops(cfg, shape)
+        record.update({
+            "status": "ok",
+            "lower_s": round(full["t_lower"], 1),
+            "compile_s": round(full["t_compile"], 1),
+            "n_chips": n_chips,
+            "memory": mem,
+            "cost_raw_scanned": full["cost"],
+            "flops_per_dev": flops,
+            "hbm_bytes_per_dev": hbm_bytes,
+            "collectives": {
+                "counts": full["coll"].counts,
+                "payload_bytes": full["coll"].payload_bytes,
+                "link_bytes_per_dev": link_bytes,
+            },
+            "extrapolation": extrap_info,
+            "roofline": terms,
+            "model_flops_global": model_flops,
+            "useful_flops_ratio": (
+                model_flops / (flops * n_chips) if flops else None),
+            "params": cfg.param_count(),
+            "params_active": cfg.param_count(active_only=True),
+        })
+    except Exception as e:
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc(limit=20)
+    return record
+
+
+def _model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D for training, 2*N*D per generated/prefilled token."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch          # one token per sequence
+    return 2.0 * n_active * tokens
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS)
+    ap.add_argument("--shape", default=None, choices=tuple(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell")
+    ap.add_argument("--fusion", default="max",
+                    help="tp_fusion mode (paper technique = max)")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--no-extrapolate", action="store_true",
+                    help="skip the 1p/2p scan-cost extrapolation "
+                         "(multi-pod compile-proof cells)")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    meshes = [False, True] if (args.both_meshes or args.all) else \
+        [args.multi_pod]
+    os.makedirs(args.out, exist_ok=True)
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'mp' if mp else 'sp'}__{args.fusion}"
+            # multi-pod cells prove sharding/compile; roofline is single-pod
+            extrap = not (args.no_extrapolate or mp)
+            rec = run_cell(arch, shape, mp, tp_fusion=args.fusion,
+                           extrapolate=extrap)
+            path = os.path.join(args.out, tag + ".json")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                r = rec["roofline"]
+                extra = (f" lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                         f"bottleneck={r['bottleneck']} "
+                         f"tc={r['t_compute_s']:.3e} tm={r['t_memory_s']:.3e} "
+                         f"tl={r['t_collective_s']:.3e}")
+            elif status == "error":
+                extra = " " + rec["error"][:200]
+            print(f"[{status:7s}] {tag}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Parse collective traffic out of (S)HLO text for the roofline analysis.
+
+``cost_analysis()`` does not expose collective bytes, so we scan the
+partitioned module for all-reduce / all-gather / reduce-scatter / all-to-all
+/ collective-permute ops, read their per-device result shapes, and convert to
+estimated per-device link bytes with ring-algorithm factors:
+
+    all-reduce(P)        2 * P * (g-1)/g      (reduce-scatter + all-gather)
+    all-gather(->P)      P * (g-1)/g
+    reduce-scatter(->P)  P * (g-1)            (operand is g*P)
+    all-to-all(P)        P * (g-1)/g
+    collective-permute   P
+
+where P = per-device result bytes and g = collective group size (parsed from
+replica_groups, both explicit-list and iota forms).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OPS = ("all-reduce-start", "all-gather-start", "reduce-scatter",
+        "all-to-all", "collective-permute-start", "all-reduce",
+        "all-gather", "collective-permute")
+_CANON = {
+    "all-reduce-start": "all-reduce",
+    "all-gather-start": "all-gather",
+    "collective-permute-start": "collective-permute",
+}
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    payload_bytes: Dict[str, int]      # sum of per-device result bytes
+    link_bytes: float                  # ring-estimated per-device link bytes
+
+    def total_payload(self) -> int:
+        return sum(self.payload_bytes.values())
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def _result_bytes(line: str, op_pos: int) -> int:
+    """Sum all shaped results appearing before the op name on the line."""
+    total = 0
+    for m in _SHAPE_RE.finditer(line[:op_pos]):
+        total += _shape_bytes(m.group(1), m.group(2))
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        first = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(len(first), 1)
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    return default
+
+
+def parse_collectives(hlo_text: str, default_group: int = 2
+                      ) -> CollectiveStats:
+    counts: Dict[str, int] = defaultdict(int)
+    payload: Dict[str, int] = defaultdict(int)
+    link = 0.0
+    for line in hlo_text.splitlines():
+        for op in _OPS:
+            pos = line.find(f" {op}(")
+            if pos < 0:
+                continue
+            canon = _CANON.get(op, op)
+            pb = _result_bytes(line, pos)
+            if pb == 0:
+                continue
+            g = _group_size(line, default_group)
+            counts[canon] += 1
+            payload[canon] += pb
+            if canon == "all-reduce":
+                link += 2 * pb * (g - 1) / g
+            elif canon == "all-gather":
+                link += pb * (g - 1) / g
+            elif canon == "reduce-scatter":
+                link += pb * (g - 1)
+            elif canon == "all-to-all":
+                link += pb * (g - 1) / g
+            else:                       # collective-permute
+                link += pb
+            break
+    return CollectiveStats(counts=dict(counts), payload_bytes=dict(payload),
+                           link_bytes=link)
+
+
+# hardware constants (TPU v5e)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link (one direction)
+
+
+def roofline_terms(flops_per_dev: float, hbm_bytes_per_dev: float,
+                   link_bytes_per_dev: float) -> Dict[str, float]:
+    t_compute = flops_per_dev / PEAK_FLOPS_BF16
+    t_memory = hbm_bytes_per_dev / HBM_BW
+    t_collective = link_bytes_per_dev / ICI_BW
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_collective)),
+        key=lambda kv: kv[1])[0]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "bottleneck": dominant,
+    }

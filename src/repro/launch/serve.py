@@ -1,0 +1,57 @@
+"""Serving launcher: checkpoint -> slot-batched decode loop.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
+      --slots 4 --requests 8
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpointer
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.models import model as M
+from repro.parallel import sharding as sh
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    get = get_reduced if args.smoke else get_config
+    cfg = get(args.arch)
+    m = M.build(cfg)
+    values, _ = sh.split_tree(m.init(jax.random.PRNGKey(args.seed)))
+    if args.ckpt_dir:
+        restored, step, _ = checkpointer.restore(
+            args.ckpt_dir, template={"values": values, "opt": None})
+        values = restored["values"]
+        print(f"restored checkpoint step {step}")
+
+    engine = ServeEngine(m, values, batch_slots=args.slots,
+                         max_seq=args.max_seq, eos_id=-1)
+    rng = np.random.default_rng(args.seed)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(
+                        0, cfg.vocab_size, 8).astype(np.int32),
+                    max_new_tokens=args.max_new)
+            for i in range(args.requests)]
+    outs = engine.run(reqs)
+    for rid in sorted(outs):
+        print(f"req {rid}: {outs[rid].tokens}")
+
+
+if __name__ == "__main__":
+    main()

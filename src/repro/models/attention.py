@@ -1,0 +1,215 @@
+"""GQA attention with RoPE, KV caching, cross-attention, and FedOCS fusion
+on the output projection.
+
+Sharding layout (logical axes):
+  q proj   : (embed, heads, head_dim)   heads -> model
+  k/v proj : (embed, kv_heads, hd)      REPLICATED over model (kv_heads can be
+                                        smaller than the TP degree — 2..16 in
+                                        the assigned archs — so KV is computed
+                                        redundantly per shard, Megatron-style)
+  o proj   : (worker, heads/N, hd, embed)  worker -> model, FedOCS-fusable
+  KV cache : (batch, kv_seq, kv_heads, hd) — kv_seq maps to the data axis for
+             the long-context cells (flash-decode style sequence parallelism)
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import fusion, layers
+from repro.parallel.sharding import constrain
+
+NEG_INF = -1e9
+
+
+def n_heads_padded(cfg) -> int:
+    """Physical head count: ``pad_heads_to`` rounds uneven head counts up to
+    an even multiple of the TP degree (hillclimb lever for the GSPMD
+    uneven-shard all-gathers; padded heads are zero-masked)."""
+    if cfg.pad_heads_to and cfg.pad_heads_to > cfg.n_heads:
+        return cfg.pad_heads_to
+    return cfg.n_heads
+
+
+def attn_layout(cfg) -> str:
+    """'worker' when heads divide the TP degree (FedOCS-fusable out-proj);
+    'plain' otherwise (GSPMD pads the uneven head sharding; out-proj is a
+    standard all-reduce(add) contraction — see DESIGN.md §5)."""
+    return "worker" if n_heads_padded(cfg) % cfg.n_workers == 0 else "plain"
+
+
+def attn_init(cfg, rng, cross: bool = False) -> dict:
+    hd = cfg.head_dim_
+    r = layers.rsplit(rng, 6)
+    n = cfg.n_workers
+    hp = n_heads_padded(cfg)
+    p = {
+        "wq": layers.param(r[0], (cfg.d_model, hp, hd),
+                           ("embed", "heads", None), cfg.param_dtype),
+        "wk": layers.param(r[1], (cfg.d_model, cfg.n_kv_heads, hd),
+                           ("embed", None, None), cfg.param_dtype),
+        "wv": layers.param(r[2], (cfg.d_model, cfg.n_kv_heads, hd),
+                           ("embed", None, None), cfg.param_dtype),
+    }
+    if attn_layout(cfg) == "worker":
+        # worker-factored output projection (FedOCS fusion point)
+        p["wo"] = layers.param(r[3], (n, hp // n, hd, cfg.d_model),
+                               ("worker", None, None, "embed"),
+                               cfg.param_dtype,
+                               scale=1.0 / (cfg.n_heads * hd) ** 0.5)
+    else:
+        p["wo"] = layers.param(r[3], (hp, hd, cfg.d_model),
+                               ("heads", None, "embed"), cfg.param_dtype,
+                               scale=1.0 / (cfg.n_heads * hd) ** 0.5)
+    if cfg.qkv_bias:
+        p["bq"] = layers.param(r[4], (hp, hd), ("heads", None),
+                               cfg.param_dtype, mode="zeros")
+        p["bk"] = layers.param(r[4], (cfg.n_kv_heads, hd), (None, None),
+                               cfg.param_dtype, mode="zeros")
+        p["bv"] = layers.param(r[4], (cfg.n_kv_heads, hd), (None, None),
+                               cfg.param_dtype, mode="zeros")
+    p.update(fusion.fusion_init(cfg, r[5], cfg.d_model))
+    return p
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype) -> dict:
+    hd = cfg.head_dim_
+    shape = (batch, max_seq, cfg.n_kv_heads, hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+CACHE_AXES = {
+    "k": ("batch", "kv_seq", None, None),
+    "v": ("batch", "kv_seq", None, None),
+}
+
+
+def _qkv(cfg, p, x, kv_x):
+    d = cfg.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(d))
+    k = jnp.einsum("btd,dhk->bthk", kv_x, p["wk"].astype(d))
+    v = jnp.einsum("btd,dhk->bthk", kv_x, p["wv"].astype(d))
+    if "bq" in p:
+        q = q + p["bq"].astype(d)
+        k = k + p["bk"].astype(d)
+        v = v + p["bv"].astype(d)
+    return q, k, v
+
+
+def _sdpa(cfg, q, k, v, mask) -> jax.Array:
+    """q: (B,S,H,Dh), k/v: (B,T,Kv,Dh), mask: (B, S, T) bool or None.
+
+    ``scores_dtype='bf16'`` keeps the materialized S x T scores in bf16
+    (max-subtracted softmax for range safety) — halves the dominant
+    activation-HBM term on long sequences at ~1e-2 logit error
+    (hillclimb lever; default f32).
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    sdt = jnp.bfloat16 if cfg.scores_dtype == "bf16" else jnp.float32
+    q = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k,
+                        preferred_element_type=sdt)
+    scores = scores * jnp.asarray(hd ** -0.5, sdt)
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None], scores,
+                           jnp.asarray(NEG_INF, jnp.float32).astype(sdt))
+    smax = jax.lax.stop_gradient(jnp.max(scores, axis=-1, keepdims=True))
+    unnorm = jnp.exp((scores - smax).astype(sdt))
+    denom = jnp.sum(unnorm.astype(jnp.float32), axis=-1, keepdims=True)
+    probs = (unnorm / denom.astype(sdt)).astype(cfg.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, hd)
+
+
+def _project_out(cfg, p, attn_out) -> jax.Array:
+    """(B,S,H,Dh) -> fused (B,S,d) via the configured TP layout."""
+    b, s, h, hd = attn_out.shape
+    if h != cfg.n_heads:                       # zero-mask padded heads
+        head_mask = (jnp.arange(h) < cfg.n_heads).astype(attn_out.dtype)
+        attn_out = attn_out * head_mask[None, None, :, None]
+    if attn_layout(cfg) == "plain":
+        out = jnp.einsum("bshd,hde->bse", attn_out, p["wo"].astype(cfg.dtype))
+        return constrain(out, ("batch", "seq", "embed"))
+    n = cfg.n_workers
+    grouped = attn_out.reshape(b, s, n, h // n, hd)
+    partial = jnp.einsum("bsnhd,nhde->nbse", grouped, p["wo"].astype(cfg.dtype))
+    partial = constrain(partial, ("worker", "batch", "seq", "embed"))
+    return fusion.worker_reduce(cfg, p, partial)
+
+
+def attn_full(cfg, p: dict, x: jax.Array, positions: jax.Array,
+              causal: bool = True, kv_x: Optional[jax.Array] = None,
+              return_kv: bool = False):
+    """Full-sequence attention (train / prefill). x: (B, S, d)."""
+    kv_in = x if kv_x is None else kv_x
+    q, k, v = _qkv(cfg, p, x, kv_in)
+    if cfg.use_rope and kv_x is None:
+        q = layers.apply_rope(cfg, q, positions)
+        k = layers.apply_rope(cfg, k, positions)
+    q = constrain(q, ("batch", "seq", "heads", None))
+    if cfg.use_flash and kv_x is None:
+        # Pallas flash kernel ((B,H,S,D) layout); positions are arange here,
+        # so block-causal masking inside the kernel is exact.
+        from repro.kernels.flash_attention import ops as flash_ops
+        out = flash_ops.flash_attention(
+            q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+            causal).swapaxes(1, 2)
+    else:
+        mask = None
+        if causal:
+            tq = positions[:, :, None]
+            tk = positions[:, None, :]
+            mask = (tk <= tq)[:, :, :]                  # (B, S, S)
+        out = _sdpa(cfg, q, k, v, mask)
+    y = _project_out(cfg, p, out)
+    if return_kv:
+        return y, {"k": k, "v": v}
+    return y
+
+
+def attn_step(cfg, p: dict, x: jax.Array, positions: jax.Array,
+              cache: dict, cross: bool = False) -> Tuple[jax.Array, dict]:
+    """Single decode step. x: (B, 1, d); positions: (B,) current index;
+    cache: {"k","v"} (B, S_max, Kv, Dh), entries < positions are valid."""
+    d = cfg.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(d))
+    if "bq" in p:
+        q = q + p["bq"].astype(d)
+    if cfg.use_rope and not cross:
+        q = layers.apply_rope(cfg, q, positions[:, None])
+
+    if cross:
+        k, v = cache["k"], cache["v"]                  # encoder KV, static
+        new_cache = cache
+        valid = jnp.ones((x.shape[0], 1, k.shape[1]), bool)
+    else:
+        knew = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(d))
+        vnew = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(d))
+        if "bk" in p:
+            knew = knew + p["bk"].astype(d)
+            vnew = vnew + p["bv"].astype(d)
+        if cfg.use_rope:
+            knew = layers.apply_rope(cfg, knew, positions[:, None])
+
+        def upd(c, new, pos):
+            return jax.lax.dynamic_update_slice(c, new, (pos, 0, 0))
+
+        k = jax.vmap(upd)(cache["k"], knew, positions)
+        v = jax.vmap(upd)(cache["v"], vnew, positions)
+        k = constrain(k, CACHE_AXES["k"])
+        v = constrain(v, CACHE_AXES["v"])
+        new_cache = {"k": k, "v": v}
+        t = jnp.arange(k.shape[1], dtype=positions.dtype)
+        valid = (t[None, :] <= positions[:, None])[:, None, :]  # (B,1,S_max)
+
+    out = _sdpa(cfg, q, k, v, valid)
+    y = _project_out(cfg, p, out)
+    return y, new_cache

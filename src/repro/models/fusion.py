@@ -1,0 +1,52 @@
+"""Worker-axis TP fusion — the FedOCS aggregation law inside model blocks.
+
+Every row-parallel projection in the stack produces a *worker-leading*
+partial tensor ``partial: (N, B, S, K)`` with the worker axis sharded over the
+``model`` mesh axis (DESIGN.md §2.1).  :func:`worker_reduce` fuses it:
+
+  sum               -> all-reduce(add)           (Megatron TP reference)
+  max/max_q16/max_q8-> all-reduce(max) [on codes] (FedOCS, paper Eq. 4/7)
+  concat            -> all-gather + wide fusion head (paper's comm-heavy
+                       "Concat Workers Embed" baseline; needs `w_fuse`)
+
+The concat path is deliberately forced through a real all-gather (activation
+constraint to a replicated layout) so the dry-run's parsed collective bytes
+reproduce the paper's O(N·K)-vs-O(K) comparison on the ICI fabric.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fedocs
+from repro.models import layers
+from repro.parallel.sharding import constrain
+
+
+def fusion_init(cfg, rng, k_out: int) -> dict:
+    """Extra parameters required by the fusion mode (concat only)."""
+    if cfg.tp_fusion == "concat":
+        return {"w_fuse": layers.param(
+            rng, (cfg.n_workers * k_out, k_out), (None, "embed"),
+            cfg.param_dtype)}
+    return {}
+
+
+def worker_reduce(cfg, p: dict, partial: jax.Array) -> jax.Array:
+    """partial: (N, B, S, K) worker-sharded -> (B, S, K) fused output."""
+    mode = cfg.tp_fusion
+    if mode == "concat":
+        gathered = fedocs.concat(partial)                  # (B, S, N*K)
+        gathered = constrain(gathered, ("batch", "seq", None))  # force all-gather
+        return gathered @ p["w_fuse"].astype(partial.dtype)
+    out = fedocs.aggregate(partial, mode, tie_break=cfg.tie_break)
+    return constrain(out, ("batch", "seq", "embed"))
+
+
+def worker_partial(x_grouped: jax.Array, w: jax.Array,
+                   spec: str = "nbsf,nfk->nbsk") -> jax.Array:
+    """Per-worker private projection: einsum batched over the worker axis."""
+    return jnp.einsum(spec, x_grouped, w)

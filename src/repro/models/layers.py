@@ -1,0 +1,151 @@
+"""Primitive layers: initializers, norms, embeddings, rotary embeddings.
+
+Every parameter is created through :func:`param` and carries logical axis
+names (see ``parallel/sharding.py``).  Apply functions take the *value* tree
+(plain arrays) with the same structure the init produced.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import Tagged, constrain
+
+
+def param(rng, shape: Sequence[int], axes: Sequence[Optional[str]],
+          dtype, scale: Optional[float] = None, mode: str = "normal") -> Tagged:
+    """Create a Tagged parameter. scale=None => fan-in 1/sqrt(d) normal."""
+    if mode == "zeros":
+        return Tagged(jnp.zeros(shape, dtype), axes)
+    if mode == "ones":
+        return Tagged(jnp.ones(shape, dtype), axes)
+    if scale is None:
+        fan_in = shape[0] if len(shape) == 1 else math.prod(shape[:-1])
+        # for worker-factored weights the true fan-in is the product of all
+        # leading dims; callers override `scale` where that is wrong.
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+    v = jax.random.normal(rng, tuple(shape), jnp.float32) * scale
+    return Tagged(v.astype(dtype), axes)
+
+
+def rsplit(rng, n: int):
+    return jax.random.split(rng, n)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg, rng) -> dict:
+    p = {"scale": Tagged(jnp.ones((cfg.d_model,), cfg.param_dtype), ("embed",))}
+    if cfg.norm == "layernorm":
+        p["bias"] = Tagged(jnp.zeros((cfg.d_model,), cfg.param_dtype), ("embed",))
+    return p
+
+
+def norm_apply(cfg, p: dict, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding (vocab-sharded)
+# ---------------------------------------------------------------------------
+
+def embed_init(cfg, rng) -> dict:
+    p = {"tokens": param(rng, (cfg.vocab_size, cfg.d_model),
+                         ("vocab", "embed"), cfg.param_dtype, scale=1.0)}
+    if cfg.frontend in ("patch", "audio"):
+        fr = jax.random.fold_in(rng, 1)
+        p["frontend_proj"] = param(
+            fr, (cfg.frontend_dim or cfg.d_model, cfg.d_model),
+            (None, "embed"), cfg.param_dtype)
+    return p
+
+
+def embed_tokens(cfg, p: dict, tokens: jax.Array) -> jax.Array:
+    """Token ids (B, S) -> (B, S, d).  Table is vocab-sharded: the gather
+    lowers to a one-hot-matmul/all-reduce pattern under SPMD."""
+    out = jnp.take(p["tokens"].astype(cfg.dtype), tokens, axis=0)
+    return constrain(out, ("batch", "seq", "embed"))
+
+
+def embed_frontend(cfg, p: dict, feats: jax.Array) -> jax.Array:
+    """Precomputed patch/frame embeddings (B, S, d_frontend) -> (B, S, d).
+
+    The modality frontend itself (ViT patcher / audio conv stack) is a stub
+    per the assignment: ``input_specs()`` supplies these features."""
+    out = feats.astype(cfg.dtype) @ p["frontend_proj"].astype(cfg.dtype)
+    return constrain(out, ("batch", "seq", "embed"))
+
+
+def unembed_init(cfg, rng) -> dict:
+    if cfg.tie_embeddings:
+        return {}
+    return {"head": param(rng, (cfg.d_model, cfg.vocab_size),
+                          ("embed", "vocab"), cfg.param_dtype)}
+
+
+def unembed_apply(cfg, p: dict, embed_params: dict, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = embed_params["tokens"].astype(cfg.dtype).T
+    else:
+        w = p["head"].astype(cfg.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, w).astype(cfg.logit_dtype)
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(cfg, head_dim: int) -> jax.Array:
+    rot = int(head_dim * cfg.rotary_frac) // 2 * 2
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv  # (rot/2,)
+
+
+def apply_rope(cfg, x: jax.Array, positions: jax.Array) -> jax.Array:
+    """x: (B, S, H, Dh), positions: (B, S) int32."""
+    hd = x.shape[-1]
+    rot = int(hd * cfg.rotary_frac) // 2 * 2
+    inv = rope_freqs(cfg, hd)                              # (rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv   # (B, S, rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([rotated.astype(x.dtype), x_pass], axis=-1)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int) -> jax.Array:
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d_model)
+    pe = jnp.zeros((seq_len, d_model), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang[:, : (d_model // 2)]))
+    return pe
+
+
+def activation(cfg, x: jax.Array) -> jax.Array:
+    if cfg.act == "silu":
+        return jax.nn.silu(x)
+    if cfg.act == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(cfg.act)

@@ -1,0 +1,185 @@
+"""Mamba (S6 selective-state-space) mixer — used by jamba-1.5 hybrid layers.
+
+Channel-parallel TP: the inner dimension ``d_inner`` is split over the worker
+axis.  Everything between in-proj and out-proj (depthwise conv, dt/B/C
+projections, selective scan) is *channelwise* and therefore fully local to a
+worker; the out-projection is worker-factored and fuses through the FedOCS
+law (``worker_reduce``), exactly like an MLP down-projection.
+
+Training uses a sequential ``lax.scan`` over time by default;
+``cfg`` flag ``mamba_assoc_scan`` (hillclimb lever) switches to
+``jax.lax.associative_scan`` on the linear recurrence
+``h_t = a_t * h_{t-1} + b_t`` for O(log S) depth.
+
+Decode keeps (conv window, ssm state) in the cache and costs O(1) per token —
+this is what makes jamba long_500k-capable (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import fusion, layers
+from repro.parallel.sharding import Tagged, constrain
+
+
+def mamba_init(cfg, rng) -> dict:
+    n = cfg.n_workers
+    di = cfg.d_inner
+    assert di % n == 0, (cfg.name, di, n)
+    dl = di // n                       # channels per worker
+    st, dr = cfg.ssm_state_dim, cfg.dt_rank_
+    r = layers.rsplit(rng, 8)
+    p = {
+        # in-proj -> (x, z), worker-sharded channels
+        "w_in": layers.param(r[0], (n, cfg.d_model, 2 * dl),
+                             ("worker", "embed", "ff_local"), cfg.param_dtype,
+                             scale=cfg.d_model ** -0.5),
+        # depthwise causal conv over time
+        "w_conv": layers.param(r[1], (n, dl, cfg.conv_width),
+                               ("worker", "ff_local", "conv"), cfg.param_dtype,
+                               scale=1.0 / cfg.conv_width),
+        "b_conv": layers.param(r[1], (n, dl), ("worker", "ff_local"),
+                               cfg.param_dtype, mode="zeros"),
+        # x -> (dt_rank, B, C)
+        "w_xdbc": layers.param(r[2], (n, dl, dr + 2 * st),
+                               ("worker", "ff_local", None), cfg.param_dtype,
+                               scale=dl ** -0.5),
+        # dt_rank -> channels (dt up-projection)
+        "w_dt": layers.param(r[3], (n, dr, dl), ("worker", None, "ff_local"),
+                             cfg.param_dtype, scale=dr ** -0.5),
+        "b_dt": layers.param(r[4], (n, dl), ("worker", "ff_local"),
+                             cfg.param_dtype, mode="zeros"),
+        "A_log": Tagged_A(n, dl, st),
+        "D": layers.param(r[5], (n, dl), ("worker", "ff_local"),
+                          cfg.param_dtype, mode="ones"),
+        "w_out": layers.param(r[6], (n, dl, cfg.d_model),
+                              ("worker", "ff_local", "embed"), cfg.param_dtype,
+                              scale=di ** -0.5),
+    }
+    p.update(fusion.fusion_init(cfg, r[7], cfg.d_model))
+    return p
+
+
+def Tagged_A(n: int, dl: int, st: int) -> Tagged:
+    """S4D-real initialization: A = -(1..st) per channel, stored as log."""
+    a = jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32)[None, None, :],
+                 (n, dl, 1))
+    return Tagged(jnp.log(a), ("worker", "ff_local", "state"))
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (N,B,S,C) depthwise causal conv, w: (N,C,W)."""
+    width = w.shape[-1]
+    pad = jnp.pad(x, ((0, 0), (0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + pad[:, :, i:i + x.shape[2], :] * w[:, None, None, :, i]
+    return out + b[:, None, None, :]
+
+
+def _ssm_scan(cfg, a: jax.Array, bx: jax.Array, c: jax.Array,
+              h0: Optional[jax.Array]):
+    """Linear recurrence h_t = a_t * h_{t-1} + bx_t; y_t = sum_s c_t * h_t.
+
+    a, bx: (N, B, S, C, St);  c: (N, B, S, St).  Returns y (N,B,S,C), h_last.
+    """
+    if getattr(cfg, "mamba_assoc_scan", False) and h0 is None:
+        def comb(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+        aa, hh = jax.lax.associative_scan(comb, (a, bx), axis=2)
+        y = jnp.einsum("nbsct,nbst->nbsc", hh, c)
+        return y, hh[:, :, -1]
+    # sequential scan over time
+    n, b, s, ch, st = a.shape
+    h_init = jnp.zeros((n, b, ch, st), a.dtype) if h0 is None else h0
+
+    def step(h, t):
+        at, bxt, ct = t
+        h = at * h + bxt
+        y = jnp.einsum("nbct,nbt->nbc", h, ct)
+        return h, y
+
+    a_t = jnp.moveaxis(a, 2, 0)
+    bx_t = jnp.moveaxis(bx, 2, 0)
+    c_t = jnp.moveaxis(c, 2, 0)
+    h_last, ys = jax.lax.scan(step, h_init, (a_t, bx_t, c_t))
+    return jnp.moveaxis(ys, 0, 2), h_last
+
+
+def _ssm_inner(cfg, p, xc: jax.Array, h0, positions_unused=None):
+    """xc: (N, B, S, C) post-conv activations -> (y, h_last)."""
+    d = cfg.dtype
+    st, dr = cfg.ssm_state_dim, cfg.dt_rank_
+    dbc = jnp.einsum("nbsc,ncr->nbsr", xc, p["w_xdbc"].astype(d))
+    dt_low, bmat, cmat = jnp.split(dbc, [dr, dr + st], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("nbsr,nrc->nbsc", dt_low, p["w_dt"].astype(d))
+        + p["b_dt"].astype(d)[:, None, None, :])                  # (N,B,S,C)
+    a_mat = -jnp.exp(p["A_log"].astype(jnp.float32))              # (N,C,St)
+    a_disc = jnp.exp(dt.astype(jnp.float32)[..., None]
+                     * a_mat[:, None, None])                      # (N,B,S,C,St)
+    bx = (dt * xc).astype(jnp.float32)[..., None] \
+        * bmat.astype(jnp.float32)[:, :, :, None, :]              # (N,B,S,C,St)
+    y, h_last = _ssm_scan(cfg, a_disc, bx, cmat.astype(jnp.float32), h0)
+    y = y.astype(d) + xc * p["D"].astype(d)[:, None, None, :]
+    return y, h_last
+
+
+def mamba_full(cfg, p: dict, x: jax.Array, return_cache: bool = False):
+    """Training / prefill path. x: (B, S, d) -> (B, S, d)."""
+    d = cfg.dtype
+    xi = jnp.einsum("bsd,ndf->nbsf", x, p["w_in"].astype(d))      # (N,B,S,2C)
+    xraw, z = jnp.split(xi, 2, axis=-1)
+    xraw = constrain(xraw, ("worker", "batch", "seq", "ff_local"))
+    xc = jax.nn.silu(_causal_conv(xraw, p["w_conv"].astype(d),
+                                  p["b_conv"].astype(d)))
+    y, h_last = _ssm_inner(cfg, p, xc, None)
+    y = y * jax.nn.silu(z)
+    partial = jnp.einsum("nbsc,ncd->nbsd", y, p["w_out"].astype(d))
+    partial = constrain(partial, ("worker", "batch", "seq", "embed"))
+    out = fusion.worker_reduce(cfg, p, partial)
+    if return_cache:
+        w = cfg.conv_width
+        window = xraw[:, :, -(w - 1):, :]                         # (N,B,W-1,C)
+        return out, {"conv": window, "h": h_last}
+    return out
+
+
+def init_cache(cfg, batch: int, dtype) -> dict:
+    n = cfg.n_workers
+    dl = cfg.d_inner // n
+    return {
+        "conv": jnp.zeros((n, batch, cfg.conv_width - 1, dl), dtype),
+        "h": jnp.zeros((n, batch, dl, cfg.ssm_state_dim), jnp.float32),
+    }
+
+
+MAMBA_CACHE_AXES = {
+    "conv": ("worker", "batch", None, "ff_local"),
+    "h": ("worker", "batch", "ff_local", "state"),
+}
+
+
+def mamba_step(cfg, p: dict, x: jax.Array, cache: dict
+               ) -> Tuple[jax.Array, dict]:
+    """Decode step. x: (B, 1, d) -> (B, 1, d); O(1) state update."""
+    d = cfg.dtype
+    xi = jnp.einsum("bsd,ndf->nbsf", x, p["w_in"].astype(d))      # (N,B,1,2C)
+    xraw, z = jnp.split(xi, 2, axis=-1)
+    # conv window: (N,B,W-1,C) ++ current
+    win = jnp.concatenate([cache["conv"], xraw], axis=2)
+    w = p["w_conv"].astype(d)                                     # (N,C,W)
+    xc = jnp.einsum("nbwc,ncw->nbc", win, w) + p["b_conv"].astype(d)[:, None]
+    xc = jax.nn.silu(xc)[:, :, None, :]                           # (N,B,1,C)
+    y, h_last = _ssm_inner(cfg, p, xc, cache["h"])
+    y = y * jax.nn.silu(z)
+    partial = jnp.einsum("nbsc,ncd->nbsd", y, p["w_out"].astype(d))
+    out = fusion.worker_reduce(cfg, p, partial)
+    new_cache = {"conv": win[:, :, 1:], "h": h_last}
+    return out, new_cache

@@ -1,0 +1,55 @@
+"""MLP (SwiGLU / GELU) block with worker-axis TP and FedOCS fusion.
+
+Weights are stored worker-factored (paper §II notation):
+  w_gate/w_up : (worker, embed, ff_local)   worker -> model
+  w_down      : (worker, ff_local, embed)   worker -> model
+
+Each worker computes a private hidden slice and a *full-width* partial output;
+partials fuse via :func:`repro.models.fusion.worker_reduce` — all-reduce(add)
+for standard TP, all-reduce(max) (optionally on D-bit codes) for FedOCS.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import fusion, layers
+from repro.parallel.sharding import constrain
+
+
+def mlp_init(cfg, rng, d_ff: int | None = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    n = cfg.n_workers
+    assert d_ff % n == 0, (cfg.name, d_ff, n)
+    f_local = d_ff // n
+    r = layers.rsplit(rng, 4)
+    p = {
+        "w_up": layers.param(r[0], (n, cfg.d_model, f_local),
+                             ("worker", "embed", "ff_local"), cfg.param_dtype,
+                             scale=cfg.d_model ** -0.5),
+        "w_down": layers.param(r[1], (n, f_local, cfg.d_model),
+                               ("worker", "ff_local", "embed"), cfg.param_dtype,
+                               scale=d_ff ** -0.5),
+    }
+    if cfg.act == "silu":
+        p["w_gate"] = layers.param(r[2], (n, cfg.d_model, f_local),
+                                   ("worker", "embed", "ff_local"),
+                                   cfg.param_dtype, scale=cfg.d_model ** -0.5)
+    p.update(fusion.fusion_init(cfg, r[3], cfg.d_model))
+    return p
+
+
+def mlp_apply(cfg, p: dict, x: jax.Array) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d)."""
+    d = cfg.dtype
+    up = jnp.einsum("bsd,ndf->nbsf", x, p["w_up"].astype(d))
+    if "w_gate" in p:
+        gate = jnp.einsum("bsd,ndf->nbsf", x, p["w_gate"].astype(d))
+        hidden = jax.nn.silu(gate) * up
+    else:
+        hidden = layers.activation(cfg, up)
+    hidden = constrain(hidden, ("worker", "batch", "seq", "ff_local"))
+    partial = jnp.einsum("nbsf,nfe->nbse", hidden, p["w_down"].astype(d))
+    partial = constrain(partial, ("worker", "batch", "seq", "embed"))
+    return fusion.worker_reduce(cfg, p, partial)

@@ -1,0 +1,205 @@
+"""Mixture-of-Experts FFN with expert parallelism (EP).
+
+Experts are sharded over the ``model`` mesh axis (one shard owns
+``n_experts / N`` whole expert FFNs).  Routing uses *per-sequence grouped
+dispatch*: top-k selection, a sort **within each sequence** (vmapped — never a
+global cross-shard sort), and capacity-bounded scatter into per-expert
+buffers.  The scatter/gather between the batch-sharded token axis and the
+expert-sharded buffer axis is where GSPMD emits the EP all-to-all.
+
+Dropped-token policy: tokens beyond ``capacity_factor``-scaled capacity are
+dropped (scatter with out-of-bounds position — JAX drops OOB scatter updates),
+standard Switch/GShard semantics.  The router adds the usual load-balancing
+auxiliary loss.
+
+The FedOCS fusion law does not apply inside expert FFNs (DESIGN.md §5): an
+expert's FFN lives wholly on one shard, so there is no cross-worker partial
+reduction to replace.  A shared expert (llama4-style), which *is* worker-
+sharded, uses the standard MLP path and therefore does participate.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, mlp
+from repro.parallel.sharding import constrain
+
+
+def moe_init(cfg, rng) -> dict:
+    e, d = cfg.n_experts, cfg.d_model
+    f = cfg.moe_d_ff or cfg.d_ff
+    r = layers.rsplit(rng, 5)
+    p = {
+        "router": layers.param(r[0], (d, e), ("embed", None), jnp.float32,
+                               scale=d ** -0.5),
+        "w_up": layers.param(r[1], (e, d, f), ("experts", "embed", "ff_local"),
+                             cfg.param_dtype, scale=d ** -0.5),
+        "w_gate": layers.param(r[2], (e, d, f), ("experts", "embed", "ff_local"),
+                               cfg.param_dtype, scale=d ** -0.5),
+        "w_down": layers.param(r[3], (e, f, d), ("experts", "ff_local", "embed"),
+                               cfg.param_dtype, scale=f ** -0.5),
+    }
+    if cfg.moe_shared_expert:
+        p["shared"] = mlp.mlp_init(cfg, r[4], d_ff=cfg.moe_d_ff or cfg.d_ff)
+    return p
+
+
+def _capacity(cfg, tokens_per_seq: int) -> int:
+    return max(1, math.ceil(
+        tokens_per_seq * cfg.experts_per_token / cfg.n_experts
+        * cfg.capacity_factor))
+
+
+def _route_one_seq(cfg, probs: jax.Array, cap: int):
+    """probs: (S, E) -> dispatch indices for one sequence.
+
+    Returns (expert_idx, pos_in_expert, token_idx, weight), each (S*k,),
+    with pos_in_expert == cap for dropped tokens (OOB scatter -> dropped).
+    """
+    s, e = probs.shape
+    k = cfg.experts_per_token
+    w, idx = jax.lax.top_k(probs, k)                     # (S, k)
+    w = w / jnp.clip(jnp.sum(w, -1, keepdims=True), 1e-9)
+    e_flat = idx.reshape(-1)                             # (S*k,)
+    w_flat = w.reshape(-1)
+    tok_flat = jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)
+    order = jnp.argsort(e_flat, stable=True)             # local per-seq sort
+    e_s, w_s, t_s = e_flat[order], w_flat[order], tok_flat[order]
+    counts = jnp.bincount(e_flat, length=e)              # (E,)
+    start = jnp.cumsum(counts) - counts
+    pos = jnp.arange(s * k, dtype=jnp.int32) - start[e_s].astype(jnp.int32)
+    pos = jnp.where(pos < cap, pos, cap)                 # cap == dropped
+    return e_s, pos, t_s, w_s
+
+
+def moe_apply(cfg, p: dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    if cfg.moe_impl == "gather":
+        return moe_apply_gather(cfg, p, x)
+    return moe_apply_sort_scatter(cfg, p, x)
+
+
+def moe_apply_sort_scatter(cfg, p: dict, x: jax.Array
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    cap = _capacity(cfg, s)
+    dt = cfg.dtype
+
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)              # (B, S, E)
+
+    e_s, pos, t_s, w_s = jax.vmap(
+        lambda pr: _route_one_seq(cfg, pr, cap))(probs)  # each (B, S*k)
+
+    # dispatch: (B, S, d) -> (B, E, cap, d); OOB pos rows are dropped
+    def scatter_one(xb, eb, pb, tb):
+        buf = jnp.zeros((e, cap, d), dt)
+        return buf.at[eb, pb].set(xb[tb], mode="drop")
+
+    buf = jax.vmap(scatter_one)(x.astype(dt), e_s, pos, t_s)
+    buf = constrain(buf, ("batch", "experts", None, "embed"))
+
+    # expert FFN (SwiGLU), batched over (B, E): weights indexed by E
+    gate = jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(dt))
+    up = jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(dt))
+    hidden = jax.nn.silu(gate) * up
+    hidden = constrain(hidden, ("batch", "experts", None, "ff_local"))
+    out_buf = jnp.einsum("becf,efd->becd", hidden, p["w_down"].astype(dt))
+    out_buf = constrain(out_buf, ("batch", "experts", None, "embed"))
+
+    # combine: gather back and weight
+    def gather_one(ob, eb, pb, tb, wb):
+        vals = ob[eb, jnp.minimum(pb, cap - 1)]          # (S*k, d)
+        keep = (pb < cap).astype(dt)[:, None]
+        y = jnp.zeros((s, d), dt)
+        return y.at[tb].add(vals * wb[:, None].astype(dt) * keep)
+
+    y = jax.vmap(gather_one)(out_buf, e_s, pos, t_s, w_s)
+    y = constrain(y, ("batch", "seq", "embed"))
+
+    if cfg.moe_shared_expert:
+        y = y + mlp.mlp_apply(cfg, p["shared"], x)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=(0, 1))                    # (E,)
+    dispatch_frac = jnp.zeros((e,), jnp.float32).at[e_s.reshape(-1)].add(
+        1.0 / (b * s * k))
+    aux = cfg.n_experts * jnp.sum(dispatch_frac * me)
+    return y, aux.astype(jnp.float32)
+
+
+def moe_apply_gather(cfg, p: dict, x: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Gather-dispatch / scatter-combine EP (hillclimb lever, §Perf).
+
+    Against ``sort_scatter``, this formulation keeps the expensive tensors
+    local: tokens ``x`` are replicated over the model axis between blocks, so
+    each shard *gathers* its own experts' token rows (zero collective), runs
+    its expert FFNs, and scatter-adds its partial outputs into token space —
+    the only collective is one all-reduce(add) of the (B, S, d) combine,
+    identical to a dense TP block.  The sort_scatter formulation instead
+    gathers from the expert-sharded buffer with replicated indices, which
+    GSPMD must realize as an all-gather of the whole (B, E, cap, d) buffer —
+    the dominant collective in the qwen3-moe baseline.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    cap = _capacity(cfg, s)
+    dt = cfg.dtype
+
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    e_s, pos, t_s, w_s = jax.vmap(
+        lambda pr: _route_one_seq(cfg, pr, cap))(probs)  # each (B, S*k)
+
+    # slot->token inverse map + slot weights (tiny int/float buffers)
+    def invert(eb, pb, tb, wb):
+        tok_of = jnp.full((e, cap), s, jnp.int32)        # s == "no token"
+        tok_of = tok_of.at[eb, pb].set(tb, mode="drop")
+        w_of = jnp.zeros((e, cap), jnp.float32)
+        w_of = w_of.at[eb, pb].set(wb, mode="drop")
+        return tok_of, w_of
+
+    tok_of, w_of = jax.vmap(invert)(e_s, pos, t_s, w_s)  # (B, E, cap)
+
+    # dispatch: LOCAL gather of each shard's experts' rows (x replicated,
+    # tok_of replicated, output expert-sharded)
+    xz = jnp.concatenate([x.astype(dt), jnp.zeros((b, 1, d), dt)], axis=1)
+    buf = jnp.take_along_axis(
+        xz[:, None, :, :],                               # (B, 1, S+1, d)
+        tok_of[..., None].astype(jnp.int32), axis=2)     # (B, E, cap, d)
+    buf = constrain(buf, ("batch", "experts", None, "embed"))
+
+    gate = jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(dt))
+    up = jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(dt))
+    hidden = jax.nn.silu(gate) * up
+    hidden = constrain(hidden, ("batch", "experts", None, "ff_local"))
+    out_buf = jnp.einsum("becf,efd->becd", hidden, p["w_down"].astype(dt))
+    out_buf = out_buf * w_of[..., None].astype(dt)
+    out_buf = constrain(out_buf, ("batch", "experts", None, "embed"))
+
+    # combine: scatter-add partials into token space; the cross-expert sum
+    # over the sharded E axis lowers to one all-reduce(add) of (B, S, d)
+    def combine_one(ob, tof):
+        y = jnp.zeros((s + 1, d), dt)
+        y = y.at[tof.reshape(-1)].add(ob.reshape(-1, d), mode="drop")
+        return y[:s]
+
+    y = jax.vmap(combine_one)(out_buf, tok_of)
+    y = constrain(y, ("batch", "seq", "embed"))
+
+    if cfg.moe_shared_expert:
+        y = y + mlp.mlp_apply(cfg, p["shared"], x)
+
+    me = jnp.mean(probs, axis=(0, 1))
+    dispatch_frac = jnp.zeros((e,), jnp.float32).at[e_s.reshape(-1)].add(
+        1.0 / (b * s * k))
+    aux = cfg.n_experts * jnp.sum(dispatch_frac * me)
+    return y, aux.astype(jnp.float32)

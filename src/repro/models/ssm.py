@@ -1,0 +1,219 @@
+"""xLSTM mixers (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, inherently sequential).
+
+TP layout for mLSTM: q/k are computed replicated (they appear in inner
+products that need the full key dimension), while the *value* dimension of
+each head is split over the worker axis — the matrix memory
+``C = v kᵀ`` is then row-sharded, the read-out ``y = C q`` stays local, and
+the down-projection is worker-factored and fuses through the FedOCS law.
+sLSTM recurrences (h-feedback, 4 gates) are replicated across workers — the
+assigned xlstm-125m has 4 heads against a 16-way TP axis, and the block is a
+negligible fraction of compute (DESIGN.md §5).
+
+Decode carries (C, n, m) / (h, c, n, m) in the cache: O(1) per token, which
+is what qualifies xlstm for the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import fusion, layers
+from repro.parallel.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(cfg, rng) -> dict:
+    n = cfg.n_workers
+    di = cfg.d_inner
+    h = cfg.n_heads
+    dh = di // h
+    assert dh % n == 0, (cfg.name, dh, n)
+    dhl = dh // n
+    r = layers.rsplit(rng, 7)
+    p = {
+        "w_up": layers.param(r[0], (cfg.d_model, 2 * di), ("embed", None),
+                             cfg.param_dtype, scale=cfg.d_model ** -0.5),
+        "w_q": layers.param(r[1], (di, h, dh), (None, None, None),
+                            cfg.param_dtype, scale=di ** -0.5),
+        "w_k": layers.param(r[2], (di, h, dh), (None, None, None),
+                            cfg.param_dtype, scale=di ** -0.5),
+        "w_v": layers.param(r[3], (n, di, h, dhl),
+                            ("worker", None, None, None), cfg.param_dtype,
+                            scale=di ** -0.5),
+        "w_gates": layers.param(r[4], (di, 2 * h), (None, None),
+                                cfg.param_dtype, scale=di ** -0.5),
+        "b_gates": layers.param(r[4], (2 * h,), (None,), cfg.param_dtype,
+                                mode="zeros"),
+        "w_down": layers.param(r[5], (n, h * dhl, cfg.d_model),
+                               ("worker", None, "embed"), cfg.param_dtype,
+                               scale=di ** -0.5),
+    }
+    p.update(fusion.fusion_init(cfg, r[6], cfg.d_model))
+    return p
+
+
+def _mlstm_scan(q, k, v, i_raw, f_raw, state):
+    """Stabilized exponential-gated matrix-memory recurrence.
+
+    q,k: (B,S,H,Dh) fp32; v: (N,B,S,H,Dhl); i_raw,f_raw: (B,S,H).
+    state: (C (N,B,H,Dhl,Dh), n (B,H,Dh), m (B,H)).
+    Returns y (N,B,S,H,Dhl), new state.
+    """
+    f_log = jax.nn.log_sigmoid(f_raw)
+
+    def step(carry, t):
+        c_mat, n_vec, m = carry
+        qt, kt, vt, it, ft = t                 # (B,H,Dh),(B,H,Dh),(N,B,H,Dhl),(B,H),(B,H)
+        m_new = jnp.maximum(ft + m, it)
+        fp = jnp.exp(ft + m - m_new)           # (B,H)
+        ip = jnp.exp(it - m_new)
+        c_mat = fp[None, :, :, None, None] * c_mat \
+            + ip[None, :, :, None, None] * (vt[..., None] * kt[None, :, :, None, :])
+        n_vec = fp[..., None] * n_vec + ip[..., None] * kt
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bhd,bhd->bh", n_vec, qt)), 1.0)
+        y = jnp.einsum("nbhvd,bhd->nbhv", c_mat, qt) / denom[None, :, :, None]
+        return (c_mat, n_vec, m_new), y
+
+    ts = (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0),
+          jnp.moveaxis(v, 2, 0), jnp.moveaxis(i_raw, 1, 0),
+          jnp.moveaxis(f_log, 1, 0))
+    state, ys = jax.lax.scan(step, state, ts)
+    return jnp.moveaxis(ys, 0, 2), state       # (N,B,S,H,Dhl)
+
+
+def mlstm_state_init(cfg, batch: int) -> Tuple:
+    n, h = cfg.n_workers, cfg.n_heads
+    dh = cfg.d_inner // h
+    dhl = dh // n
+    return (jnp.zeros((n, batch, h, dhl, dh), jnp.float32),
+            jnp.zeros((batch, h, dh), jnp.float32),
+            jnp.full((batch, h), -1e9, jnp.float32))
+
+
+MLSTM_CACHE_AXES = (("worker", "batch", None, None, None),
+                    ("batch", None, None), ("batch", None))
+
+
+def _mlstm_core(cfg, p, x, state):
+    d = cfg.dtype
+    n, h = cfg.n_workers, cfg.n_heads
+    di = cfg.d_inner
+    dh = di // h
+    dhl = dh // n
+    b, s, _ = x.shape
+    up = x @ p["w_up"].astype(d)                       # (B,S,2di)
+    xt, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bsd,dhk->bshk", xt, p["w_q"].astype(d)).astype(jnp.float32)
+    k = (jnp.einsum("bsd,dhk->bshk", xt, p["w_k"].astype(d))
+         * (dh ** -0.5)).astype(jnp.float32)
+    v = jnp.einsum("bsd,ndhk->nbshk", xt, p["w_v"].astype(d)).astype(jnp.float32)
+    v = constrain(v, ("worker", "batch", "seq", None, None))
+    gates = (xt @ p["w_gates"].astype(d) + p["b_gates"].astype(d)
+             ).astype(jnp.float32)                     # (B,S,2H)
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)
+    y, state = _mlstm_scan(q, k, v, i_raw, f_raw, state)
+    y = y.reshape(n, b, s, h * dhl).astype(d)
+    # output gate: z grouped to match the worker-sharded feature layout
+    zg = z.reshape(b, s, h, n, dhl).transpose(3, 0, 1, 2, 4).reshape(
+        n, b, s, h * dhl)
+    y = y * jax.nn.silu(zg)
+    partial = jnp.einsum("nbsf,nfe->nbse", y, p["w_down"].astype(d))
+    partial = constrain(partial, ("worker", "batch", "seq", "embed"))
+    return fusion.worker_reduce(cfg, p, partial), state
+
+
+def mlstm_full(cfg, p: dict, x: jax.Array, return_cache: bool = False):
+    state = mlstm_state_init(cfg, x.shape[0])
+    out, state = _mlstm_core(cfg, p, x, state)
+    return (out, state) if return_cache else out
+
+
+def mlstm_step(cfg, p: dict, x: jax.Array, cache: Tuple
+               ) -> Tuple[jax.Array, Tuple]:
+    return _mlstm_core(cfg, p, x, cache)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(cfg, rng) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    r = layers.rsplit(rng, 3)
+    return {
+        "w": layers.param(r[0], (d, 4 * d), (None, None), cfg.param_dtype,
+                          scale=d ** -0.5),
+        "r": layers.param(r[1], (h, dh, 4 * dh), (None, None, None),
+                          cfg.param_dtype, scale=dh ** -0.5),
+        "b": layers.param(r[2], (4 * d,), (None,), cfg.param_dtype,
+                          mode="zeros"),
+    }
+
+
+def slstm_state_init(cfg, batch: int) -> Tuple:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return (z, z, jnp.ones((batch, d), jnp.float32),
+            jnp.full((batch, d), -1e9, jnp.float32))
+
+
+SLSTM_CACHE_AXES = (("batch", None), ("batch", None),
+                    ("batch", None), ("batch", None))
+
+
+def _slstm_scan(cfg, p, wx, state):
+    """wx: (B,S,4d) precomputed input contributions."""
+    h_heads = cfg.n_heads
+    d = cfg.d_model
+    dh = d // h_heads
+    r_mat = p["r"].astype(jnp.float32)
+
+    def step(carry, wxt):
+        h, c, n, m = carry                      # (B,d) each
+        b = h.shape[0]
+        hh = h.reshape(b, h_heads, dh)
+        # (B,H,4*dh) -> (B,4,H,dh) -> (B,4d): match wx's [z|i|f|o] chunking
+        rec = jnp.einsum("bhd,hdk->bhk", hh, r_mat)
+        rec = rec.reshape(b, h_heads, 4, dh).transpose(0, 2, 1, 3)
+        rec = rec.reshape(b, 4 * d)
+        z_raw, i_raw, f_raw, o_raw = jnp.split(wxt + rec, 4, axis=-1)
+        zt = jnp.tanh(z_raw)
+        ot = jax.nn.sigmoid(o_raw)
+        f_log = jax.nn.log_sigmoid(f_raw)
+        m_new = jnp.maximum(f_log + m, i_raw)
+        fp = jnp.exp(f_log + m - m_new)
+        ip = jnp.exp(i_raw - m_new)
+        c = fp * c + ip * zt
+        n = fp * n + ip
+        h = ot * c / jnp.maximum(n, 1.0)
+        return (h, c, n, m_new), h
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), state        # (B,S,d)
+
+
+def _slstm_core(cfg, p, x, state):
+    wx = (x @ p["w"].astype(cfg.dtype) + p["b"].astype(cfg.dtype)
+          ).astype(jnp.float32)
+    hs, state = _slstm_scan(cfg, p, wx, state)
+    return hs.astype(cfg.dtype), state
+
+
+def slstm_full(cfg, p: dict, x: jax.Array, return_cache: bool = False):
+    out, state = _slstm_core(cfg, p, x, slstm_state_init(cfg, x.shape[0]))
+    return (out, state) if return_cache else out
+
+
+def slstm_step(cfg, p: dict, x: jax.Array, cache: Tuple
+               ) -> Tuple[jax.Array, Tuple]:
+    return _slstm_core(cfg, p, x, cache)

@@ -1,0 +1,54 @@
+"""Winner-sparse gradient compression with error feedback.
+
+The FedOCS backward is exactly sparse (only argmax winners receive gradient
+— paper Eq. 6).  This module generalizes that observation into a top-k
+magnitude sparsifier with error feedback (memory) for the *data-parallel*
+gradient reduction: each DP rank keeps the k largest-magnitude entries per
+tensor, accumulates the residual locally, and adds it to the next step's
+gradient.  With k = 1/16..1/64 the DP all-reduce payload shrinks
+proportionally at negligible convergence cost (validated in
+``tests/test_grad_compression.py``).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_mask(x: jax.Array, k_frac: float) -> jax.Array:
+    """Boolean mask keeping the k largest-|x| entries (per tensor)."""
+    flat = jnp.abs(x.reshape(-1))
+    k = max(1, int(flat.shape[0] * k_frac))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh)
+
+
+def compress(g: jax.Array, err: jax.Array, k_frac: float
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (sparse gradient, new error memory)."""
+    corrected = g.astype(jnp.float32) + err
+    mask = topk_mask(corrected, k_frac)
+    sparse = jnp.where(mask, corrected, 0.0)
+    return sparse.astype(g.dtype), corrected - sparse
+
+
+def compress_tree(grads, err_tree, k_frac: float):
+    out = jax.tree.map(lambda g, e: compress(g, e, k_frac), grads, err_tree)
+    sparse = jax.tree.map(lambda o: o[0], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda o: o[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return sparse, new_err
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def payload_fraction(tree, k_frac: float) -> float:
+    """Analytic DP-collective payload ratio vs dense all-reduce (value+index
+    encoding at 2x per kept element)."""
+    return min(1.0, 2.0 * k_frac)

@@ -1,0 +1,118 @@
+"""Optimizers in pure JAX (no optax in the offline container).
+
+optax-like API:  ``opt.init(params) -> state``;
+``opt.update(grads, state, params) -> (new_params, new_state, stats)``.
+Master weights / moments are fp32 regardless of parameter dtype; the trainer
+shards them ZeRO-style via ``parallel.sharding.zero_axes_tree``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale
+                                   ).astype(x.dtype), tree), gn
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def adamw(lr_fn: Callable, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          max_grad_norm: Optional[float] = 1.0,
+          moment_dtype=jnp.float32) -> Optimizer:
+    """AdamW with decoupled weight decay and fp32 master weights."""
+
+    def init(params):
+        f32 = lambda p: p.astype(jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "master": jax.tree.map(f32, params),
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype),
+                              params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype),
+                              params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = lr_fn(step)
+        stats = {}
+        if max_grad_norm is not None:
+            grads, gn = clip_by_global_norm(grads, max_grad_norm)
+            stats["grad_norm"] = gn
+        b1t = 1 - b1 ** step.astype(jnp.float32)
+        b2t = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, master):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            mh = m_new / b1t
+            vh = v_new / b2t
+            new_master = master - lr * (mh / (jnp.sqrt(vh) + eps)
+                                        + weight_decay * master)
+            return (new_master, m_new.astype(moment_dtype),
+                    v_new.astype(moment_dtype))
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"],
+                           state["master"])
+        new_master = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_params = jax.tree.map(
+            lambda mw, p: mw.astype(p.dtype), new_master, params)
+        new_state = {"step": step, "master": new_master, "m": new_m,
+                     "v": new_v}
+        stats["lr"] = lr
+        return new_params, new_state, stats
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr_fn: Callable, momentum: float = 0.9,
+        max_grad_norm: Optional[float] = None) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mom": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = lr_fn(step)
+        stats = {}
+        if max_grad_norm is not None:
+            grads, gn = clip_by_global_norm(grads, max_grad_norm)
+            stats["grad_norm"] = gn
+        new_mom = jax.tree.map(
+            lambda g, mo: momentum * mo + g.astype(jnp.float32),
+            grads, state["mom"])
+        new_params = jax.tree.map(
+            lambda p, mo: (p.astype(jnp.float32) - lr * mo).astype(p.dtype),
+            params, new_mom)
+        stats["lr"] = lr
+        return new_params, {"step": step, "mom": new_mom}, stats
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,47 @@
+"""Learning-rate schedules (pure functions step -> lr).
+
+Includes WSD (Warmup-Stable-Decay) from MiniCPM (arXiv:2404.06395), the
+schedule the assigned minicpm-2b config trains with.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup_cosine(lr: float, warmup: int, total: int,
+                         final_frac: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, lr * cos).astype(jnp.float32)
+    return f
+
+
+def wsd(lr: float, warmup: int, stable: int, decay: int,
+        final_frac: float = 0.01):
+    """Warmup-Stable-Decay: linear warmup, flat plateau, exponential-ish
+    (here: cosine) decay over the last `decay` steps — MiniCPM §4."""
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup - stable) / jnp.maximum(decay, 1), 0, 1)
+        dec = lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        out = jnp.where(step < warmup, warm,
+                        jnp.where(step < warmup + stable, lr, dec))
+        return out.astype(jnp.float32)
+    return f
+
+
+def for_arch(arch_id: str, lr: float, total_steps: int):
+    if arch_id == "minicpm-2b":
+        warm = max(total_steps // 100, 10)
+        decay = max(total_steps // 10, 10)
+        return wsd(lr, warm, total_steps - warm - decay, decay)
+    return linear_warmup_cosine(lr, max(total_steps // 100, 10), total_steps)

@@ -1,0 +1,120 @@
+"""Batched serving engine: prefill + decode with slot-based continuous
+batching (lite).
+
+A fixed budget of B slots decodes in lock-step (one jitted ``decode_step``
+per tick over the whole batch).  Finished slots (EOS or length cap) retire
+and are refilled from the request queue by running a single-request prefill
+and scattering its KV cache into the batch cache at the slot index — the
+standard continuous-batching structure, minus speculative/paged refinements.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (S,) int32
+    max_new_tokens: int = 32
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: List[int]
+    prompt_len: int
+
+
+class ServeEngine:
+    def __init__(self, model, values, batch_slots: int, max_seq: int,
+                 eos_id: int = 1, greedy: bool = True):
+        self.m = model
+        self.values = values
+        self.B = batch_slots
+        self.max_seq = max_seq
+        self.eos = eos_id
+        cfg = model.cfg
+        self.cache = model.cache_init(batch_slots, max_seq)
+        self.positions = jnp.zeros((batch_slots,), jnp.int32)
+        self.cur_token = jnp.zeros((batch_slots, 1), jnp.int32)
+        self.active = np.zeros((batch_slots,), bool)
+        self.budget = np.zeros((batch_slots,), np.int64)
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.outputs: Dict[int, Completion] = {}
+
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(
+            lambda v, b: model.prefill(v, b, max_seq=max_seq))
+
+    # -- slot management ----------------------------------------------------
+
+    def _insert(self, slot: int, req: Request):
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+        logits, cache1 = self._prefill(self.values, {"tokens": tokens})
+        # scatter the single-request cache into the batch cache at `slot`
+        def put(batch_leaf, one_leaf):
+            # find the batch axis: the axis where sizes differ (B vs 1)
+            axis = _batch_axis(batch_leaf.shape, one_leaf.shape, self.B)
+            idx = [slice(None)] * batch_leaf.ndim
+            idx[axis] = slice(slot, slot + 1)
+            return batch_leaf.at[tuple(idx)].set(
+                one_leaf.astype(batch_leaf.dtype))
+
+        self.cache = jax.tree.map(put, self.cache, cache1)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[0]
+        self.cur_token = self.cur_token.at[slot, 0].set(tok)
+        self.positions = self.positions.at[slot].set(len(req.prompt))
+        self.active[slot] = True
+        self.budget[slot] = req.max_new_tokens - 1
+        self.slot_req[slot] = req
+        self.outputs[req.rid] = Completion(
+            rid=req.rid, tokens=[int(tok)], prompt_len=len(req.prompt))
+
+    def _retire(self, slot: int):
+        self.active[slot] = False
+        self.slot_req[slot] = None
+
+    # -- main loop ----------------------------------------------------------
+
+    def run(self, requests: List[Request]) -> Dict[int, Completion]:
+        queue = list(requests)
+        while queue or self.active.any():
+            for slot in range(self.B):
+                if not self.active[slot] and queue:
+                    self._insert(slot, queue.pop(0))
+            logits, self.cache = self._decode(
+                self.values, self.cur_token, self.positions, self.cache)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)     # (B,)
+            self.cur_token = nxt[:, None]
+            self.positions = self.positions + 1
+            nxt_np = np.asarray(nxt)
+            for slot in range(self.B):
+                if not self.active[slot]:
+                    continue
+                req = self.slot_req[slot]
+                self.outputs[req.rid].tokens.append(int(nxt_np[slot]))
+                self.budget[slot] -= 1
+                done = (int(nxt_np[slot]) == self.eos
+                        or self.budget[slot] <= 0
+                        or int(self.positions[slot]) >= self.max_seq - 1)
+                if done:
+                    self._retire(slot)
+        return self.outputs
+
+
+def _batch_axis(batch_shape, one_shape, b: int) -> int:
+    for i, (bs, os) in enumerate(zip(batch_shape, one_shape)):
+        if bs == b and os == 1:
+            return i
+    # fall back: first axis of size B
+    for i, bs in enumerate(batch_shape):
+        if bs == b:
+            return i
+    raise ValueError(f"no batch axis in {batch_shape} vs {one_shape}")

@@ -1,0 +1,78 @@
+"""Train-step construction: loss + grad (+ microbatch accumulation) + update.
+
+Microbatch gradient accumulation is a ``lax.scan`` over microbatches, which
+lets the XLA latency-hiding scheduler overlap microbatch i+1's compute with
+microbatch i's DP gradient all-reduce (reduce-scatter under ZeRO), the
+standard comm/compute overlap structure.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import grad_compression
+
+
+def make_train_step(loss_fn: Callable, optimizer, microbatches: int = 1,
+                    compress_k: Optional[float] = None) -> Callable:
+    """loss_fn(values, batch) -> (loss, metrics dict).
+
+    Returns train_step(values, opt_state, batch, err) ->
+        (values, opt_state, err, metrics)
+    ``err`` is the error-feedback memory when compress_k is set (else None —
+    pass jnp.zeros(()) sentinel-free via the same pytree each call).
+    """
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(values, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(values, batch)
+            return grads, loss, metrics
+
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            (loss, metrics), grads = grad_fn(values, mb)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            return (acc, loss_acc + loss), metrics
+
+        zeros = jax.tree.map(lambda v: jnp.zeros(v.shape, jnp.float32),
+                             values)
+        (acc, loss_sum), metrics = jax.lax.scan(
+            body, (zeros, jnp.zeros((), jnp.float32)), micro)
+        grads = jax.tree.map(lambda g: g / microbatches, acc)
+        last_metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return grads, loss_sum / microbatches, last_metrics
+
+    if compress_k is not None:
+        def train_step(values, opt_state, batch, err):
+            grads, loss, metrics = compute_grads(values, batch)
+            grads, err = grad_compression.compress_tree(grads, err,
+                                                        compress_k)
+            values, opt_state, stats = optimizer.update(grads, opt_state,
+                                                        values)
+            metrics = dict(metrics)
+            metrics.update(stats)
+            metrics["loss_mean"] = loss
+            return values, opt_state, err, metrics
+        return train_step
+
+    def train_step(values, opt_state, batch):
+        grads, loss, metrics = compute_grads(values, batch)
+        values, opt_state, stats = optimizer.update(grads, opt_state, values)
+        metrics = dict(metrics)
+        metrics.update(stats)
+        metrics["loss_mean"] = loss
+        return values, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,122 @@
+"""Training loop with checkpoint/restart, straggler mitigation, and logging.
+
+Fault-tolerance model (DESIGN.md §6):
+  * auto-resume: on start, the newest COMMITted checkpoint (if any) is
+    restored — a preempted job relaunches with the same command line;
+  * index-derived data: batches are pure functions of (seed, step), so resume
+    replays the exact stream with no data-loader state;
+  * straggler mitigation: a per-step data deadline — a host that misses it
+    substitutes the previous step's batch (deterministic, auditable via the
+    `substituted_steps` log); a step-time watchdog flags slow steps for the
+    launcher's eviction/elastic-re-mesh path;
+  * elastic rescale: checkpoints are mesh-agnostic; `restore` takes target
+    shardings (see checkpoint/checkpointer.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpointer
+from repro.optim import grad_compression
+from repro.train.train_step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    microbatches: int = 1
+    compress_k: Optional[float] = None
+    data_deadline_s: Optional[float] = None     # straggler: batch deadline
+    watchdog_factor: float = 3.0                # step-time anomaly threshold
+    resume: bool = True
+
+
+@dataclasses.dataclass
+class TrainResult:
+    values: Any
+    opt_state: Any
+    history: List[Dict[str, float]]
+    substituted_steps: List[int]
+    straggler_flags: List[int]
+    final_step: int
+
+
+def train(loss_fn: Callable, init_values, optimizer, data_fn: Callable,
+          tcfg: TrainerConfig,
+          shardings: Optional[Dict[str, Any]] = None,
+          delay_injector: Optional[Callable[[int], float]] = None
+          ) -> TrainResult:
+    """data_fn(step) -> batch pytree; delay_injector simulates slow hosts."""
+    values = init_values
+    opt_state = optimizer.init(values)
+    err = grad_compression.init_error(values)
+    start_step = 0
+
+    if tcfg.ckpt_dir and tcfg.resume:
+        step = checkpointer.latest_step(tcfg.ckpt_dir)
+        if step is not None:
+            state_template = {"values": values, "opt": opt_state}
+            restored, step, _ = checkpointer.restore(
+                tcfg.ckpt_dir, step, template=state_template,
+                shardings=shardings)
+            values, opt_state = restored["values"], restored["opt"]
+            start_step = step
+
+    step_fn = jax.jit(make_train_step(
+        loss_fn, optimizer, microbatches=tcfg.microbatches,
+        compress_k=tcfg.compress_k))
+
+    history: List[Dict[str, float]] = []
+    substituted: List[int] = []
+    flagged: List[int] = []
+    durations: List[float] = []
+
+    for step in range(start_step, tcfg.steps):
+        t0 = time.monotonic()
+        if delay_injector is not None and tcfg.data_deadline_s is not None:
+            delay = delay_injector(step)
+            if delay > tcfg.data_deadline_s:
+                # deadline missed: substitute the previous step's batch
+                batch = data_fn(max(step - 1, 0))
+                substituted.append(step)
+            else:
+                batch = data_fn(step)
+        else:
+            batch = data_fn(step)
+        if tcfg.compress_k is not None:
+            values, opt_state, err, metrics = step_fn(values, opt_state,
+                                                      batch, err)
+        else:
+            values, opt_state, metrics = step_fn(values, opt_state, batch)
+        dt = time.monotonic() - t0
+        if durations and dt > tcfg.watchdog_factor * float(
+                np.median(durations)):
+            flagged.append(step)
+        durations.append(dt)
+        if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
+            row = {k: float(v) for k, v in metrics.items()
+                   if jnp.ndim(v) == 0}
+            row["step"] = step
+            row["step_time_s"] = dt
+            history.append(row)
+        if (tcfg.ckpt_dir and tcfg.ckpt_every
+                and (step + 1) % tcfg.ckpt_every == 0):
+            checkpointer.save(tcfg.ckpt_dir, step + 1,
+                              {"values": values, "opt": opt_state})
+
+    if tcfg.ckpt_dir:
+        checkpointer.save(tcfg.ckpt_dir, tcfg.steps,
+                          {"values": values, "opt": opt_state})
+    return TrainResult(values=values, opt_state=opt_state, history=history,
+                       substituted_steps=substituted, straggler_flags=flagged,
+                       final_step=tcfg.steps)

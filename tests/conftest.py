@@ -1,0 +1,5 @@
+import os
+import sys
+
+# tests import the proptest helper module from this directory
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,47 @@
+"""Mini property-test harness (hypothesis is not installable offline).
+
+``sweep`` runs a property over a deterministic sample of generated cases and
+reports the failing seed/case on error — the shrinking-free essentials of
+property-based testing.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Callable, Iterable, Sequence
+
+import numpy as np
+
+
+def seeds(n: int, base: int = 0) -> Iterable[int]:
+    return range(base, base + n)
+
+
+def sweep(fn: Callable, cases: Sequence, label: str = "case"):
+    """Run fn(case) for each case; annotate failures with the case."""
+    for case in cases:
+        try:
+            fn(case)
+        except AssertionError as e:
+            raise AssertionError(f"[{label}={case!r}] {e}") from e
+
+
+def random_floats(seed: int, shape, dtype=np.float32, scale: float = 10.0,
+                  specials: bool = True) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal(shape) * scale).astype(dtype)
+    if specials and x.size >= 8:
+        flat = x.reshape(-1)
+        flat[0] = 0.0
+        flat[1] = -0.0
+        flat[2] = np.finfo(dtype).max / 2
+        flat[3] = -np.finfo(dtype).max / 2
+        flat[4] = np.finfo(dtype).tiny
+        flat[5] = -np.finfo(dtype).tiny
+    return x
+
+
+def grid(**kwargs):
+    keys = list(kwargs)
+    for combo in itertools.product(*(kwargs[k] for k in keys)):
+        yield dict(zip(keys, combo))

@@ -1,0 +1,62 @@
+"""Checkpointer: roundtrip, commit semantics, latest resolution."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpointer as ck
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "layer": {"w": jnp.asarray(rng.standard_normal((4, 8)), jnp.float32),
+                  "b": jnp.asarray(rng.standard_normal((8,)), jnp.float32)},
+        "stack": [jnp.asarray(rng.standard_normal((3,)), jnp.float32),
+                  jnp.asarray(rng.integers(0, 5, (2,)), jnp.int32)],
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 7, t, extra={"note": "hello"})
+    restored, step, extra = ck.restore(str(tmp_path), template=t)
+    assert step == 7 and extra["note"] == "hello"
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_points_to_newest_commit(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 5, t)
+    ck.save(str(tmp_path), 12, t)
+    assert ck.latest_step(str(tmp_path)) == 12
+
+
+def test_torn_checkpoint_ignored(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 3, t)
+    # simulate a torn write: directory without COMMIT
+    torn = tmp_path / "step_0000000009"
+    torn.mkdir()
+    (torn / "index.json").write_text("{}")
+    assert ck.latest_step(str(tmp_path)) == 3
+    restored, step, _ = ck.restore(str(tmp_path), template=t)
+    assert step == 3
+
+
+def test_restore_missing_key_raises(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 1, t)
+    bigger = dict(t)
+    bigger["extra_param"] = jnp.zeros((2,))
+    with pytest.raises(KeyError):
+        ck.restore(str(tmp_path), template=bigger)
+
+
+def test_no_checkpoint_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ck.restore(str(tmp_path / "empty"), template={})

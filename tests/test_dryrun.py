@@ -1,0 +1,105 @@
+"""Dry-run machinery tests on a small forced-device mesh (subprocess).
+
+The production 512-device sweep runs via ``launch/dryrun.py --all``; here we
+verify the cell-builder produces lowerable programs for each step kind on an
+8-device host, and that the scan-cost extrapolation helper is coherent.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, env=env,
+                          timeout=900)
+    assert proc.returncode == 0, f"OUT:\n{proc.stdout}\nERR:\n{proc.stderr}"
+    return proc.stdout
+
+
+def test_reduced_cells_lower_and_compile_all_step_kinds():
+    out = _run("""
+        import jax
+        from repro.configs import get_reduced
+        from repro.configs.base import ShapeConfig
+        from repro.launch.mesh import make_debug_mesh, rules_for
+        from repro.launch import dryrun
+        from repro.models import model as M
+        from repro.optim import optimizers, schedules
+        from repro.parallel import sharding as sh
+        from repro.train.train_step import make_train_step
+
+        mesh = make_debug_mesh(2, 4)
+        shapes = [ShapeConfig("t", "train", 32, 8),
+                  ShapeConfig("p", "prefill", 64, 4),
+                  ShapeConfig("d", "decode", 64, 8)]
+        cfg = get_reduced("glm4-9b", n_workers=4)
+        m = M.build(cfg)
+        import jax.numpy as jnp
+        for shape in shapes:
+            rules = rules_for(shape.name, shape.global_batch, mesh)
+            values_sds, axes = sh.split_tree(
+                jax.eval_shape(m.init, jax.random.PRNGKey(0)))
+            param_sh = sh.tree_shardings_for_values(axes, values_sds, mesh,
+                                                    rules)
+            specs, in_axes = m.input_specs(shape)
+            batch_sh = sh.tree_shardings_for_values(in_axes, specs, mesh,
+                                                    rules)
+            with sh.use_mesh(mesh, rules):
+                if shape.kind == "train":
+                    opt = optimizers.adamw(schedules.constant(1e-4))
+                    opt_sds = jax.eval_shape(opt.init, values_sds)
+                    step = make_train_step(m.loss, opt)
+                    c = jax.jit(step).lower(values_sds, opt_sds,
+                                            specs).compile()
+                elif shape.kind == "prefill":
+                    c = jax.jit(lambda v, b: m.prefill(
+                        v, b, max_seq=shape.seq_len)).lower(
+                            values_sds, specs).compile()
+                else:
+                    c = jax.jit(m.decode_step).lower(
+                        values_sds, specs["token"], specs["positions"],
+                        specs["cache"]).compile()
+            ca = c.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            assert float(dict(ca).get("flops", 0)) > 0, shape.kind
+            print("OK", shape.kind)
+        print("CELLS_OK")
+    """)
+    assert "CELLS_OK" in out
+
+
+def test_scaled_variants_logic():
+    from repro.configs import get_config
+    from repro.launch.dryrun import _scaled_variants
+
+    cfg = get_config("jamba-1.5-large-398b")
+    v = _scaled_variants(cfg, microbatches=8)
+    assert v["b"]["n_layers"] == 8 and v["c"]["n_layers"] == 16
+    assert v["b"]["microbatches"] == 1
+    assert v["n_periods"] == 9
+
+    w = _scaled_variants(get_config("whisper-base"), 1)
+    assert w["b"]["n_encoder_layers"] == 1
+    assert w["c"]["n_encoder_layers"] == 2
+
+
+def test_model_flops_accounting():
+    from repro.configs import get_config, SHAPES
+    from repro.launch.dryrun import _model_flops
+
+    cfg = get_config("glm4-9b")
+    train = _model_flops(cfg, SHAPES["train_4k"])
+    assert train == 6.0 * cfg.param_count(True) * 256 * 4096
+    dec = _model_flops(cfg, SHAPES["decode_32k"])
+    assert dec == 2.0 * cfg.param_count(True) * 128

@@ -1,0 +1,82 @@
+"""In-model aggregation laws: values, gradients, tie handling."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import random_floats, seeds, sweep
+from repro.core import fedocs, quantize as qz
+
+
+def test_aggregate_modes_shapes():
+    h = jnp.asarray(random_floats(0, (4, 3, 8)))
+    assert fedocs.aggregate(h, "max").shape == (3, 8)
+    assert fedocs.aggregate(h, "mean").shape == (3, 8)
+    assert fedocs.aggregate(h, "sum").shape == (3, 8)
+    assert fedocs.aggregate(h, "concat").shape == (3, 32)
+    assert fedocs.output_dim("concat", 4, 8) == 32
+    assert fedocs.output_dim("max", 4, 8) == 8
+
+
+def test_maxpool_matches_jnp():
+    def prop(seed):
+        h = jnp.asarray(random_floats(seed, (5, 7, 11)))
+        assert np.allclose(np.asarray(fedocs.maxpool(h, "all")),
+                           np.asarray(jnp.max(h, axis=0)))
+    sweep(prop, list(seeds(8)), "seed")
+
+
+def test_winner_routed_gradient_unique_max():
+    """Paper Eq. 6: gradient goes only to the argmax worker."""
+    h = jnp.asarray(random_floats(3, (6, 4, 4), specials=False))
+    g = jax.grad(lambda x: jnp.sum(fedocs.maxpool(x, "all") * 2.0))(h)
+    g = np.asarray(g)
+    # exactly one worker per element gets gradient 2.0
+    assert np.allclose(g.sum(axis=0), 2.0)
+    assert ((g != 0).sum(axis=0) == 1).all()
+
+
+def test_tie_break_first_single_winner():
+    base = jnp.asarray(random_floats(0, (1, 8), specials=False))
+    h = jnp.concatenate([base, base, base])
+    g = jax.grad(lambda x: jnp.sum(fedocs.maxpool(x, "first")))(h)
+    g = np.asarray(g)
+    assert np.allclose(g[0], 1.0) and np.allclose(g[1:], 0.0)
+
+
+def test_quantized_maxpool_winner_exact():
+    """AR(max) on codes must select a true argmax at D-bit resolution."""
+    def prop(seed):
+        h = jnp.asarray(random_floats(seed, (8, 32), specials=False))
+        for bits in (8, 16):
+            v = fedocs.maxpool_quantized(h, bits, "all")
+            expect = qz.dequantize(
+                jnp.max(qz.quantize(h, bits), axis=0), bits, h.dtype)
+            assert np.array_equal(np.asarray(v), np.asarray(expect))
+            # value error bounded by one quantization step
+            true_max = np.asarray(jnp.max(h, axis=0))
+            got = np.asarray(v)
+            assert np.all(got <= true_max + 1e-6)
+    sweep(prop, list(seeds(8)), "seed")
+
+
+def test_quantized_maxpool_gradient_routes_to_code_winners():
+    h = jnp.asarray(random_floats(1, (4, 16), specials=False))
+    g = jax.grad(lambda x: jnp.sum(fedocs.maxpool_quantized(x, 8, "first")))(h)
+    g = np.asarray(g)
+    assert np.allclose(g.sum(axis=0), 1.0)
+    assert ((g != 0).sum(axis=0) == 1).all()
+
+
+def test_mean_and_sum_grads():
+    h = jnp.asarray(random_floats(2, (4, 8)))
+    gm = np.asarray(jax.grad(lambda x: jnp.sum(fedocs.meanpool(x)))(h))
+    assert np.allclose(gm, 0.25)
+    gs = np.asarray(jax.grad(lambda x: jnp.sum(fedocs.aggregate(x, "sum")))(h))
+    assert np.allclose(gs, 1.0)
+
+
+def test_unknown_mode_raises():
+    with pytest.raises(ValueError):
+        fedocs.aggregate(jnp.zeros((2, 2)), "median")

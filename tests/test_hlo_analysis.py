@@ -1,0 +1,52 @@
+"""Collective-parser unit tests + roofline term math."""
+
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+SAMPLE = """
+HloModule test
+  %all-reduce.1 = bf16[16,128]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %all-gather.2 = f32[64,256]{1,0} all-gather(%y), replica_groups=[8,2]<=[16], dimensions={0}
+  %reduce-scatter.3 = bf16[8,128]{1,0} reduce-scatter(%z), replica_groups={{0,1}}, to_apply=%max
+  %all-to-all.4 = f32[32]{0} all-to-all(%w), replica_groups={{0,1,2,3}}
+  %collective-permute.5 = u8[1024]{0} collective-permute(%v), source_target_pairs={{0,1}}
+  %add.6 = bf16[16,128]{1,0} add(%a, %b)
+"""
+
+
+def test_parse_counts_and_payloads():
+    st = H.parse_collectives(SAMPLE)
+    assert st.counts == {"all-reduce": 1, "all-gather": 1,
+                         "reduce-scatter": 1, "all-to-all": 1,
+                         "collective-permute": 1}
+    assert st.payload_bytes["all-reduce"] == 16 * 128 * 2
+    assert st.payload_bytes["all-gather"] == 64 * 256 * 4
+    assert st.payload_bytes["collective-permute"] == 1024
+
+
+def test_link_bytes_ring_model():
+    st = H.parse_collectives(SAMPLE)
+    expect = (2 * 16 * 128 * 2 * 3 / 4        # AR group 4
+              + 64 * 256 * 4 * 1 / 2          # AG iota group size 2
+              + 8 * 128 * 2 * 1               # RS group 2 -> (g-1)=1
+              + 32 * 4 * 3 / 4                # A2A group 4
+              + 1024)                         # permute
+    assert st.link_bytes == pytest.approx(expect)
+
+
+def test_start_ops_not_double_counted():
+    txt = """
+  %all-reduce-start.1 = bf16[128]{0} all-reduce-start(%x), replica_groups={{0,1}}
+  %all-reduce-done.2 = bf16[128]{0} all-reduce-done(%all-reduce-start.1)
+"""
+    st = H.parse_collectives(txt)
+    assert st.counts == {"all-reduce": 1}
+
+
+def test_roofline_terms_bottleneck():
+    t = H.roofline_terms(197e12, 819e9, 0.0)      # 1s compute, 1s memory
+    assert t["t_compute_s"] == pytest.approx(1.0)
+    assert t["t_memory_s"] == pytest.approx(1.0)
+    t2 = H.roofline_terms(1e12, 1e9, 500e9)
+    assert t2["bottleneck"] == "collective"

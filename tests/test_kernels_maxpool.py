@@ -1,0 +1,60 @@
+"""Per-kernel allclose sweep: fused max-pool vs jnp oracle (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import grid, random_floats, sweep
+from repro.kernels.maxpool import maxpool as K
+from repro.kernels.maxpool import ops as O
+from repro.kernels.maxpool import ref as R
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_maxpool_sweep(dtype):
+    def prop(case):
+        n, m, k = case["n"], case["m"], case["k"]
+        h = jnp.asarray(random_floats(case["seed"], (n, m, k),
+                                      specials=False), dtype)
+        v, w = K.maxpool_fused(h, block_m=64, block_k=64)
+        vr, wr = R.maxpool_fused(h)
+        assert jnp.array_equal(v, vr), "pooled values"
+        assert jnp.array_equal(w, wr), "winner indices"
+    sweep(prop, list(grid(n=[2, 8, 16], m=[64, 192], k=[128],
+                          seed=[0, 1])))
+
+
+def test_winner_bwd_sweep():
+    def prop(case):
+        n, m, k = 8, case["m"], case["k"]
+        h = jnp.asarray(random_floats(case["seed"], (n, m, k),
+                                      specials=False))
+        _, w = K.maxpool_fused(h)
+        g = jnp.asarray(random_floats(case["seed"] + 100, (m, k),
+                                      specials=False))
+        gh = K.maxpool_winner_bwd(w, g, n)
+        ghr = R.maxpool_winner_bwd(w, g, n)
+        assert jnp.allclose(gh, ghr)
+    sweep(prop, list(grid(m=[64, 128], k=[64, 256], seed=[0, 1])))
+
+
+def test_ops_maxpool_grad_single_winner():
+    h = jnp.asarray(random_floats(5, (4, 128, 128), specials=False))
+    g = jax.grad(lambda x: jnp.sum(O.maxpool(x)))(h)
+    s = np.asarray(g).sum(axis=0)
+    assert np.allclose(s, 1.0)
+    assert ((np.asarray(g) != 0).sum(axis=0) == 1).all()
+
+
+def test_ops_matches_core_fedocs():
+    from repro.core import fedocs
+    h = jnp.asarray(random_floats(9, (8, 128, 256), specials=False))
+    assert jnp.array_equal(O.maxpool(h), fedocs.maxpool(h, "all"))
+
+
+def test_block_autofit_odd_shapes():
+    h = jnp.asarray(random_floats(2, (3, 96, 384), specials=False))
+    v, w = K.maxpool_fused(h, block_m=128, block_k=256)
+    vr, wr = R.maxpool_fused(h)
+    assert jnp.array_equal(v, vr) and jnp.array_equal(w, wr)

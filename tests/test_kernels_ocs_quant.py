@@ -1,0 +1,42 @@
+"""Per-kernel allclose sweep: monotone code kernel vs core.quantize oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import grid, random_floats, sweep
+from repro.kernels.ocs_quant import ocs_quant as K
+from repro.kernels.ocs_quant import ops as O
+from repro.kernels.ocs_quant import ref as R
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bits", [8, 16])
+def test_encode_decode_sweep(dtype, bits):
+    if dtype == jnp.bfloat16 and bits > 16:
+        pytest.skip("bf16 caps at 16-bit codes")
+
+    def prop(case):
+        x = jnp.asarray(random_floats(case["seed"], (case["m"], case["k"]),
+                                      scale=case["scale"]), dtype)
+        c = K.encode(x, bits)
+        cr = R.encode(x, bits)
+        assert jnp.array_equal(c, cr), "codes"
+        d = K.decode(c, bits, dtype)
+        dr = R.decode(cr, bits, dtype)
+        assert jnp.array_equal(d, dr), "decoded values"
+    sweep(prop, list(grid(m=[64, 256], k=[128], scale=[0.1, 100.0],
+                          seed=[0, 1])))
+
+
+def test_straight_through_grad():
+    x = jnp.asarray(random_floats(0, (64, 64), specials=False))
+    g = jax.grad(lambda v: jnp.sum(O.quantize_st(v, 8) * 3.0))(x)
+    assert np.allclose(np.asarray(g), 3.0)
+
+
+def test_code_width_selection():
+    x = jnp.ones((64, 64), jnp.float32)
+    assert K.encode(x, 8).dtype == jnp.uint8
+    assert K.encode(x, 16).dtype == jnp.uint16

@@ -1,0 +1,101 @@
+"""Layer-level unit tests: norms, RoPE, fusion-mode algebra."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import fusion, layers, mlp
+from repro.parallel.sharding import split_tree
+
+
+def _cfg(**kw):
+    return get_reduced("glm4-9b", **kw)
+
+
+def test_rmsnorm_unit_scale():
+    cfg = _cfg()
+    p = jax.tree.map(lambda t: t.value, layers.norm_init(cfg, jax.random.PRNGKey(0)),
+                     is_leaf=lambda x: hasattr(x, "axes"))
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 4, 64)) * 7,
+                    jnp.float32)
+    y = layers.norm_apply(cfg, p, x)
+    rms = jnp.sqrt(jnp.mean(y ** 2, axis=-1))
+    assert np.allclose(np.asarray(rms), 1.0, atol=1e-3)
+
+
+def test_layernorm_zero_mean():
+    cfg = _cfg(norm="layernorm")
+    p = jax.tree.map(lambda t: t.value, layers.norm_init(cfg, jax.random.PRNGKey(0)),
+                     is_leaf=lambda x: hasattr(x, "axes"))
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((2, 4, 64)) + 3,
+                    jnp.float32)
+    y = layers.norm_apply(cfg, p, x)
+    assert np.allclose(np.asarray(jnp.mean(y, -1)), 0.0, atol=1e-4)
+
+
+def test_rope_preserves_norm_and_relativity():
+    cfg = _cfg(rotary_frac=1.0)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((1, 8, 2, 16)), jnp.float32)
+    pos = jnp.arange(8, dtype=jnp.int32)[None]
+    y = layers.apply_rope(cfg, x, pos)
+    # rotation preserves per-head norms
+    assert np.allclose(np.asarray(jnp.linalg.norm(x, axis=-1)),
+                       np.asarray(jnp.linalg.norm(y, axis=-1)), atol=1e-4)
+    # inner products depend only on relative offset
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, 16)), jnp.float32)
+
+    def dot_at(pq, pk):
+        qq = layers.apply_rope(cfg, q, jnp.asarray([[pq]], jnp.int32))
+        kk = layers.apply_rope(cfg, k, jnp.asarray([[pk]], jnp.int32))
+        return float(jnp.sum(qq * kk))
+
+    assert dot_at(3, 1) == pytest.approx(dot_at(7, 5), abs=1e-4)
+
+
+def test_partial_rotary_leaves_tail_untouched():
+    cfg = _cfg(rotary_frac=0.5)
+    x = jnp.asarray(np.random.default_rng(3).standard_normal((1, 4, 2, 16)),
+                    jnp.float32)
+    pos = jnp.arange(4, dtype=jnp.int32)[None]
+    y = layers.apply_rope(cfg, x, pos)
+    assert np.allclose(np.asarray(y[..., 8:]), np.asarray(x[..., 8:]))
+
+
+def test_mlp_fusion_sum_equals_unsharded_matmul():
+    """sum fusion over the worker axis == one big dense MLP."""
+    cfg = _cfg(tp_fusion="sum", n_workers=2)
+    p = jax.tree.map(lambda t: t.value, mlp.mlp_init(cfg, jax.random.PRNGKey(0)),
+                     is_leaf=lambda x: hasattr(x, "axes"))
+    x = jnp.asarray(np.random.default_rng(4).standard_normal((2, 4, 64)),
+                    jnp.float32)
+    y = mlp.mlp_apply(cfg, p, x)
+    # dense reference: concatenate worker slices
+    w_up = jnp.concatenate(list(p["w_up"]), axis=-1)       # (d, f)
+    w_gate = jnp.concatenate(list(p["w_gate"]), axis=-1)
+    w_down = jnp.concatenate(list(p["w_down"]), axis=0)    # (f, d)
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    ref = h @ w_down
+    assert float(jnp.max(jnp.abs(y - ref))) < 1e-4
+
+
+@pytest.mark.parametrize("mode", ["max", "max_q16", "max_q8", "concat"])
+def test_mlp_fusion_modes_shapes_and_grads(mode):
+    cfg = _cfg(tp_fusion=mode, n_workers=2)
+    p = jax.tree.map(lambda t: t.value, mlp.mlp_init(cfg, jax.random.PRNGKey(1)),
+                     is_leaf=lambda x: hasattr(x, "axes"))
+    x = jnp.asarray(np.random.default_rng(5).standard_normal((2, 4, 64)),
+                    jnp.float32)
+    y = mlp.mlp_apply(cfg, p, x)
+    assert y.shape == (2, 4, 64)
+    g = jax.grad(lambda p: jnp.sum(mlp.mlp_apply(cfg, p, x) ** 2))(p)
+    assert all(np.isfinite(np.asarray(t)).all() for t in jax.tree.leaves(g))
+
+
+def test_sinusoidal_positions_shape():
+    pe = layers.sinusoidal_positions(16, 32)
+    assert pe.shape == (16, 32)
+    assert float(jnp.max(jnp.abs(pe))) <= 1.0

@@ -1,0 +1,101 @@
+"""MoE routing invariants + dispatch vs dense oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import moe
+from repro.models.moe import _capacity, _route_one_seq
+
+
+def _cfg(**kw):
+    return get_reduced("qwen3-moe-30b-a3b", **kw)
+
+
+def test_route_positions_within_capacity():
+    cfg = _cfg()
+    rng = np.random.default_rng(0)
+    probs = jax.nn.softmax(
+        jnp.asarray(rng.standard_normal((32, cfg.n_experts)), jnp.float32))
+    cap = _capacity(cfg, 32)
+    e, pos, tok, w = _route_one_seq(cfg, probs, cap)
+    assert int(jnp.max(pos)) <= cap
+    assert int(jnp.min(pos)) >= 0
+    kept = np.asarray(pos) < cap
+    # positions unique per expert among kept entries
+    pairs = set()
+    for ee, pp in zip(np.asarray(e)[kept], np.asarray(pos)[kept]):
+        assert (ee, pp) not in pairs
+        pairs.add((ee, pp))
+
+
+def test_topk_weights_normalized():
+    cfg = _cfg()
+    rng = np.random.default_rng(1)
+    probs = jax.nn.softmax(
+        jnp.asarray(rng.standard_normal((16, cfg.n_experts)), jnp.float32))
+    _, _, tok, w = _route_one_seq(cfg, probs, _capacity(cfg, 16))
+    w = np.asarray(w)
+    tok = np.asarray(tok)
+    for t in range(16):
+        assert abs(w[tok == t].sum() - 1.0) < 1e-5
+
+
+def _dense_moe_oracle(cfg, p, x):
+    """Compute-all-experts reference (no capacity, no dropping)."""
+    logits = x.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    w, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    w = w / jnp.clip(w.sum(-1, keepdims=True), 1e-9)
+    gate = jnp.einsum("bsd,edf->besf", x, p["w_gate"])
+    up = jnp.einsum("bsd,edf->besf", x, p["w_up"])
+    hid = jax.nn.silu(gate) * up
+    out_all = jnp.einsum("besf,efd->besd", hid, p["w_down"])   # (B,E,S,d)
+    onehot = jax.nn.one_hot(idx, cfg.n_experts)                 # (B,S,k,E)
+    comb = jnp.einsum("bske,bsk->bse", onehot, w)
+    return jnp.einsum("besd,bse->bsd", out_all, comb)
+
+
+def test_dispatch_matches_dense_oracle_with_big_capacity():
+    cfg = _cfg(capacity_factor=64.0)      # no drops
+    rng = np.random.default_rng(2)
+    p = {k: v for k, v in jax.tree.map(
+        lambda t: t.value,
+        moe.moe_init(cfg, jax.random.PRNGKey(0)),
+        is_leaf=lambda x: hasattr(x, "axes")).items()}
+    x = jnp.asarray(rng.standard_normal((2, 8, cfg.d_model)), jnp.float32)
+    y, aux = moe.moe_apply(cfg, p, x)
+    y_ref = _dense_moe_oracle(cfg, p, x)
+    err = float(jnp.max(jnp.abs(y - y_ref)))
+    assert err < 1e-4, err
+    assert float(aux) > 0
+
+
+def test_capacity_drops_deterministic():
+    cfg = _cfg(capacity_factor=0.25)
+    rng = np.random.default_rng(3)
+    p = jax.tree.map(lambda t: t.value,
+                     moe.moe_init(cfg, jax.random.PRNGKey(1)),
+                     is_leaf=lambda x: hasattr(x, "axes"))
+    x = jnp.asarray(rng.standard_normal((2, 16, cfg.d_model)), jnp.float32)
+    y1, _ = moe.moe_apply(cfg, p, x)
+    y2, _ = moe.moe_apply(cfg, p, x)
+    assert jnp.array_equal(y1, y2)
+
+
+def test_moe_grads_finite():
+    cfg = _cfg()
+    p = jax.tree.map(lambda t: t.value,
+                     moe.moe_init(cfg, jax.random.PRNGKey(2)),
+                     is_leaf=lambda x: hasattr(x, "axes"))
+    x = jnp.asarray(np.random.default_rng(4).standard_normal(
+        (2, 8, cfg.d_model)), jnp.float32)
+
+    def loss(p, x):
+        y, aux = moe.moe_apply(cfg, p, x)
+        return jnp.sum(y ** 2) + 0.01 * aux
+
+    g = jax.grad(loss)(p, x)
+    assert all(np.isfinite(np.asarray(t)).all() for t in jax.tree.leaves(g))

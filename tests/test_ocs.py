@@ -1,0 +1,81 @@
+"""Protocol-level properties: OCS contention == distributed argmax."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import grid, random_floats, sweep
+from repro.core import channel, ocs
+
+
+@pytest.mark.parametrize("bits", [8, 16])
+def test_protocol_equals_argmax_oracle(bits):
+    def prop(case):
+        n, k, seed = case["n"], case["k"], case["seed"]
+        h = jnp.asarray(random_floats(seed, (n, k), specials=False))
+        res = ocs.ocs_maxpool(h, bits=bits)
+        w, v, c = ocs.reference_maxpool(h, bits)
+        assert np.array_equal(np.asarray(res.winner), np.asarray(w))
+        assert np.array_equal(np.asarray(res.pooled_code), np.asarray(c))
+        assert np.array_equal(np.asarray(res.value), np.asarray(v))
+    sweep(prop, list(grid(n=[2, 5, 16], k=[1, 7, 33], seed=[0, 1, 2])))
+
+
+def test_tie_break_lowest_index():
+    h0 = jnp.asarray(random_floats(0, (1, 16), specials=False))
+    h = jnp.concatenate([h0, h0, h0], axis=0)       # all workers tied
+    res = ocs.ocs_maxpool(h, bits=16)
+    assert np.all(np.asarray(res.winner) == 0)
+    assert np.all(np.asarray(res.ties) == 3)
+
+
+def test_contention_slot_count():
+    """K sub-frames x (D + id bits) sub-slots — paper Alg. 1 accounting."""
+    n, k, bits = 4, 10, 8
+    h = jnp.asarray(random_floats(1, (n, k), specials=False))
+    res = ocs.ocs_maxpool(h, bits=bits)
+    id_bits = 2    # ceil(log2(4))
+    assert int(res.contention_slots) == k * (bits + id_bits)
+    assert int(res.payload_tx) == k
+    assert int(res.concat_payload_tx) == n * k
+
+
+def test_single_payload_per_subframe_independent_of_n():
+    """The paper's O(K) claim: payload count does not grow with N."""
+    k = 16
+    for n in (2, 8, 32):
+        h = jnp.asarray(random_floats(n, (n, k), specials=False))
+        res = ocs.ocs_maxpool(h, bits=8)
+        assert int(res.payload_tx) == k
+
+
+def test_multichannel_latency_divides():
+    h = jnp.asarray(random_floats(2, (4, 32), specials=False))
+    r1 = ocs.ocs_maxpool(h, bits=8)
+    r4 = ocs.ocs_maxpool_multichannel(h, bits=8, n_channels=4)
+    assert int(r4.contention_slots) == -(-int(r1.contention_slots) // 4)
+    assert np.array_equal(np.asarray(r1.winner), np.asarray(r4.winner))
+
+
+def test_comm_load_scaling():
+    """Uplink messages: fedocs O(K) vs concat/mean O(N*K)."""
+    k = 64
+    for n in (4, 9, 64):
+        f = channel.ocs_load(n, k, bits=16)
+        c = channel.concat_load(n, k)
+        m = channel.mean_load(n, k)
+        assert f.uplink_payload_msgs == k
+        assert c.uplink_payload_msgs == n * k
+        assert m.uplink_payload_msgs == n * k
+        assert f.downlink_msgs == k            # single gradient broadcast
+        assert c.downlink_msgs == n * k
+
+
+def test_tp_fusion_bytes_model():
+    """ICI analytic model: concat costs ~N x the max/sum all-reduce."""
+    k, n = 4096, 16
+    ar = channel.tp_fusion_bytes("max", k, n)
+    ag = channel.tp_fusion_bytes("concat", k, n)
+    q8 = channel.tp_fusion_bytes("max_q8", k, n)
+    assert ag / ar == pytest.approx(n / 2, rel=0.1)
+    assert q8 == ar // 2

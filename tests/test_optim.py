@@ -1,0 +1,90 @@
+"""Optimizer correctness vs a NumPy reference; schedules; clipping."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import optimizers, schedules
+
+
+def _numpy_adamw(params, grads, steps, lr, b1, b2, eps, wd):
+    m = {k: np.zeros_like(v) for k, v in params.items()}
+    v_ = {k: np.zeros_like(v) for k, v in params.items()}
+    p = {k: v.copy() for k, v in params.items()}
+    for t in range(1, steps + 1):
+        for k in p:
+            g = grads[k]
+            m[k] = b1 * m[k] + (1 - b1) * g
+            v_[k] = b2 * v_[k] + (1 - b2) * g * g
+            mh = m[k] / (1 - b1 ** t)
+            vh = v_[k] / (1 - b2 ** t)
+            p[k] = p[k] - lr * (mh / (np.sqrt(vh) + eps) + wd * p[k])
+    return p
+
+
+def test_adamw_matches_numpy_reference():
+    rng = np.random.default_rng(0)
+    params = {"a": rng.standard_normal((4, 4)).astype(np.float32),
+              "b": rng.standard_normal((8,)).astype(np.float32)}
+    grads = {k: rng.standard_normal(v.shape).astype(np.float32)
+             for k, v in params.items()}
+    lr, b1, b2, eps, wd = 1e-2, 0.9, 0.95, 1e-8, 0.1
+    opt = optimizers.adamw(schedules.constant(lr), b1=b1, b2=b2, eps=eps,
+                           weight_decay=wd, max_grad_norm=None)
+    jp = {k: jnp.asarray(v) for k, v in params.items()}
+    jg = {k: jnp.asarray(v) for k, v in grads.items()}
+    state = opt.init(jp)
+    for _ in range(3):
+        jp, state, _ = opt.update(jg, state, jp)
+    ref = _numpy_adamw(params, grads, 3, lr, b1, b2, eps, wd)
+    for k in params:
+        assert np.allclose(np.asarray(jp[k]), ref[k], atol=1e-5), k
+
+
+def test_grad_clipping():
+    g = {"w": jnp.full((10,), 10.0)}
+    clipped, norm = optimizers.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(1000.0))
+    assert float(optimizers.global_norm(clipped)) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_sgd_momentum_descends():
+    opt = optimizers.sgd(schedules.constant(0.05), momentum=0.9)
+    p = {"w": jnp.asarray([5.0])}
+    s = opt.init(p)
+    losses = []
+    for _ in range(150):
+        g = {"w": 2 * p["w"]}
+        p, s, _ = opt.update(g, s, p)
+        losses.append(float(p["w"][0] ** 2))
+    assert losses[-1] < 1e-3
+
+
+def test_wsd_schedule_phases():
+    f = schedules.wsd(1.0, warmup=10, stable=30, decay=10)
+    assert float(f(0)) == 0.0
+    assert float(f(5)) == pytest.approx(0.5)
+    assert float(f(20)) == pytest.approx(1.0)
+    assert float(f(39)) == pytest.approx(1.0)
+    assert float(f(50)) < 0.05
+    # monotone within phases
+    xs = [float(f(s)) for s in range(0, 10)]
+    assert all(b >= a for a, b in zip(xs, xs[1:]))
+
+
+def test_cosine_schedule_endpoints():
+    f = schedules.linear_warmup_cosine(2.0, warmup=5, total=50,
+                                       final_frac=0.1)
+    assert float(f(5)) == pytest.approx(2.0)
+    assert float(f(50)) == pytest.approx(0.2, rel=1e-3)
+
+
+def test_for_arch_minicpm_is_wsd():
+    f = schedules.for_arch("minicpm-2b", 1.0, 1000)
+    g = schedules.for_arch("glm4-9b", 1.0, 1000)
+    # WSD has a flat plateau; cosine doesn't
+    mid = [float(f(s)) for s in (400, 500, 600)]
+    assert mid[0] == mid[1] == mid[2] == pytest.approx(1.0)
+    cm = [float(g(s)) for s in (400, 500, 600)]
+    assert cm[0] > cm[1] > cm[2]

@@ -1,0 +1,71 @@
+"""Properties of the Eq.-7 monotone quantizer."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import random_floats, seeds, sweep
+from repro.core import quantize as qz
+
+
+def test_monotone_code_total_order():
+    def prop(seed):
+        x = np.sort(np.unique(random_floats(seed, (512,))))
+        c = np.asarray(qz.monotone_code(jnp.asarray(x)))
+        assert np.all(np.diff(c.astype(np.int64)) > 0), \
+            "code must be strictly increasing in value"
+    sweep(prop, list(seeds(10)), "seed")
+
+
+def test_monotone_roundtrip():
+    def prop(seed):
+        x = random_floats(seed, (256,))
+        c = qz.monotone_code(jnp.asarray(x))
+        back = np.asarray(qz.monotone_decode(c, jnp.float32))
+        assert np.array_equal(back, x)
+    sweep(prop, list(seeds(10)), "seed")
+
+
+@pytest.mark.parametrize("bits", [4, 8, 12, 16, 24, 32])
+def test_quantize_order_preserving(bits):
+    # +0.0 canonicalization: the order embedding ranks -0.0 below +0.0
+    # (IEEE comparison treats them equal; harmless since both decode to 0).
+    x = np.sort(random_floats(3, (1024,)) + 0.0)
+    q = np.asarray(qz.quantize(jnp.asarray(x), bits)).astype(np.int64)
+    assert np.all(np.diff(q) >= 0), "D-bit codes must be non-decreasing"
+
+
+@pytest.mark.parametrize("bits", [8, 16])
+def test_dequantize_round_toward_negative(bits):
+    x = random_floats(7, (512,))
+    q = qz.quantize(jnp.asarray(x), bits)
+    d = np.asarray(qz.dequantize(q, bits, jnp.float32))
+    assert np.all(d <= x + 1e-30)
+
+
+@pytest.mark.parametrize("bits", [8, 16])
+def test_max_commutes_with_quantization(bits):
+    """The core soundness fact behind the quantized max collective."""
+    def prop(seed):
+        h = random_floats(seed, (8, 64))
+        codes = qz.quantize(jnp.asarray(h), bits)
+        # argmax on codes is a valid argmax on values at D-bit resolution
+        code_win = np.asarray(jnp.max(codes, axis=0))
+        val_win_code = np.asarray(
+            qz.quantize(jnp.asarray(h.max(axis=0)), bits))
+        assert np.array_equal(code_win, val_win_code)
+    sweep(prop, list(seeds(10)), "seed")
+
+
+def test_bf16_paths():
+    x = jnp.asarray(random_floats(0, (128,)), jnp.bfloat16)
+    c = qz.monotone_code(x)
+    assert c.dtype == jnp.uint16
+    back = qz.monotone_decode(c, jnp.bfloat16)
+    assert jnp.array_equal(back, x)
+
+
+def test_backoff_strictly_decreasing():
+    x = np.sort(np.unique(random_floats(1, (256,))))
+    g = np.asarray(qz.backoff_code(jnp.asarray(x), 16)).astype(np.int64)
+    assert np.all(np.diff(g) <= 0)

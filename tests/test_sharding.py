@@ -1,0 +1,70 @@
+"""Sharding substrate: rule resolution, divisibility fallback, ZeRO axes."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_debug_mesh, rules_for
+from repro.parallel import sharding as sh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # single-device "mesh" with both axes size 1 (host has 1 device)
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_resolve_axes_drops_absent_mesh_axes(mesh):
+    spec = sh.resolve_axes(("batch", "seq", "embed"), mesh)
+    assert spec == P("data", None, None)    # pod absent -> dropped
+
+
+def test_sharding_for_shape_divisibility(mesh):
+    # 'model' has size 1 here so everything divides; exercise the logic
+    # with an explicit fake-size check instead
+    sizes = sh.mesh_axis_sizes(mesh)
+    assert sizes == {"data": 1, "model": 1}
+    s = sh.sharding_for_shape(("vocab", "embed"), (122753, 64), mesh)
+    assert s.spec == P("model", None)       # divisible by 1
+
+
+def test_zero_axes_picks_largest_unsharded_divisible():
+    axes = sh.zero_axes(("worker", None, None), (16, 100, 64), fsdp_size=4)
+    assert axes == ("worker", "fsdp", None)
+    axes = sh.zero_axes((None, None), (7, 13), fsdp_size=4)
+    assert axes == (None, None)             # nothing divisible -> unchanged
+    axes = sh.zero_axes(("embed",), (64,), fsdp_size=1)
+    assert axes == ("embed",)
+
+
+def test_split_and_retag():
+    tree = {"a": sh.Tagged(jnp.zeros((2, 3)), ("x", "y"))}
+    values, axes = sh.split_tree(tree)
+    assert values["a"].shape == (2, 3)
+    assert axes["a"] == ("x", "y")
+    stacked = sh.retag_stacked(tree, "layers")
+    assert stacked["a"].axes == ("layers", "x", "y")
+
+
+def test_constrain_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    assert sh.constrain(x, ("batch", "embed")) is x
+
+
+def test_rules_for_long_context(mesh):
+    r = rules_for("long_500k", 1, mesh)
+    assert r["batch"] is None
+    assert r["kv_seq"] == ("data",)
+    r2 = rules_for("train_4k", 256, mesh)
+    assert r2["batch"] == ("pod", "data")
+    assert r2["kv_seq"] is None
+
+
+def test_tagged_is_pytree():
+    t = sh.Tagged(jnp.ones((2,)), ("embed",))
+    leaves = jax.tree.leaves(t)
+    assert len(leaves) == 1
+    mapped = jax.tree.map(lambda x: x * 2, t)
+    assert isinstance(mapped, sh.Tagged)
+    assert mapped.axes == ("embed",)

@@ -1,0 +1,99 @@
+"""Paper's vertical learner: shapes, losses, Table-I method registry."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregators, vertical
+from repro.core.vertical import VerticalConfig
+
+
+def _cfg(**kw):
+    base = dict(n_workers=4, input_dim=32, encoder_dims=(16,), embed_dim=8,
+                head_dims=(16,), output_dim=10, task="classification")
+    base.update(kw)
+    return VerticalConfig(**base)
+
+
+def _data(cfg, b=6, seed=0):
+    rng = np.random.default_rng(seed)
+    views = jnp.asarray(rng.standard_normal(
+        (cfg.n_workers, b, cfg.input_dim)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, cfg.output_dim, (b,)), jnp.int32)
+    return views, labels
+
+
+@pytest.mark.parametrize("agg", ["max", "mean", "concat", "sum", "max_q8"])
+def test_forward_shapes_all_aggregations(agg):
+    cfg = _cfg(aggregation=agg)
+    params = vertical.init(cfg, jax.random.PRNGKey(0))
+    views, labels = _data(cfg)
+    pred = vertical.forward(cfg, params, views)
+    assert pred.shape == (6, 10)
+    loss, m = vertical.loss_fn(cfg, params, views, labels)
+    assert np.isfinite(float(loss))
+    g = jax.grad(lambda p: vertical.loss_fn(cfg, p, views, labels)[0])(params)
+    assert all(np.isfinite(np.asarray(t)).all() for t in jax.tree.leaves(g))
+
+
+def test_prediction_level_baselines():
+    cfg = _cfg(prediction_level=True)
+    params = vertical.init(cfg, jax.random.PRNGKey(1))
+    views, labels = _data(cfg)
+    pred = vertical.forward(cfg, params, views)        # avg worker preds
+    assert pred.shape == (6, 10)
+    assert np.allclose(np.asarray(pred.sum(-1)), 1.0, atol=1e-5)
+    per = vertical.per_worker_predictions(cfg, params, views)
+    assert per.shape == (4, 6, 10)
+
+
+def test_reconstruction_loss():
+    cfg = _cfg(task="reconstruction", output_dim=32)
+    params = vertical.init(cfg, jax.random.PRNGKey(2))
+    views, _ = _data(cfg)
+    loss, m = vertical.loss_fn(cfg, params, views, views[0])
+    assert float(m["nll"]) == pytest.approx(0.5 * float(m["mse"]))
+
+
+def test_table1_registry_complete():
+    base = _cfg()
+    cfgs = aggregators.all_configs(base)
+    assert set(cfgs) == set(aggregators.TABLE1_METHODS)
+    assert cfgs["fedocs"].aggregation == "max"
+    assert cfgs["concat_workers_embed"].aggregation == "concat"
+    assert cfgs["concat_workers_embed"].head_input_dim() == 4 * 8
+    assert cfgs["fedocs"].head_input_dim() == 8
+    assert cfgs["avg_workers_preds"].prediction_level
+
+
+def test_comm_load_per_method():
+    base = _cfg()
+    f = vertical.comm_load(aggregators.table1_config("fedocs", base))
+    c = vertical.comm_load(
+        aggregators.table1_config("concat_workers_embed", base))
+    assert f.uplink_payload_msgs * base.n_workers == c.uplink_payload_msgs
+
+
+def test_training_reduces_loss():
+    from repro.optim import optimizers, schedules
+    cfg = _cfg(task="reconstruction", output_dim=32)
+    params = vertical.init(cfg, jax.random.PRNGKey(3))
+    views, _ = _data(cfg, b=32, seed=5)
+    target = views[0]
+    opt = optimizers.adamw(schedules.constant(1e-2))
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state):
+        loss, g = jax.value_and_grad(
+            lambda p: vertical.loss_fn(cfg, p, views, target)[0])(params)
+        params, state, _ = opt.update(g, state, params)
+        return params, state, loss
+
+    first = None
+    for i in range(60):
+        params, state, loss = step(params, state)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < 0.5 * first
