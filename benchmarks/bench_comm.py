@@ -1,9 +1,15 @@
 """Communication-load benchmark (the paper's §I O(1/N) claim).
 
-Three layers of evidence:
+Four layers of evidence:
   1. protocol accounting (channel.py): uplink messages vs N,
-  2. the OCS simulator's slot/transmission counters on random features,
-  3. ICI collective bytes for the TP fusion modes — analytic ring model
+  2. the OCS simulator's slot/transmission counters on random features —
+     all N in ONE jitted sweep (repro.sim.sweep) instead of per-round
+     Python dispatch; the accounting columns are bit-for-bit identical to
+     the historical per-call rows (property-tested in tests/test_sweep.py),
+  3. noisy-sensing accuracy-degradation curves from the same engine's
+     imperfect-carrier-sensing core (one compilation for the whole
+     p_miss axis),
+  4. ICI collective bytes for the TP fusion modes — analytic ring model
      cross-checked against the dry-run's parsed HLO collectives when the
      artifacts exist (fedocs max/q8 vs concat vs sum).
 """
@@ -12,14 +18,17 @@ from __future__ import annotations
 
 import glob
 import json
-import os
 import time
 from typing import List
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import channel, ocs
+from repro.core import channel
+from repro.sim import sweep as sim_sweep
+from repro.sim.scenarios import Scenario, scenario_grid
+
+SIM_WORKERS = (4, 16, 64)
+NOISY_P_MISS = (0.0, 0.01, 0.02, 0.05, 0.1)
 
 
 def run() -> List[str]:
@@ -33,19 +42,38 @@ def run() -> List[str]:
             f"fedocs={f.uplink_payload_msgs};concat={c.uplink_payload_msgs};"
             f"ratio={c.uplink_payload_msgs / f.uplink_payload_msgs:.0f}")
 
-    # protocol simulation: measured transmissions on random features
+    # protocol simulation: measured transmissions on random features.
+    # Replays the historical rng stream (default_rng(0), one (n, k) draw per
+    # N) through one jitted sweep — same accounting columns, one dispatch.
     rng = np.random.default_rng(0)
-    for n in (4, 16, 64):
-        h = jnp.asarray(rng.standard_normal((n, k)).astype(np.float32))
-        t0 = time.time()
-        res = ocs.ocs_maxpool(h, bits=16)
-        dt = (time.time() - t0) * 1e6
+    h_by = [rng.standard_normal((n, k)).astype(np.float32)[None]
+            for n in SIM_WORKERS]
+    scens = [Scenario(f"bench/N{n}", n_workers=n) for n in SIM_WORKERS]
+    t0 = time.time()
+    sw = sim_sweep.run_sweep(scens, k_elems=k, rounds=1,
+                             h_by_scenario=h_by, include_noisy=False)
+    dt = (time.time() - t0) * 1e6 / len(SIM_WORKERS)
+    for i, n in enumerate(SIM_WORKERS):
+        res = sw.clean_cell(i)
         rows.append(
             f"comm/ocs_sim/N{n},{dt:.0f},"
             f"payload_tx={int(res.payload_tx)};"
             f"blocking_tx={int(res.blocking_tx)};"
             f"slots={int(res.contention_slots)};"
             f"concat_tx={int(res.concat_payload_tx)}")
+
+    # noisy-sensing degradation: accuracy/collision curves over the p_miss
+    # axis, all cells in one compilation of the noisy engine.
+    noisy_grid = scenario_grid(n_workers=(16,), bits=(16,),
+                               p_miss=NOISY_P_MISS, name_prefix="bench")
+    nsw = sim_sweep.run_sweep(noisy_grid, k_elems=k, rounds=4, seed=1,
+                              include_clean=False)
+    for i, s in enumerate(noisy_grid):
+        correct = float(np.asarray(nsw.noisy.correct)[i].mean())
+        coll = float(np.asarray(nsw.noisy.collisions)[i].mean())
+        rows.append(
+            f"comm/ocs_noisy/N{s.n_workers}_p{s.p_miss:g},0,"
+            f"frac_correct={correct:.3f};collisions={coll:.1f}")
 
     # ICI fusion bytes: analytic ring model
     d_model, n_shards = 4096, 16

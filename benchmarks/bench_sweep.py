@@ -1,0 +1,58 @@
+"""Scenario-sweep benchmark: the named wireless scenarios plus a dense grid.
+
+Every cell — workers x bits x p_miss x n_channels — is evaluated by the
+batched engine in ``repro.sim.sweep``; the whole table costs one compiled
+dispatch per engine per ``bits`` value, and the final row reports the jit
+trace counters so CI can assert compilation stays O(1) in the grid size.
+
+  PYTHONPATH=src python -m benchmarks.bench_sweep           # full sweep
+  PYTHONPATH=src python -m benchmarks.bench_sweep --smoke   # CI smoke tier
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+from typing import List
+
+from repro.sim import results as sim_results
+from repro.sim import scenarios as sim_scenarios
+from repro.sim import sweep as sim_sweep
+
+
+def run(smoke: bool = False) -> List[str]:
+    k_elems = 16 if smoke else 64
+    rounds = 2 if smoke else 8
+
+    named = [sim_scenarios.get(n) for n in sim_scenarios.names()]
+    grid = sim_scenarios.scenario_grid(
+        n_workers=(4, 16) if smoke else (4, 16, 64),
+        bits=(8, 16),
+        p_miss=(0.0, 0.05) if smoke else (0.0, 0.01, 0.05, 0.1),
+        n_channels=(1,) if smoke else (1, 4),
+    )
+    cells = named + grid
+
+    sim_sweep.reset_trace_counts()
+    t0 = time.time()
+    sw = sim_sweep.run_sweep(cells, k_elems=k_elems, rounds=rounds)
+    records = sim_results.summarize(sw)
+    dt_us = (time.time() - t0) * 1e6 / len(cells)
+    traces = sim_sweep.trace_counts()
+
+    rows = sim_results.to_rows(records)
+    rows.append(
+        f"sweep/meta,{dt_us:.0f},"
+        f"cells={len(cells)};rounds={rounds};k={k_elems};"
+        f"compiles_clean={traces['clean']};compiles_noisy={traces['noisy']}")
+    n_bits = len({s.bits for s in cells})
+    if traces["clean"] > n_bits or traces["noisy"] > n_bits:
+        raise RuntimeError(
+            f"sweep engine recompiled per cell: {traces} for {n_bits} bit "
+            "depths — batching regression")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(smoke="--smoke" in sys.argv):
+        print(r)

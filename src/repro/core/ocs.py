@@ -20,6 +20,19 @@ the *lowest-indexed* tied worker wins (this is the fusion center ACK-ing a
 single decodable preamble).  The winner then transmits its payload
 (Alg. 1 line 9).
 
+Two layers:
+
+  * ``ocs_maxpool_core`` / ``ocs_maxpool_noisy_core`` — batched cores.  They
+    take a padded worker axis plus a boolean ``mask`` of real workers and a
+    *traced* ``id_bits``, so one compiled computation can evaluate many
+    ``(N, p_miss)`` scenarios via ``vmap`` (see ``repro.sim.sweep``).  The
+    bit-slot scan runs a static ``bits + max_id_bits`` sub-slots; slots past
+    the scenario's ``bits + id_bits`` are inert, so the channel accounting is
+    bit-for-bit identical to an unpadded run.
+  * ``ocs_maxpool`` / ``ocs_maxpool_noisy`` — the single-round convenience
+    wrappers (all workers real, exact scan length), used by the tests and
+    the protocol-equivalence oracles.
+
 The simulator is fully vectorized (a `lax.scan` over bit-slots) and jittable;
 it returns both the selection result and the channel accounting used by
 ``benchmarks/bench_comm.py`` to reproduce the paper's O(K)-vs-O(N·K) claim.
@@ -55,10 +68,119 @@ class OCSResult:
     concat_payload_tx: jax.Array  # () int32 — N*K payloads (concat / mean-pool)
 
 
-def _id_codes(n_workers: int, id_bits: int) -> jax.Array:
-    """Per-worker tie-break codes: complement of index => lowest index wins max."""
+@dataclasses.dataclass(frozen=True)
+class NoisyOCSResult:
+    """Outcome under imperfect sensing (the paper assumes error-free §IV)."""
+
+    winner: jax.Array            # (K,) int32 — final payload transmitter
+    correct: jax.Array           # (K,) bool  — winner holds the true max code
+    collisions: jax.Array        # ()  int32  — sub-frames needing re-contention
+    rounds: jax.Array            # ()  int32  — contention rounds used
+    contention_slots: jax.Array  # ()  int32
+
+
+# Registered as pytrees so the batched cores can return them through
+# jit/vmap and the sweep engine can stack them along scenario/round axes.
+for _cls in (OCSResult, NoisyOCSResult):
+    jax.tree_util.register_dataclass(
+        _cls,
+        data_fields=[f.name for f in dataclasses.fields(_cls)],
+        meta_fields=[],
+    )
+
+
+def host_id_bits(n_workers: int) -> int:
+    """ID sub-slots needed to tie-break N workers: ceil(log2(max(N, 2)))."""
+    return max(1, math.ceil(math.log2(max(n_workers, 2))))
+
+
+def _id_codes(n_workers: int, id_bits: jax.Array) -> jax.Array:
+    """Per-worker tie-break codes: complement of index => lowest index wins max.
+
+    ``id_bits`` may be traced; codes for indices >= 2**id_bits wrap around in
+    uint32 — those rows must be masked out by the caller (padded workers).
+    """
     idx = jnp.arange(n_workers, dtype=jnp.uint32)
-    return (jnp.uint32((1 << id_bits) - 1) - idx).astype(jnp.uint32)
+    top = (jnp.uint32(1) << jnp.asarray(id_bits).astype(jnp.uint32)) - jnp.uint32(1)
+    return top - idx
+
+
+def ocs_maxpool_core(h: jax.Array, mask: jax.Array, id_bits: jax.Array, *,
+                     bits: int, max_id_bits: int) -> OCSResult:
+    """Batched Algorithm 1 core over a padded worker axis.
+
+    Args:
+      h:           (N_max, K) worker feature matrix; padded rows are ignored.
+      mask:        (N_max,) bool — True for real workers (>=1 must be real).
+      id_bits:     () int32 — tie-break sub-slots for the *real* worker count
+                   (``host_id_bits(n)``); may be a traced value so scenarios
+                   with different N share one compilation.
+      bits:        D, the backoff quantization depth (static).
+      max_id_bits: static scan-length bound; must satisfy
+                   ``max_id_bits >= id_bits`` for every batched scenario.
+
+    Returns:
+      OCSResult with accounting identical, bit for bit, to an unpadded
+      ``ocs_maxpool`` run at the real worker count (property-tested in
+      ``tests/test_sweep.py``): sub-slots past ``bits + id_bits`` are gated
+      off, so neither ``contention_slots`` nor ``blocking_tx`` see them.
+    """
+    if bits + max_id_bits > 32:
+        raise ValueError(
+            f"contention word overflows uint32: bits={bits} + "
+            f"max_id_bits={max_id_bits} > 32")
+    n_max, k_elems = h.shape
+    qcodes = qz.quantize(h, bits)                              # (N_max, K)
+    codes = qcodes.astype(jnp.uint32)
+    id_bits = jnp.asarray(id_bits, jnp.int32)
+    ids = _id_codes(n_max, id_bits)                            # (N_max,)
+    # Full contention word: [ value code | id code ] — MSB-first tournament
+    # over this word is (a) Alg. 1 for the top `bits` slots, (b) the ACK
+    # tie-break for the bottom `id_bits` slots.
+    word = (codes << id_bits.astype(jnp.uint32)) | ids[:, None]  # (N_max, K)
+    total_bits = bits + id_bits                                # () int32
+
+    def slot(carry, d):
+        alive, slots, blocks = carry
+        active = d < total_bits
+        shift = jnp.maximum(total_bits - 1 - d, 0).astype(jnp.uint32)
+        bit = (word >> shift) & jnp.uint32(1)                  # (N_max, K)
+        tx = alive & (bit == 1) & active                       # blocking transmitters
+        any_tx = jnp.any(tx, axis=0, keepdims=True)            # (1, K)
+        # sensing workers (bit==0) quit iff someone transmitted (Alg.1 l.3-4);
+        # otherwise everyone continues (Alg.1 l.6-7).  Inactive (padding)
+        # slots transmit nothing, so they are no-ops.
+        alive = alive & (tx | ~any_tx)
+        slots = slots + jnp.where(active, k_elems, 0).astype(jnp.int32)
+        blocks = blocks + jnp.sum(tx, dtype=jnp.int32)
+        return (alive, slots, blocks), None
+
+    alive0 = jnp.broadcast_to(mask[:, None], (n_max, k_elems))
+    (alive, slots, blocks), _ = jax.lax.scan(
+        slot,
+        (alive0, jnp.int32(0), jnp.int32(0)),
+        jnp.arange(bits + max_id_bits),
+    )
+
+    # After value+id slots exactly one real worker survives per sub-frame.
+    winner = jnp.argmax(alive, axis=0).astype(jnp.int32)       # (K,)
+    at_max = (codes == jnp.max(jnp.where(mask[:, None], codes, 0),
+                               axis=0)[None, :]) & mask[:, None]
+    pooled_code = jnp.max(jnp.where(mask[:, None], codes, 0), axis=0)
+    ties = jnp.sum(at_max, axis=0).astype(jnp.int32)
+    value = jnp.take_along_axis(h, winner[None, :], axis=0)[0]
+    n_workers = jnp.sum(mask, dtype=jnp.int32)
+
+    return OCSResult(
+        winner=winner,
+        value=value,
+        pooled_code=pooled_code.astype(qcodes.dtype),
+        ties=ties,
+        contention_slots=slots,
+        blocking_tx=blocks,
+        payload_tx=jnp.int32(k_elems),
+        concat_payload_tx=n_workers * k_elems,
+    )
 
 
 def ocs_maxpool(h: jax.Array, bits: int = 16) -> OCSResult:
@@ -75,52 +197,11 @@ def ocs_maxpool(h: jax.Array, bits: int = 16) -> OCSResult:
     """
     if h.ndim != 2:
         raise ValueError(f"h must be (N, K), got {h.shape}")
-    n_workers, k_elems = h.shape
-    id_bits = max(1, math.ceil(math.log2(max(n_workers, 2))))
-
-    codes = qz.quantize(h, bits).astype(jnp.uint32)            # (N, K)
-    ids = _id_codes(n_workers, id_bits)                        # (N,)
-    # Full contention word: [ value code | id code ] — MSB-first tournament
-    # over this word is (a) Alg. 1 for the top `bits` slots, (b) the ACK
-    # tie-break for the bottom `id_bits` slots.
-    word = (codes << id_bits) | ids[:, None].astype(jnp.uint32)  # (N, K)
-    total_bits = bits + id_bits
-
-    def slot(carry, d):
-        alive, slots, blocks = carry
-        bit = (word >> (total_bits - 1 - d)) & 1               # (N, K)
-        tx = alive & (bit == 1)                                # blocking transmitters
-        any_tx = jnp.any(tx, axis=0, keepdims=True)            # (1, K)
-        # sensing workers (bit==0) quit iff someone transmitted (Alg.1 l.3-4);
-        # otherwise everyone continues (Alg.1 l.6-7).
-        alive = alive & (tx | ~any_tx)
-        slots = slots + k_elems                                # one sub-slot per sub-frame
-        blocks = blocks + jnp.sum(tx, dtype=jnp.int32)
-        return (alive, slots, blocks), None
-
-    alive0 = jnp.ones((n_workers, k_elems), dtype=bool)
-    (alive, slots, blocks), _ = jax.lax.scan(
-        slot,
-        (alive0, jnp.int32(0), jnp.int32(0)),
-        jnp.arange(total_bits),
-    )
-
-    # After value+id slots exactly one worker survives per sub-frame.
-    winner = jnp.argmax(alive, axis=0).astype(jnp.int32)       # (K,)
-    pooled_code = jnp.max(codes, axis=0)
-    ties = jnp.sum(codes == pooled_code[None, :], axis=0).astype(jnp.int32)
-    value = jnp.take_along_axis(h, winner[None, :], axis=0)[0]
-
-    return OCSResult(
-        winner=winner,
-        value=value,
-        pooled_code=pooled_code.astype(qz.quantize(h, bits).dtype),
-        ties=ties,
-        contention_slots=slots,
-        blocking_tx=blocks,
-        payload_tx=jnp.int32(k_elems),
-        concat_payload_tx=jnp.int32(n_workers * k_elems),
-    )
+    n_workers = h.shape[0]
+    id_bits = host_id_bits(n_workers)
+    return ocs_maxpool_core(
+        h, jnp.ones((n_workers,), dtype=bool), id_bits,
+        bits=bits, max_id_bits=id_bits)
 
 
 def ocs_maxpool_multichannel(h: jax.Array, bits: int = 16,
@@ -154,15 +235,77 @@ def reference_maxpool(h: jax.Array, bits: int):
 # beyond-paper: imperfect carrier sensing
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass(frozen=True)
-class NoisyOCSResult:
-    """Outcome under imperfect sensing (the paper assumes error-free §IV)."""
+def ocs_maxpool_noisy_core(h: jax.Array, mask: jax.Array, id_bits: jax.Array,
+                           rng: jax.Array, p_miss: jax.Array, *,
+                           bits: int, max_id_bits: int,
+                           max_rounds: int = 3) -> NoisyOCSResult:
+    """Batched imperfect-sensing core (padded N, traced ``id_bits``/``p_miss``).
 
-    winner: jax.Array            # (K,) int32 — final payload transmitter
-    correct: jax.Array           # (K,) bool  — winner holds the true max code
-    collisions: jax.Array        # ()  int32  — sub-frames needing re-contention
-    rounds: jax.Array            # ()  int32  — contention rounds used
-    contention_slots: jax.Array  # ()  int32
+    Same contract as :func:`ocs_maxpool_core`; additionally ``p_miss`` may be
+    a traced scalar, so a whole miss-probability axis of a scenario grid
+    shares one compilation.  With ``max_id_bits == id_bits`` the random-bit
+    consumption matches the historical unbatched implementation exactly.
+    """
+    if bits + max_id_bits > 32:
+        raise ValueError(
+            f"contention word overflows uint32: bits={bits} + "
+            f"max_id_bits={max_id_bits} > 32")
+    n_max, k_elems = h.shape
+    codes = qz.quantize(h, bits).astype(jnp.uint32)
+    id_bits = jnp.asarray(id_bits, jnp.int32)
+    ids = _id_codes(n_max, id_bits)
+    word = (codes << id_bits.astype(jnp.uint32)) | ids[:, None]
+    total_bits = bits + id_bits
+    p_miss = jnp.asarray(p_miss, h.dtype if jnp.issubdtype(h.dtype, jnp.floating)
+                         else jnp.float32)
+
+    def contention_round(alive, key):
+        def slot(carry, d):
+            alive, slots = carry
+            active = d < total_bits
+            shift = jnp.maximum(total_bits - 1 - d, 0).astype(jnp.uint32)
+            bit = (word >> shift) & jnp.uint32(1)
+            tx = alive & (bit == 1) & active
+            any_tx = jnp.any(tx, axis=0, keepdims=True)
+            heard = jax.random.bernoulli(
+                jax.random.fold_in(key, d), 1.0 - p_miss,
+                (n_max, k_elems))
+            # a sensing worker quits only if someone transmitted AND it heard
+            alive = alive & (tx | ~(any_tx & heard))
+            return (alive, slots + jnp.where(active, k_elems, 0).astype(jnp.int32)), None
+
+        (alive, slots), _ = jax.lax.scan(
+            slot, (alive, jnp.int32(0)), jnp.arange(bits + max_id_bits))
+        return alive, slots
+
+    def round_body(carry, r):
+        alive, slots, done = carry
+        key = jax.random.fold_in(rng, r)
+        survivors, round_slots = contention_round(alive, key)
+        n_surv = jnp.sum(survivors, axis=0)               # (K,)
+        collided = n_surv > 1
+        # collided sub-frames re-contend among survivors; resolved keep winner
+        new_done = done | ~collided
+        slots = slots + jnp.where(jnp.any(~done), round_slots, 0)
+        return (survivors, slots, new_done), jnp.sum(collided,
+                                                     dtype=jnp.int32)
+
+    alive0 = jnp.broadcast_to(mask[:, None], (n_max, k_elems))
+    done0 = jnp.zeros((k_elems,), dtype=bool)
+    (alive, slots, done), collisions = jax.lax.scan(
+        round_body, (alive0, jnp.int32(0), done0), jnp.arange(max_rounds))
+
+    winner = jnp.argmax(alive, axis=0).astype(jnp.int32)  # capture: lowest idx
+    true_code = jnp.max(jnp.where(mask[:, None], codes, 0), axis=0)
+    correct = jnp.take_along_axis(codes, winner[None, :], axis=0)[0] \
+        == true_code
+    return NoisyOCSResult(
+        winner=winner,
+        correct=correct,
+        collisions=jnp.sum(collisions),
+        rounds=jnp.int32(max_rounds),
+        contention_slots=slots,
+    )
 
 
 def ocs_maxpool_noisy(h: jax.Array, rng: jax.Array, bits: int = 16,
@@ -182,56 +325,8 @@ def ocs_maxpool_noisy(h: jax.Array, rng: jax.Array, bits: int = 16,
     """
     if h.ndim != 2:
         raise ValueError(f"h must be (N, K), got {h.shape}")
-    n_workers, k_elems = h.shape
-    id_bits = max(1, math.ceil(math.log2(max(n_workers, 2))))
-    codes = qz.quantize(h, bits).astype(jnp.uint32)
-    ids = _id_codes(n_workers, id_bits)
-    word = (codes << id_bits) | ids[:, None].astype(jnp.uint32)
-    total_bits = bits + id_bits
-
-    def contention_round(alive, key):
-        def slot(carry, d):
-            alive, slots = carry
-            bit = (word >> (total_bits - 1 - d)) & 1
-            tx = alive & (bit == 1)
-            any_tx = jnp.any(tx, axis=0, keepdims=True)
-            heard = jax.random.bernoulli(
-                jax.random.fold_in(key, d), 1.0 - p_miss,
-                (n_workers, k_elems))
-            # a sensing worker quits only if someone transmitted AND it heard
-            alive = alive & (tx | ~(any_tx & heard))
-            return (alive, slots + k_elems), None
-
-        (alive, slots), _ = jax.lax.scan(
-            slot, (alive, jnp.int32(0)), jnp.arange(total_bits))
-        return alive, slots
-
-    def round_body(carry, r):
-        alive, slots, done = carry
-        key = jax.random.fold_in(rng, r)
-        survivors, round_slots = contention_round(alive, key)
-        n_surv = jnp.sum(survivors, axis=0)               # (K,)
-        collided = n_surv > 1
-        # collided sub-frames re-contend among survivors; resolved keep winner
-        new_alive = jnp.where(collided[None, :], survivors, survivors)
-        new_done = done | ~collided
-        slots = slots + jnp.where(jnp.any(~done), round_slots, 0)
-        return (new_alive, slots, new_done), jnp.sum(collided,
-                                                     dtype=jnp.int32)
-
-    alive0 = jnp.ones((n_workers, k_elems), dtype=bool)
-    done0 = jnp.zeros((k_elems,), dtype=bool)
-    (alive, slots, done), collisions = jax.lax.scan(
-        round_body, (alive0, jnp.int32(0), done0), jnp.arange(max_rounds))
-
-    winner = jnp.argmax(alive, axis=0).astype(jnp.int32)  # capture: lowest idx
-    true_code = jnp.max(codes, axis=0)
-    correct = jnp.take_along_axis(codes, winner[None, :], axis=0)[0] \
-        == true_code
-    return NoisyOCSResult(
-        winner=winner,
-        correct=correct,
-        collisions=jnp.sum(collisions),
-        rounds=jnp.int32(max_rounds),
-        contention_slots=slots,
-    )
+    n_workers = h.shape[0]
+    id_bits = host_id_bits(n_workers)
+    return ocs_maxpool_noisy_core(
+        h, jnp.ones((n_workers,), dtype=bool), id_bits, rng, p_miss,
+        bits=bits, max_id_bits=id_bits, max_rounds=max_rounds)

@@ -65,24 +65,20 @@ def gpipe(stage_fn: Callable, mesh, axis: str = "stage"):
         # so the replicated out_spec is well-defined on every shard
         return jax.lax.psum(outs, axis)
 
-    from jax import shard_map as _shard_map_mod  # jax>=0.6 top-level
-    shard_map = getattr(jax, "shard_map", None)
-    if shard_map is None:                          # fallback path
-        from jax.experimental.shard_map import shard_map as shard_map
-
     # stage params sharded over `axis` (leading dim == n_stages, local slice
     # squeezed inside), activations replicated
     def stage_local(params, x_micro):
         params_local = jax.tree.map(lambda p: p[0], params)
         return pipelined(params_local, x_micro)
 
-    return shard_map(
-        stage_local,
-        mesh=mesh,
-        in_specs=(P(axis), P()),
-        out_specs=P(),
-        check_vma=False,
-    )
+    kwargs = dict(mesh=mesh, in_specs=(P(axis), P()), out_specs=P())
+    shard_map = getattr(jax, "shard_map", None)
+    if shard_map is None:            # jax<0.6: experimental namespace,
+        from jax.experimental.shard_map import shard_map
+        kwargs["check_rep"] = False  # replication check kwarg predates
+    else:                            # its rename to check_vma
+        kwargs["check_vma"] = False
+    return shard_map(stage_local, **kwargs)
 
 
 def sequential_reference(stage_fn: Callable, stage_params, x_micro):

@@ -1,0 +1,14 @@
+"""Batched OCS scenario-sweep engine.
+
+``scenarios`` — registry of named wireless scenarios and grid builders.
+``sweep``     — the vmap/jit grid runner over the batched protocol cores.
+``results``   — table/JSON emission with channel-accounting merge.
+"""
+
+from repro.sim.scenarios import (  # noqa: F401
+    Scenario, get, names, register, scenario_grid,
+)
+from repro.sim.sweep import (  # noqa: F401
+    SweepResult, run_sweep, reset_trace_counts, trace_counts,
+)
+from repro.sim.results import summarize, to_json, to_rows, write_json  # noqa: F401

@@ -1,0 +1,111 @@
+"""Named wireless scenarios for the OCS sweep engine.
+
+A :class:`Scenario` pins the protocol-side knobs the paper argues over:
+worker count N, backoff quantization depth D (``bits``), the imperfect
+carrier-sensing miss probability (our beyond-paper extension), and the number
+of orthogonal OFDMA channels (paper §III ref [16]).
+
+The registry gives reproducible names to the operating points used by the
+benchmarks; :func:`scenario_grid` builds dense cartesian grids for the
+batched sweep (``repro.sim.sweep``), which evaluates every cell in one
+compiled computation per ``bits`` value.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Sequence
+
+from repro.core.ocs import host_id_bits
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One operating point of the wireless max-pooling channel."""
+
+    name: str
+    n_workers: int
+    bits: int = 16          # D, backoff quantization depth (paper Eq. 7)
+    p_miss: float = 0.0     # per-sub-slot carrier-sensing miss probability
+    n_channels: int = 1     # orthogonal OFDMA channels (latency divider)
+
+    def __post_init__(self):
+        if self.n_workers < 1:
+            raise ValueError(f"{self.name}: n_workers must be >= 1")
+        if not (1 <= self.bits <= 32):
+            raise ValueError(f"{self.name}: bits must be in [1, 32]")
+        if self.bits + host_id_bits(self.n_workers) > 32:
+            raise ValueError(
+                f"{self.name}: bits={self.bits} + "
+                f"{host_id_bits(self.n_workers)} tie-break bits overflow the "
+                f"32-bit contention word (reduce bits or n_workers)")
+        if not (0.0 <= self.p_miss < 1.0):
+            raise ValueError(f"{self.name}: p_miss must be in [0, 1)")
+        if self.n_channels < 1:
+            raise ValueError(f"{self.name}: n_channels must be >= 1")
+
+
+_REGISTRY: Dict[str, Scenario] = {}
+
+
+def register(scenario: Scenario, overwrite: bool = False) -> Scenario:
+    """Add a scenario to the global registry (name must be unique)."""
+    if not overwrite and scenario.name in _REGISTRY:
+        raise ValueError(f"scenario {scenario.name!r} already registered")
+    _REGISTRY[scenario.name] = scenario
+    return scenario
+
+
+def get(name: str) -> Scenario:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; known: {sorted(_REGISTRY)}") from None
+
+
+def names() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def scenario_grid(n_workers: Sequence[int],
+                  bits: Sequence[int] = (16,),
+                  p_miss: Sequence[float] = (0.0,),
+                  n_channels: Sequence[int] = (1,),
+                  name_prefix: str = "grid") -> List[Scenario]:
+    """Dense cartesian scenario grid: N x bits x p_miss x n_channels.
+
+    Cell names are deterministic (``grid/N16_b8_p0.02_c4``) so sweep rows are
+    stable across runs.  The grid is *not* auto-registered — pass it straight
+    to ``repro.sim.sweep.run_sweep``.
+    """
+    out = []
+    for n, b, p, c in itertools.product(n_workers, bits, p_miss, n_channels):
+        out.append(Scenario(
+            name=f"{name_prefix}/N{n}_b{b}_p{p:g}_c{c}",
+            n_workers=n, bits=b, p_miss=p, n_channels=c))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# default registry: the operating points the benchmarks report
+# ---------------------------------------------------------------------------
+
+for _s in (
+    # clean-sensing points along the paper's O(K)-vs-O(N*K) axis
+    Scenario("lab_bench",      n_workers=2),
+    Scenario("small_cell",     n_workers=4),
+    Scenario("campus_cell",    n_workers=16),
+    Scenario("dense_cell",     n_workers=64),
+    # coarser backoff codes: fewer contention slots, more ties
+    Scenario("lowrate_sensor", n_workers=16, bits=8),
+    Scenario("massive_iot",    n_workers=64, bits=8),
+    # imperfect carrier sensing (beyond-paper extension)
+    Scenario("noisy_urban",    n_workers=16, p_miss=0.02),
+    Scenario("noisy_dense",    n_workers=64, p_miss=0.05),
+    # OFDMA striping: same transmissions, latency / n_channels
+    Scenario("ofdma_wideband", n_workers=16, n_channels=8),
+    Scenario("ofdma_noisy",    n_workers=64, bits=8, p_miss=0.02, n_channels=4),
+):
+    register(_s)

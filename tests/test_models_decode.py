@@ -13,6 +13,8 @@ from repro.configs import get_reduced
 from repro.models import model as M
 from repro.parallel.sharding import split_tree
 
+pytestmark = pytest.mark.slow    # end-to-end: excluded from the tier-1 CI job
+
 DECODE_ARCHS = ["glm4-9b", "qwen2.5-32b", "minicpm-2b", "xlstm-125m",
                 "jamba-1.5-large-398b", "qwen3-moe-30b-a3b"]
 

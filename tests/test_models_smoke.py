@@ -13,6 +13,8 @@ from repro.configs import ARCH_IDS, get_config, get_reduced
 from repro.models import model as M
 from repro.parallel.sharding import split_tree
 
+pytestmark = pytest.mark.slow    # end-to-end: excluded from the tier-1 CI job
+
 
 def _batch_for(cfg, b=2, s=16, sd=8, seed=0):
     rng = np.random.default_rng(seed)

@@ -1,0 +1,182 @@
+"""Sweep-engine properties: batched grid == per-round protocol, O(1) compiles.
+
+The contract under test (ISSUE: batched OCS scenario-sweep engine):
+  * every grid cell of the batched sweep must equal the unbatched per-round
+    ``ocs_maxpool`` / ``reference_maxpool`` oracles bit-for-bit — including
+    the channel-accounting counters under padded-N masking;
+  * ``p_miss=0`` through the noisy engine reduces to the noise-free protocol;
+  * a >=24-cell (N x bits x p_miss) grid compiles at most once per ``bits``
+    value (trace counters), never once per cell.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import grid, random_floats
+from repro.core import ocs
+from repro.sim import results as sim_results
+from repro.sim import scenarios as sim_scenarios
+from repro.sim import sweep as sim_sweep
+from repro.sim.scenarios import Scenario, scenario_grid
+
+CLEAN_FIELDS = ("winner", "value", "pooled_code", "ties", "contention_slots",
+                "blocking_tx", "payload_tx", "concat_payload_tx")
+
+
+def _grid_cells():
+    return [Scenario(f"t/N{c['n']}_b{c['bits']}", n_workers=c["n"],
+                     bits=c["bits"])
+            for c in grid(n=[2, 5, 16], bits=[8, 16])]
+
+
+def test_batched_sweep_equals_per_round_protocol():
+    """Every (scenario, round) cell == unbatched ocs_maxpool, all counters."""
+    cells = _grid_cells()
+    rounds, k = 3, 17
+    sw = sim_sweep.run_sweep(cells, k_elems=k, rounds=rounds, seed=3,
+                             include_noisy=False)
+    assert sw.n_max == 16                       # N=2/5 cells are padded
+    for i, s in enumerate(cells):
+        for r in range(rounds):
+            h = jnp.asarray(sw.scenario_h(i)[r])
+            ref = ocs.ocs_maxpool(h, bits=s.bits)
+            cell = sw.clean_cell(i, r)
+            for f in CLEAN_FIELDS:
+                got, want = np.asarray(getattr(cell, f)), np.asarray(getattr(ref, f))
+                assert np.array_equal(got, want), \
+                    f"{s.name} round {r}: {f} {got} != {want}"
+
+
+def test_batched_sweep_equals_reference_maxpool():
+    """Selection outcome also matches the pure-jnp argmax oracle."""
+    cells = _grid_cells()
+    sw = sim_sweep.run_sweep(cells, k_elems=33, rounds=2, seed=4,
+                             include_noisy=False)
+    for i, s in enumerate(cells):
+        for r in range(2):
+            h = jnp.asarray(sw.scenario_h(i)[r])
+            w, v, c = ocs.reference_maxpool(h, s.bits)
+            cell = sw.clean_cell(i, r)
+            assert np.array_equal(np.asarray(cell.winner), np.asarray(w))
+            assert np.array_equal(np.asarray(cell.value), np.asarray(v))
+            assert np.array_equal(np.asarray(cell.pooled_code), np.asarray(c))
+
+
+def test_noisy_core_padding_is_inert():
+    """Oversized scans and masked-row contents cannot perturb the noisy core.
+
+    (Bit-exactness vs the *unbatched* noisy wrapper is only possible at equal
+    padded shape: `bernoulli` draws an (N_max, K) block, so the per-worker
+    noise stream depends on N_max by construction.  What must hold is that
+    within one padded shape, the scan-length bound and the padding rows are
+    invisible.)
+    """
+    for seed in range(3):
+        h = jnp.asarray(random_floats(seed, (6, 24), specials=False))
+        key = jax.random.PRNGKey(seed)
+        mask = jnp.arange(16) < 6
+        h_pad = jnp.zeros((16, 24), jnp.float32).at[:6].set(h)
+        # padding rows filled with garbage that would win any contention
+        h_bad = h_pad.at[6:].set(1e9)
+        id_bits = ocs.host_id_bits(6)
+        a = ocs.ocs_maxpool_noisy_core(h_pad, mask, id_bits, key, 0.07,
+                                       bits=12, max_id_bits=id_bits)
+        b = ocs.ocs_maxpool_noisy_core(h_pad, mask, id_bits, key, 0.07,
+                                       bits=12,
+                                       max_id_bits=ocs.host_id_bits(16))
+        c = ocs.ocs_maxpool_noisy_core(h_bad, mask, id_bits, key, 0.07,
+                                       bits=12,
+                                       max_id_bits=ocs.host_id_bits(16))
+        for other in (b, c):
+            assert np.array_equal(np.asarray(a.winner), np.asarray(other.winner))
+            assert np.array_equal(np.asarray(a.correct), np.asarray(other.correct))
+            assert int(a.collisions) == int(other.collisions)
+            assert int(a.contention_slots) == int(other.contention_slots)
+        assert bool(np.all(np.asarray(a.winner) < 6))
+
+
+def test_zero_miss_noisy_sweep_reduces_to_clean():
+    """p_miss=0 grid cells through the noisy engine == clean protocol."""
+    cells = scenario_grid(n_workers=(3, 8), bits=(8, 16), p_miss=(0.0,))
+    sw = sim_sweep.run_sweep(cells, k_elems=21, rounds=2, seed=5)
+    for i in range(len(cells)):
+        for r in range(2):
+            clean, noisy = sw.clean_cell(i, r), sw.noisy_cell(i, r)
+            assert np.array_equal(np.asarray(noisy.winner),
+                                  np.asarray(clean.winner))
+            assert bool(np.all(np.asarray(noisy.correct)))
+            assert int(noisy.collisions) == 0
+
+
+def test_grid_compiles_once_per_bits_value():
+    """>=24 cells (N x bits x p_miss) -> <=2 compilations, cache-hit on rerun."""
+    cells = scenario_grid(n_workers=(4, 8, 16), bits=(8, 16),
+                          p_miss=(0.0, 0.02, 0.05, 0.1))
+    assert len(cells) == 24
+    sim_sweep.reset_trace_counts()
+    sim_sweep.run_sweep(cells, k_elems=16, rounds=2, include_clean=False)
+    traces = sim_sweep.trace_counts()
+    assert traces["noisy"] <= 2, traces
+    assert traces["clean"] == 0, traces
+    # identical grid again: jit cache hit, no new traces
+    sim_sweep.run_sweep(cells, k_elems=16, rounds=2, include_clean=False)
+    assert sim_sweep.trace_counts() == traces
+
+
+def test_multichannel_latency_and_results_emitter(tmp_path):
+    cells = [Scenario("t/c1", n_workers=4), Scenario("t/c4", n_workers=4,
+                                                     n_channels=4)]
+    h = np.asarray(random_floats(7, (1, 4, 32), specials=False))
+    sw = sim_sweep.run_sweep(cells, k_elems=32, rounds=1,
+                             h_by_scenario=[h, h])
+    slots = int(np.asarray(sw.clean.contention_slots)[0, 0])
+    assert int(sw.clean_latency_slots[0, 0]) == slots
+    assert int(sw.clean_latency_slots[1, 0]) == -(-slots // 4)
+
+    recs = sim_results.summarize(sw)
+    assert recs[0]["payload_tx"] == 32
+    assert recs[0]["concat_payload_tx"] == 4 * 32
+    assert recs[0]["uplink_ratio"] == pytest.approx(4.0)
+    rows = sim_results.to_rows(recs)
+    assert len(rows) == 2 and rows[0].startswith("sweep/t/c1,")
+    out = tmp_path / "sweep.json"
+    sim_results.write_json(recs, str(out))
+    import json
+    loaded = json.loads(out.read_text())
+    assert loaded[1]["n_channels"] == 4
+    assert loaded[1]["latency_slots"] == -(-slots // 4)
+
+
+def test_scenario_registry_and_grid():
+    assert "dense_cell" in sim_scenarios.names()
+    s = sim_scenarios.get("dense_cell")
+    assert s.n_workers == 64
+    with pytest.raises(KeyError):
+        sim_scenarios.get("no_such_scenario")
+    with pytest.raises(ValueError):
+        sim_scenarios.register(Scenario("dense_cell", n_workers=2))
+    with pytest.raises(ValueError):
+        Scenario("bad", n_workers=0)
+    with pytest.raises(ValueError):
+        Scenario("bad", n_workers=2, p_miss=1.0)
+    # bits + ceil(log2 N) tie-break bits must fit the 32-bit contention word
+    with pytest.raises(ValueError):
+        Scenario("bad", n_workers=4, bits=32)
+    with pytest.raises(ValueError):
+        ocs.ocs_maxpool(jnp.zeros((4, 8), jnp.float32), bits=32)
+    cells = scenario_grid(n_workers=(2, 4), bits=(8,), p_miss=(0.0, 0.1),
+                          n_channels=(1, 2))
+    assert len(cells) == 8
+    assert cells[0].name == "grid/N2_b8_p0_c1"
+    assert len({c.name for c in cells}) == 8
+
+
+def test_run_sweep_input_validation():
+    with pytest.raises(ValueError):
+        sim_sweep.run_sweep([])
+    with pytest.raises(ValueError):
+        sim_sweep.run_sweep([Scenario("t/x", n_workers=4)], k_elems=8,
+                            rounds=1,
+                            h_by_scenario=[np.zeros((1, 3, 8), np.float32)])

@@ -12,6 +12,9 @@ The headline claims, verified end-to-end at smoke scale:
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytestmark = pytest.mark.slow    # end-to-end: excluded from the tier-1 CI job
 
 from repro.core import aggregators, fedocs, ocs, vertical
 from repro.core.vertical import VerticalConfig

@@ -13,6 +13,8 @@ from repro.parallel.sharding import split_tree
 from repro.train import trainer
 from repro.train.trainer import TrainerConfig
 
+pytestmark = pytest.mark.slow    # end-to-end: excluded from the tier-1 CI job
+
 
 @pytest.fixture(scope="module")
 def setup():
