@@ -1,0 +1,95 @@
+"""Channel-in-the-loop training-curve benchmark: accuracy vs channel quality.
+
+The paper's end-to-end experiment — train the vertical learner with the
+noisy-OCS channel *in the forward pass* and report accuracy as a function of
+the sensing-miss probability and the backoff depth.  Every ``p_miss`` lane
+of a ``bits`` value trains inside ONE jitted train step (``p_miss`` and the
+sensing rng are traced); the meta row reports the jit trace counters and the
+run self-checks two contracts from the curve engine:
+
+  * exactly one train-step compilation per ``bits`` value, and
+  * the ``p_miss=0`` lane matches the ideal ``max_q{bits}`` reference run
+    bit for bit (accuracy AND trained parameters).
+
+  PYTHONPATH=src python -m benchmarks.bench_curves           # full curves
+  PYTHONPATH=src python -m benchmarks.bench_curves --smoke   # CI smoke tier
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.sim import results as sim_results
+from repro.sim import train_curves as tc
+
+
+def _smoke_config() -> tc.CurveConfig:
+    return tc.CurveConfig(bits=(8, 16), p_miss=(0.0, 0.05, 0.2), steps=24,
+                          batch=32, n_train=512, n_val=256, log_every=8)
+
+
+def _full_config() -> tc.CurveConfig:
+    # bench_table1's task scale: large enough that embedding-level fusion
+    # actually learns the relation, so the curve has headroom to degrade
+    return tc.CurveConfig(bits=(8, 16), p_miss=(0.0, 0.01, 0.02, 0.05, 0.1),
+                          steps=600, batch=64, n_train=8192, n_val=512,
+                          hw=32, encoder_dims=(128, 64), embed_dim=32,
+                          head_dims=(128, 64), log_every=25)
+
+
+def run(smoke: bool = False, json_path: Optional[str] = None) -> List[str]:
+    ccfg = _smoke_config() if smoke else _full_config()
+
+    tc.reset_trace_counts()
+    t0 = time.time()
+    curves = tc.run_curves(ccfg)
+    dt_us = (time.time() - t0) * 1e6 / max(1, ccfg.steps)
+    traces = tc.trace_counts()
+
+    n_bits = len(ccfg.bits)
+    if traces["noisy_step"] != n_bits or traces["ideal_step"] != n_bits:
+        raise RuntimeError(
+            f"curve engine recompiled per lane: {traces} for {n_bits} bit "
+            "depths — traced-(p_miss, rng) batching regression")
+
+    # p_miss lane 0 is 0.0 in both configs: it must reproduce the ideal
+    # max_q{bits} run bit for bit (same trained params, same accuracy).
+    assert ccfg.p_miss[0] == 0.0
+    import jax
+    for bi, bits in enumerate(ccfg.bits):
+        if curves.acc[bi, 0] != curves.acc_ideal[bi]:
+            raise RuntimeError(
+                f"bits={bits}: p_miss=0 accuracy {curves.acc[bi, 0]} != "
+                f"ideal max_q{bits} accuracy {curves.acc_ideal[bi]}")
+        for a, b in zip(jax.tree.leaves(curves.noisy_params[bi]),
+                        jax.tree.leaves(curves.ideal_params[bi])):
+            if not np.array_equal(np.asarray(a)[0], np.asarray(b)[0]):
+                raise RuntimeError(
+                    f"bits={bits}: p_miss=0 trained params diverged from "
+                    "the ideal reference run")
+
+    records = sim_results.summarize_curves(curves)
+    rows = sim_results.curve_rows(records)
+    rows.append(
+        f"curves/meta,{dt_us:.0f},"
+        f"bits={len(ccfg.bits)};lanes={len(ccfg.p_miss)};"
+        f"steps={ccfg.steps};"
+        f"compiles_noisy={traces['noisy_step']};"
+        f"compiles_ideal={traces['ideal_step']};p0_matches_ideal=1")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(records, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return rows
+
+
+if __name__ == "__main__":
+    argv = [a for a in sys.argv[1:] if a != "--smoke"]
+    for r in run(smoke="--smoke" in sys.argv,
+                 json_path=argv[0] if argv else None):
+        print(r)

@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_fig2      paper Fig. 2   (multi-sensor denoising, 1 vs 4 workers)
   bench_comm      paper §I claim (O(K) vs O(N*K) comm; ICI fusion bytes)
   bench_sweep     batched scenario sweep (repro.sim) over N x bits x p_miss
+  bench_curves    channel-in-the-loop training: accuracy vs p_miss x bits
   bench_kernels   Pallas kernel micro-timings (interpret mode)
   bench_roofline  roofline terms per (arch x shape) from dry-run artifacts
 """
@@ -18,13 +19,16 @@ import time
 
 def main() -> None:
     fast = "--fast" in sys.argv
-    from benchmarks import (bench_comm, bench_fig2, bench_kernels,
-                            bench_roofline, bench_sweep, bench_table1)
+    from benchmarks import (bench_comm, bench_curves, bench_fig2,
+                            bench_kernels, bench_roofline, bench_sweep,
+                            bench_table1)
     print("name,us_per_call,derived")
     t0 = time.time()
     for row in bench_comm.run():
         print(row)
     for row in bench_sweep.run(smoke=fast):
+        print(row)
+    for row in bench_curves.run(smoke=fast):
         print(row)
     for row in bench_kernels.run():
         print(row)

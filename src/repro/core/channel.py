@@ -31,15 +31,17 @@ class CommLoad:
     uplink_overhead_bits: int       # contention + ACK overhead
     downlink_msgs: int              # gradient elements server -> worker(s)
     latency_slots: int              # serialized channel occupancy (slots)
+    payload_bits: int = 32          # bits per payload message (ChannelConfig)
 
     @property
     def uplink_bits(self) -> int:
-        return self.uplink_payload_msgs * 32 + self.uplink_overhead_bits
+        return self.uplink_payload_msgs * self.payload_bits + self.uplink_overhead_bits
 
     def as_row(self) -> str:
         return (f"{self.method},{self.n_workers},{self.k_elems},"
                 f"{self.uplink_payload_msgs},{self.uplink_overhead_bits},"
-                f"{self.downlink_msgs},{self.latency_slots}")
+                f"{self.downlink_msgs},{self.latency_slots},"
+                f"{self.payload_bits}")
 
 
 def ocs_load(n_workers: int, k_elems: int, bits: int,
@@ -58,6 +60,7 @@ def ocs_load(n_workers: int, k_elems: int, bits: int,
         uplink_overhead_bits=contention + acks,
         downlink_msgs=k_elems,      # broadcast dL/dv once (paper Eq. 5-6)
         latency_slots=(contention + acks + payload_slots) // cfg.n_channels,
+        payload_bits=cfg.payload_bits,
     )
 
 
@@ -73,6 +76,7 @@ def concat_load(n_workers: int, k_elems: int,
         uplink_overhead_bits=0,
         downlink_msgs=msgs,         # dL/dh_n differs per worker
         latency_slots=msgs * cfg.payload_bits // cfg.n_channels,
+        payload_bits=cfg.payload_bits,
     )
 
 
@@ -88,6 +92,7 @@ def mean_load(n_workers: int, k_elems: int,
         uplink_overhead_bits=0,
         downlink_msgs=k_elems,      # same gradient broadcast to all
         latency_slots=msgs * cfg.payload_bits // cfg.n_channels,
+        payload_bits=cfg.payload_bits,
     )
 
 
@@ -103,6 +108,7 @@ def avg_pred_load(n_workers: int, n_classes: int,
         uplink_overhead_bits=0,
         downlink_msgs=0,            # no backward needed at inference
         latency_slots=msgs * cfg.payload_bits // cfg.n_channels,
+        payload_bits=cfg.payload_bits,
     )
 
 

@@ -27,19 +27,34 @@ and identical to Eq. 6 whenever the argmax is unique (ties are measure-zero
 for continuous features).  ``tie_break='first'`` reproduces the OCS protocol
 exactly (lowest worker index wins, one extra tiny all-reduce(min) of int32
 indices); equality with the protocol simulator is property-tested.
+
+Channel-in-the-loop training (``max_noisy``): :func:`maxpool_noisy` replaces
+the ideal pooled max with the *protocol outcome under imperfect carrier
+sensing* — the winner per element is selected by
+``repro.core.ocs.ocs_maxpool_noisy_core`` (quantized D-bit codes,
+per-sub-slot miss detection, lowest-index capture after ``max_rounds``), the
+pooled value is the winner's D-bit payload, and the backward routes the
+cotangent to that winner only.  ``rng`` and ``p_miss`` are ordinary traced
+arguments, so one compiled train step serves a whole miss-probability axis;
+at ``p_miss=0`` the forward AND the vjp coincide bit-for-bit with
+``maxpool_quantized(tie_break='first')`` (property-tested).
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import ocs
 from repro.core import quantize as qz
 
-VALID_MODES = ("sum", "max", "max_q16", "max_q8", "mean", "concat")
+VALID_MODES = ("sum", "max", "max_q16", "max_q8", "max_noisy", "mean",
+               "concat")
 
 
 def _winner_mask(h: jax.Array, pooled: jax.Array, tie_break: str) -> jax.Array:
@@ -114,6 +129,76 @@ maxpool_quantized.defvjp(_maxpool_q_fwd, _maxpool_q_bwd)
 
 
 # ---------------------------------------------------------------------------
+# channel-in-the-loop max-pool: noisy-OCS winner selection in the forward
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChannelNoise:
+    """Traced channel state for ``max_noisy``: a PRNG key + miss probability.
+
+    Both leaves are ordinary traced arrays, so a single compiled train step
+    (or a ``vmap`` lane axis) serves every miss probability — only the
+    quantization depth ``bits`` is static.
+    """
+
+    rng: jax.Array       # PRNG key for the per-sub-slot sensing draws
+    p_miss: jax.Array    # () carrier-sensing miss probability
+
+
+jax.tree_util.register_dataclass(
+    ChannelNoise, data_fields=["rng", "p_miss"], meta_fields=[])
+
+
+def _maxpool_noisy_impl(h, rng, p_miss, bits, max_rounds):
+    """Protocol-outcome pooling: (pooled value, winner one-hot mask)."""
+    n = h.shape[0]
+    flat = h.reshape(n, -1)                                    # (N, M)
+    id_bits = ocs.host_id_bits(n)
+    res = ocs.ocs_maxpool_noisy_core(
+        flat, jnp.ones((n,), dtype=bool), id_bits, rng, p_miss,
+        bits=bits, max_id_bits=id_bits, max_rounds=max_rounds)
+    codes = qz.quantize(flat, bits)
+    win_code = jnp.take_along_axis(codes, res.winner[None, :], axis=0)[0]
+    pooled = qz.dequantize(win_code, bits, h.dtype).reshape(h.shape[1:])
+    onehot = jnp.arange(n, dtype=jnp.int32)[:, None] == res.winner[None, :]
+    return pooled, onehot.reshape(h.shape).astype(h.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def maxpool_noisy(h: jax.Array, rng: jax.Array, p_miss: jax.Array,
+                  bits: int = 16, max_rounds: int = 3) -> jax.Array:
+    """Max-pool through the *simulated* OCS channel (paper Alg. 1 + misses).
+
+    The per-element winner is the noisy-protocol outcome — quantized D-bit
+    contention with per-sub-slot miss detection and lowest-index capture
+    after ``max_rounds`` — and it transmits its D-bit payload, so the fused
+    feature the head sees is exactly what the wireless fusion center would
+    decode.  Backward routes the cotangent to the selected winner only
+    (Eq. 6 for the *actual* transmitter, not the ideal argmax).
+
+    At ``p_miss=0`` this is bit-for-bit ``maxpool_quantized(h, bits,
+    'first')`` in both the forward and the vjp.
+    """
+    pooled, _ = _maxpool_noisy_impl(h, rng, p_miss, bits, max_rounds)
+    return pooled
+
+
+def _maxpool_noisy_fwd(h, rng, p_miss, bits, max_rounds):
+    pooled, mask = _maxpool_noisy_impl(h, rng, p_miss, bits, max_rounds)
+    return pooled, (mask, rng, p_miss)
+
+
+def _maxpool_noisy_bwd(bits, max_rounds, res, g):
+    mask, rng, p_miss = res
+    # rng is integer-typed (a PRNG key): its cotangent space is float0.
+    d_rng = np.zeros(np.shape(rng), jax.dtypes.float0)
+    return (g[None] * mask, d_rng, jnp.zeros_like(p_miss))
+
+
+maxpool_noisy.defvjp(_maxpool_noisy_fwd, _maxpool_noisy_bwd)
+
+
+# ---------------------------------------------------------------------------
 # baselines + dispatcher
 # ---------------------------------------------------------------------------
 
@@ -127,8 +212,15 @@ def concat(h: jax.Array) -> jax.Array:
     return moved.reshape(h.shape[1:-1] + (h.shape[0] * h.shape[-1],))
 
 
-def aggregate(h: jax.Array, mode: str, *, tie_break: str = "all") -> jax.Array:
-    """Pool a worker-leading feature tensor. h: (N, ..., K)."""
+def aggregate(h: jax.Array, mode: str, *, tie_break: str = "all",
+              noise: Optional[ChannelNoise] = None,
+              noise_bits: int = 16,
+              noise_max_rounds: int = 3) -> jax.Array:
+    """Pool a worker-leading feature tensor. h: (N, ..., K).
+
+    ``max_noisy`` additionally needs ``noise`` (a :class:`ChannelNoise`);
+    ``noise_bits``/``noise_max_rounds`` are its static protocol knobs.
+    """
     if mode == "sum":
         return jnp.sum(h, axis=0)
     if mode == "max":
@@ -137,6 +229,12 @@ def aggregate(h: jax.Array, mode: str, *, tie_break: str = "all") -> jax.Array:
         return maxpool_quantized(h, 16, tie_break)
     if mode == "max_q8":
         return maxpool_quantized(h, 8, tie_break)
+    if mode == "max_noisy":
+        if noise is None:
+            raise ValueError(
+                "max_noisy aggregation needs noise=ChannelNoise(rng, p_miss)")
+        return maxpool_noisy(h, noise.rng, noise.p_miss, noise_bits,
+                             noise_max_rounds)
     if mode == "mean":
         return meanpool(h)
     if mode == "concat":

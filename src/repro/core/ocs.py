@@ -75,13 +75,29 @@ class NoisyOCSResult:
     winner: jax.Array            # (K,) int32 — final payload transmitter
     correct: jax.Array           # (K,) bool  — winner holds the true max code
     collisions: jax.Array        # ()  int32  — sub-frames needing re-contention
-    rounds: jax.Array            # ()  int32  — contention rounds used
-    contention_slots: jax.Array  # ()  int32
+    rounds: jax.Array            # ()  int32  — rounds until every sub-frame
+    #   resolved (== max_rounds when lowest-index capture was needed)
+    contention_slots: jax.Array  # ()  int32  — re-contention counts only the
+    #   sub-frames still unresolved at the start of each round
+
+
+@dataclasses.dataclass(frozen=True)
+class MultichannelOCSResult:
+    """OFDMA variant outcome: untouched protocol accounting + channel latency.
+
+    ``result.contention_slots`` keeps the *total* contention sub-slots (the
+    transmission count consumers read); the wall-clock benefit of striping
+    over orthogonal channels lives in ``latency_slots`` only, mirroring
+    ``repro.sim.sweep.SweepResult.*_latency_slots``.
+    """
+
+    result: OCSResult
+    latency_slots: jax.Array     # () int32 — ceil(contention_slots / n_channels)
 
 
 # Registered as pytrees so the batched cores can return them through
 # jit/vmap and the sweep engine can stack them along scenario/round axes.
-for _cls in (OCSResult, NoisyOCSResult):
+for _cls in (OCSResult, NoisyOCSResult, MultichannelOCSResult):
     jax.tree_util.register_dataclass(
         _cls,
         data_fields=[f.name for f in dataclasses.fields(_cls)],
@@ -205,20 +221,21 @@ def ocs_maxpool(h: jax.Array, bits: int = 16) -> OCSResult:
 
 
 def ocs_maxpool_multichannel(h: jax.Array, bits: int = 16,
-                             n_channels: int = 4) -> OCSResult:
+                             n_channels: int = 4) -> MultichannelOCSResult:
     """Multi-channel (OFDMA) variant — paper §III ref [16].
 
     K sub-frames are striped over ``n_channels`` orthogonal channels running
-    the same contention in parallel; selection results are identical, wall
-    time divides by ``n_channels``.  We simulate by reshaping the sub-frame
-    axis; accounting reports per-channel slots (total slots unchanged, the
-    *latency* benefit is slots / n_channels, recorded by the benchmark).
+    the same contention in parallel; selection results and total slot counts
+    are identical, wall time divides by ``n_channels``.  The returned
+    ``result`` is exactly the single-channel :func:`ocs_maxpool` outcome
+    (``contention_slots`` stays the total transmission-slot count);
+    ``latency_slots`` carries the striped wall-clock figure.
     """
     res = ocs_maxpool(h, bits)
     # contention latency improves; transmission counts are unchanged.
-    return dataclasses.replace(
-        res,
-        contention_slots=(res.contention_slots + n_channels - 1) // n_channels,
+    return MultichannelOCSResult(
+        result=res,
+        latency_slots=(res.contention_slots + n_channels - 1) // n_channels,
     )
 
 
@@ -260,8 +277,7 @@ def ocs_maxpool_noisy_core(h: jax.Array, mask: jax.Array, id_bits: jax.Array,
                          else jnp.float32)
 
     def contention_round(alive, key):
-        def slot(carry, d):
-            alive, slots = carry
+        def slot(alive, d):
             active = d < total_bits
             shift = jnp.maximum(total_bits - 1 - d, 0).astype(jnp.uint32)
             bit = (word >> shift) & jnp.uint32(1)
@@ -272,28 +288,33 @@ def ocs_maxpool_noisy_core(h: jax.Array, mask: jax.Array, id_bits: jax.Array,
                 (n_max, k_elems))
             # a sensing worker quits only if someone transmitted AND it heard
             alive = alive & (tx | ~(any_tx & heard))
-            return (alive, slots + jnp.where(active, k_elems, 0).astype(jnp.int32)), None
+            return alive, None
 
-        (alive, slots), _ = jax.lax.scan(
-            slot, (alive, jnp.int32(0)), jnp.arange(bits + max_id_bits))
-        return alive, slots
+        alive, _ = jax.lax.scan(slot, alive, jnp.arange(bits + max_id_bits))
+        return alive
 
     def round_body(carry, r):
-        alive, slots, done = carry
+        alive, slots, rounds, done = carry
         key = jax.random.fold_in(rng, r)
-        survivors, round_slots = contention_round(alive, key)
+        # only sub-frames still unresolved at round start re-contend: they
+        # alone consume channel slots (bits + id_bits sub-slots each); a
+        # resolved sub-frame's lone survivor keeps its claim untouched.
+        contending = jnp.sum(~done, dtype=jnp.int32)      # () sub-frames
+        survivors = contention_round(alive, key)
         n_surv = jnp.sum(survivors, axis=0)               # (K,)
         collided = n_surv > 1
         # collided sub-frames re-contend among survivors; resolved keep winner
         new_done = done | ~collided
-        slots = slots + jnp.where(jnp.any(~done), round_slots, 0)
-        return (survivors, slots, new_done), jnp.sum(collided,
-                                                     dtype=jnp.int32)
+        slots = slots + total_bits.astype(jnp.int32) * contending
+        rounds = rounds + (contending > 0).astype(jnp.int32)
+        return (survivors, slots, rounds, new_done), jnp.sum(collided,
+                                                             dtype=jnp.int32)
 
     alive0 = jnp.broadcast_to(mask[:, None], (n_max, k_elems))
     done0 = jnp.zeros((k_elems,), dtype=bool)
-    (alive, slots, done), collisions = jax.lax.scan(
-        round_body, (alive0, jnp.int32(0), done0), jnp.arange(max_rounds))
+    (alive, slots, rounds, done), collisions = jax.lax.scan(
+        round_body, (alive0, jnp.int32(0), jnp.int32(0), done0),
+        jnp.arange(max_rounds))
 
     winner = jnp.argmax(alive, axis=0).astype(jnp.int32)  # capture: lowest idx
     true_code = jnp.max(jnp.where(mask[:, None], codes, 0), axis=0)
@@ -303,7 +324,7 @@ def ocs_maxpool_noisy_core(h: jax.Array, mask: jax.Array, id_bits: jax.Array,
         winner=winner,
         correct=correct,
         collisions=jnp.sum(collisions),
-        rounds=jnp.int32(max_rounds),
+        rounds=rounds,
         contention_slots=slots,
     )
 

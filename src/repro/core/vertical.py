@@ -13,7 +13,7 @@ the ``model`` mesh axis).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +32,8 @@ class VerticalConfig:
     task: str = "reconstruction"         # "reconstruction" | "classification"
     aggregation: str = "max"             # fedocs.VALID_MODES
     tie_break: str = "all"
+    noise_bits: int = 16                 # max_noisy: backoff/payload depth D
+    noise_max_rounds: int = 3            # max_noisy: re-contention bound
     prediction_level: bool = False       # True => per-worker heads (baselines
                                          # "Avg. Workers Preds"/"Best Worker")
     dtype: jnp.dtype = jnp.float32
@@ -81,15 +83,23 @@ def embeddings(cfg: VerticalConfig, params: dict, views: jax.Array) -> jax.Array
     return jax.vmap(_mlp_apply)(params["encoders"], views)
 
 
-def forward(cfg: VerticalConfig, params: dict, views: jax.Array) -> jax.Array:
-    """Full fusion forward: views (N, B, d) -> prediction (B, output_dim)."""
+def forward(cfg: VerticalConfig, params: dict, views: jax.Array, *,
+            noise: Optional[fedocs.ChannelNoise] = None) -> jax.Array:
+    """Full fusion forward: views (N, B, d) -> prediction (B, output_dim).
+
+    ``noise`` is required when ``cfg.aggregation == 'max_noisy'`` — the
+    embeddings are then fused through the simulated OCS channel (traced
+    ``rng``/``p_miss``, static ``cfg.noise_bits``/``cfg.noise_max_rounds``).
+    """
     h = embeddings(cfg, params, views)
     if cfg.prediction_level:
         preds = jax.vmap(_mlp_apply)(params["head"], h)       # (N, B, out)
         if cfg.task == "classification":
             preds = jax.nn.softmax(preds, axis=-1)
         return jnp.mean(preds, axis=0)                        # Avg. Workers Preds
-    v = fedocs.aggregate(h, cfg.aggregation, tie_break=cfg.tie_break)
+    v = fedocs.aggregate(h, cfg.aggregation, tie_break=cfg.tie_break,
+                         noise=noise, noise_bits=cfg.noise_bits,
+                         noise_max_rounds=cfg.noise_max_rounds)
     return _mlp_apply(params["head"], v)
 
 
@@ -102,8 +112,10 @@ def per_worker_predictions(cfg: VerticalConfig, params: dict,
 
 
 def loss_fn(cfg: VerticalConfig, params: dict, views: jax.Array,
-            target: jax.Array) -> Tuple[jax.Array, dict]:
-    pred = forward(cfg, params, views)
+            target: jax.Array, *,
+            noise: Optional[fedocs.ChannelNoise] = None
+            ) -> Tuple[jax.Array, dict]:
+    pred = forward(cfg, params, views, noise=noise)
     if cfg.task == "reconstruction":
         # Paper Eq. 2 squared error == Gaussian NLL up to constants; we report
         # per-pixel NLL with unit variance /2 convention for Fig.2 comparison.
@@ -125,9 +137,17 @@ def comm_load(cfg: VerticalConfig, bits: int = 16) -> channel.CommLoad:
     """Per-sample uplink/downlink accounting for the configured aggregation."""
     if cfg.prediction_level:
         return channel.avg_pred_load(cfg.n_workers, cfg.output_dim)
-    if cfg.aggregation in ("max", "max_q16", "max_q8"):
-        b = {"max": bits, "max_q16": 16, "max_q8": 8}[cfg.aggregation]
-        return channel.ocs_load(cfg.n_workers, cfg.embed_dim, b)
+    if cfg.aggregation in ("max", "max_q16", "max_q8", "max_noisy"):
+        b = {"max": bits, "max_q16": 16, "max_q8": 8,
+             "max_noisy": cfg.noise_bits}[cfg.aggregation]
+        if cfg.aggregation == "max":
+            # plain max transmits the winner's full float payload; the
+            # D bits only drive contention
+            return channel.ocs_load(cfg.n_workers, cfg.embed_dim, b)
+        # every quantized-code mode pools the dequantized D-bit code, so the
+        # winner's uplink payload is the D-bit code itself
+        ccfg = channel.ChannelConfig(payload_bits=b)
+        return channel.ocs_load(cfg.n_workers, cfg.embed_dim, b, cfg=ccfg)
     if cfg.aggregation == "mean":
         return channel.mean_load(cfg.n_workers, cfg.embed_dim)
     return channel.concat_load(cfg.n_workers, cfg.embed_dim)

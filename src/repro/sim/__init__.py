@@ -1,8 +1,11 @@
-"""Batched OCS scenario-sweep engine.
+"""Batched OCS scenario-sweep engine + channel-in-the-loop training curves.
 
-``scenarios`` — registry of named wireless scenarios and grid builders.
-``sweep``     — the vmap/jit grid runner over the batched protocol cores.
-``results``   — table/JSON emission with channel-accounting merge.
+``scenarios``    — registry of named wireless scenarios and grid builders.
+``sweep``        — the vmap/jit (and shard_map-sharded) grid runner over the
+                   batched protocol cores.
+``train_curves`` — accuracy-vs-p_miss/bits curve runner: short training runs
+                   with the noisy-OCS channel in the forward pass.
+``results``      — table/JSON emission with channel-accounting merge.
 """
 
 from repro.sim.scenarios import (  # noqa: F401
@@ -11,4 +14,9 @@ from repro.sim.scenarios import (  # noqa: F401
 from repro.sim.sweep import (  # noqa: F401
     SweepResult, run_sweep, reset_trace_counts, trace_counts,
 )
-from repro.sim.results import summarize, to_json, to_rows, write_json  # noqa: F401
+from repro.sim.train_curves import (  # noqa: F401
+    CurveConfig, CurveResult, run_curves,
+)
+from repro.sim.results import (  # noqa: F401
+    curve_rows, summarize, summarize_curves, to_json, to_rows, write_json,
+)

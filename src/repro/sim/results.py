@@ -1,10 +1,13 @@
-"""Sweep-result emission: per-scenario records, benchmark rows, JSON.
+"""Sweep/curve-result emission: per-scenario records, benchmark rows, JSON.
 
 Merges the *measured* counters from the batched simulation (payload /
 blocking transmissions, contention slots, noisy-sensing accuracy) with the
 *analytic* channel accounting of ``repro.core.channel`` (uplink message and
 overhead-bit model, paper §I / §IV), so every emitted record carries both
-sides of the O(K)-vs-O(N*K) argument.
+sides of the O(K)-vs-O(N*K) argument.  :func:`summarize_curves` does the
+same merge for channel-in-the-loop training curves
+(``repro.sim.train_curves``): every accuracy row carries the uplink cost of
+the operating point that produced it.
 """
 
 from __future__ import annotations
@@ -62,11 +65,65 @@ def summarize(sweep: SweepResult) -> List[Record]:
                     np.asarray(sweep.noisy.correct)[i].mean()),
                 "collisions_mean": float(
                     np.asarray(sweep.noisy.collisions)[i].mean()),
+                "noisy_rounds_mean": float(
+                    np.asarray(sweep.noisy.rounds)[i].mean()),
+                "noisy_contention_slots_mean": float(
+                    np.asarray(sweep.noisy.contention_slots)[i].mean()),
                 "noisy_latency_slots_mean": float(
                     sweep.noisy_latency_slots[i].mean()),
             })
         records.append(rec)
     return records
+
+
+def summarize_curves(curves) -> List[Record]:
+    """One record per (bits, p_miss) cell of a train-curve grid.
+
+    ``curves`` is a ``repro.sim.train_curves.CurveResult``.  The flat record
+    list serves both tables: filter on ``bits`` for accuracy-vs-p_miss, on
+    ``p_miss`` for accuracy-vs-bits.  Uplink accounting uses the D-bit code
+    payload the ``max_noisy`` winner actually transmits.
+    """
+    ccfg = curves.config
+    records: List[Record] = []
+    for bi, bits in enumerate(ccfg.bits):
+        cfg = channel.ChannelConfig(payload_bits=bits)
+        fed = channel.ocs_load(ccfg.n_workers, ccfg.embed_dim, bits=bits,
+                               cfg=cfg)
+        cat = channel.concat_load(ccfg.n_workers, ccfg.embed_dim)
+        for li, p in enumerate(curves.p_miss):
+            records.append({
+                "curve": f"b{bits}_p{p:g}",
+                "bits": bits,
+                "p_miss": float(p),
+                "n_workers": ccfg.n_workers,
+                "k_elems": ccfg.embed_dim,
+                "steps": ccfg.steps,
+                "acc": float(curves.acc[bi, li]),
+                "nll": float(curves.nll[bi, li]),
+                "acc_ideal": float(curves.acc_ideal[bi]),
+                "nll_ideal": float(curves.nll_ideal[bi]),
+                "acc_gap": float(curves.acc_ideal[bi] - curves.acc[bi, li]),
+                "uplink_bits_fedocs": fed.uplink_bits,
+                "uplink_bits_concat": cat.uplink_bits,
+                "uplink_ratio": cat.uplink_bits / fed.uplink_bits,
+            })
+    return records
+
+
+def curve_rows(records: List[Record], prefix: str = "curves") -> List[str]:
+    """Benchmark-harness CSV rows for train-curve records."""
+    rows = []
+    for rec in records:
+        derived = [
+            f"bits={rec['bits']}", f"p_miss={rec['p_miss']:g}",
+            f"acc={rec['acc']:.4f}", f"acc_ideal={rec['acc_ideal']:.4f}",
+            f"acc_gap={rec['acc_gap']:+.4f}", f"nll={rec['nll']:.4f}",
+            f"uplink_bits={rec['uplink_bits_fedocs']}",
+            f"ratio={rec['uplink_ratio']:.0f}",
+        ]
+        rows.append(f"{prefix}/{rec['curve']},0," + ";".join(derived))
+    return rows
 
 
 def to_rows(records: List[Record], prefix: str = "sweep") -> List[str]:

@@ -10,6 +10,13 @@ each engine no matter how many cells it has.  Compilations are observable via
 :func:`trace_counts` (a counter bumped on every jit trace), which the
 property tests and the benchmark smoke row assert on.
 
+On multi-device hosts the scenario axis is additionally sharded over a 1-D
+``("s",)`` mesh with ``shard_map`` (groups are padded up to a device-count
+multiple; the padding rows are dropped before results are returned), so a
+grid scales with hardware while staying bit-for-bit identical to the
+single-device vmap path (property-tested with forced host devices).  Pass
+``n_devices=1`` to force the plain vmap path.
+
 The padded accounting is bit-for-bit identical to unpadded per-round calls
 (``tests/test_sweep.py``), so ``benchmarks/bench_comm.py`` reproduces its
 historical O(K)-vs-O(N*K) rows from one sweep.
@@ -24,6 +31,7 @@ from typing import Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core import ocs
 from repro.sim.scenarios import Scenario
@@ -52,36 +60,69 @@ def trace_counts() -> Dict[str, int]:
 
 
 # ---------------------------------------------------------------------------
-# jitted engines: vmap(rounds) o vmap(scenarios) over the batched cores
+# jitted engines: vmap(rounds) o vmap(scenarios) over the batched cores,
+# optionally shard_map-ped over the scenario axis on multi-device hosts
 # ---------------------------------------------------------------------------
 
 def _ceil_div(a: jax.Array, b: jax.Array) -> jax.Array:
     return (a + b - 1) // b
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "max_id_bits"))
-def _sweep_clean(h, mask, id_bits, n_channels, *, bits, max_id_bits):
+@functools.lru_cache(maxsize=None)
+def _scenario_mesh(n_devices: int):
+    """1-D device mesh for the scenario axis (cached: jit keys on identity)."""
+    make_mesh = getattr(jax, "make_mesh", None)
+    if make_mesh is not None:
+        return make_mesh((n_devices,), ("s",))
+    # jax<0.4.35 (pyproject floor is 0.4.30): build the Mesh directly
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:n_devices]), ("s",))
+
+
+def _shard_scenarios(fn, n_devices: int, n_args: int):
+    """Wrap an all-scenario-leading engine in shard_map over the ``s`` mesh."""
+    shard_map = getattr(jax, "shard_map", None)
+    kwargs = {}
+    if shard_map is None:            # jax<0.6: experimental namespace,
+        from jax.experimental.shard_map import shard_map
+        kwargs["check_rep"] = False  # replication check kwarg predates
+    else:                            # its rename to check_vma
+        kwargs["check_vma"] = False
+    return shard_map(fn, mesh=_scenario_mesh(n_devices),
+                     in_specs=(P("s"),) * n_args, out_specs=P("s"), **kwargs)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "max_id_bits", "n_devices"))
+def _sweep_clean(h, mask, id_bits, n_channels, *, bits, max_id_bits,
+                 n_devices=1):
     """h: (S, R, N_max, K); mask: (S, N_max); id_bits/n_channels: (S,)."""
     _TRACE_COUNTS["clean"] += 1
     core = functools.partial(ocs.ocs_maxpool_core,
                              bits=bits, max_id_bits=max_id_bits)
     per_round = jax.vmap(core, in_axes=(0, None, None))
-    res = jax.vmap(per_round, in_axes=(0, 0, 0))(h, mask, id_bits)
+    engine = jax.vmap(per_round, in_axes=(0, 0, 0))
+    if n_devices > 1:
+        engine = _shard_scenarios(engine, n_devices, n_args=3)
+    res = engine(h, mask, id_bits)
     latency = _ceil_div(res.contention_slots, n_channels[:, None])
     return res, latency
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("bits", "max_id_bits", "max_rounds"))
+                   static_argnames=("bits", "max_id_bits", "max_rounds",
+                                    "n_devices"))
 def _sweep_noisy(h, mask, id_bits, rng, p_miss, n_channels, *,
-                 bits, max_id_bits, max_rounds):
+                 bits, max_id_bits, max_rounds, n_devices=1):
     """As `_sweep_clean` plus rng: (S, R, 2) keys and p_miss: (S,) traced."""
     _TRACE_COUNTS["noisy"] += 1
     core = functools.partial(ocs.ocs_maxpool_noisy_core, bits=bits,
                              max_id_bits=max_id_bits, max_rounds=max_rounds)
     per_round = jax.vmap(core, in_axes=(0, None, None, 0, None))
-    res = jax.vmap(per_round, in_axes=(0, 0, 0, 0, 0))(
-        h, mask, id_bits, rng, p_miss)
+    engine = jax.vmap(per_round, in_axes=(0, 0, 0, 0, 0))
+    if n_devices > 1:
+        engine = _shard_scenarios(engine, n_devices, n_args=5)
+    res = engine(h, mask, id_bits, rng, p_miss)
     latency = _ceil_div(res.contention_slots, n_channels[:, None])
     return res, latency
 
@@ -147,7 +188,8 @@ def run_sweep(scenarios: Sequence[Scenario], *,
               rng_seed: int = 0,
               max_rounds: int = 3,
               include_clean: bool = True,
-              include_noisy: bool = True) -> SweepResult:
+              include_noisy: bool = True,
+              n_devices: Optional[int] = None) -> SweepResult:
     """Evaluate every scenario x round cell in one dispatch per ``bits`` value.
 
     Args:
@@ -163,6 +205,10 @@ def run_sweep(scenarios: Sequence[Scenario], *,
                      subsumes clean behaviour at ``p_miss=0`` but reports the
                      collision/accuracy accounting instead of the blocking-tx
                      accounting.
+      n_devices:     devices to shard the scenario axis over.  ``None`` (the
+                     default) uses every local device; ``1`` forces the
+                     single-device vmap path.  Results are identical either
+                     way — sharding only changes placement.
 
     Returns:
       SweepResult with (S, R)-stacked pytrees, in the scenario order given.
@@ -203,23 +249,40 @@ def run_sweep(scenarios: Sequence[Scenario], *,
     by_bits: Dict[int, List[int]] = {}
     for i, s in enumerate(scenarios):
         by_bits.setdefault(s.bits, []).append(i)
-    max_id_bits = int(id_bits.max())
+    if n_devices is None:
+        n_devices = jax.local_device_count()
 
     clean_groups, noisy_groups = [], []
     for bits, idx in sorted(by_bits.items()):
         sel = np.asarray(idx)
-        args = (jnp.asarray(h_pad[sel]), jnp.asarray(mask[sel]),
-                jnp.asarray(id_bits[sel]))
-        nch = jnp.asarray(n_channels[sel])
+        # the scan-length bound (and its 32-bit-word guard) is per bits-group:
+        # a global max over *all* scenarios would make a wide-bits cell raise
+        # on the id_bits of an unrelated large-N narrow-bits cell.
+        max_id_bits = int(id_bits[sel].max())
+        n_dev = max(1, min(n_devices, len(sel)))
+        pad = (-len(sel)) % n_dev
+
+        def dev_pad(x: np.ndarray) -> jax.Array:
+            if pad:
+                x = np.concatenate([x, np.repeat(x[:1], pad, axis=0)], axis=0)
+            return jnp.asarray(x)
+
+        def unpad(tree):
+            return jax.tree.map(lambda x: np.asarray(x)[:len(sel)], tree)
+
+        args = (dev_pad(h_pad[sel]), dev_pad(mask[sel]),
+                dev_pad(id_bits[sel]))
+        nch = dev_pad(n_channels[sel])
         if include_clean:
-            res, lat = _sweep_clean(*args, nch,
-                                    bits=bits, max_id_bits=max_id_bits)
-            clean_groups.append((sel, (res, lat)))
+            res, lat = _sweep_clean(*args, nch, bits=bits,
+                                    max_id_bits=max_id_bits, n_devices=n_dev)
+            clean_groups.append((sel, unpad((res, lat))))
         if include_noisy:
-            res, lat = _sweep_noisy(*args, keys[sel], jnp.asarray(p_miss[sel]),
+            res, lat = _sweep_noisy(*args, dev_pad(keys[sel]),
+                                    dev_pad(p_miss[sel]),
                                     nch, bits=bits, max_id_bits=max_id_bits,
-                                    max_rounds=max_rounds)
-            noisy_groups.append((sel, (res, lat)))
+                                    max_rounds=max_rounds, n_devices=n_dev)
+            noisy_groups.append((sel, unpad((res, lat))))
 
     out = SweepResult(scenarios=scenarios, k_elems=k_elems, rounds=rounds,
                       n_max=n_max, h=h_pad, mask=mask)

@@ -1,0 +1,264 @@
+"""Channel-in-the-loop training curves: accuracy vs channel quality.
+
+This is the paper's actual end-to-end experiment, which the repo previously
+validated only in halves: ``repro.sim.sweep`` measured protocol behaviour
+while ``repro.train`` trained with ideal pooling.  Here the two meet — the
+vertical learner's forward pass fuses embeddings through the *simulated* OCS
+channel (``fedocs.maxpool_noisy``: quantized D-bit contention, per-sub-slot
+miss detection, lowest-index capture), and short training runs sweep the
+``p_miss x bits`` scenario grid into accuracy-vs-p_miss and accuracy-vs-bits
+tables (emitted by ``repro.sim.results``).
+
+Compilation contract (mirrors the sweep engine): ``p_miss`` and the sensing
+rng are *traced* — the whole miss-probability axis trains as ``vmap`` lanes
+of ONE jitted train step per ``bits`` value.  An ideal ``max_q{bits}``
+reference run (same init, same data stream, same lane structure) trains
+alongside; the ``p_miss=0`` lane must match it bit for bit, which
+``benchmarks/bench_curves.py`` and ``tests/test_train_curves.py`` assert.
+Compilations are observable via :func:`trace_counts`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fedocs, vertical
+from repro.core.vertical import VerticalConfig
+from repro.data.vertical_data import PatchTaskConfig, patch_classification
+from repro.optim import optimizers, schedules
+from repro.train.train_step import make_train_step
+
+# ---------------------------------------------------------------------------
+# compilation observability (same contract as repro.sim.sweep)
+# ---------------------------------------------------------------------------
+
+_TRACE_COUNTS: Dict[str, int] = {
+    "noisy_step": 0, "ideal_step": 0, "noisy_eval": 0, "ideal_eval": 0}
+
+
+def reset_trace_counts() -> None:
+    """Zero the per-engine jit trace counters (used by tests/benchmarks)."""
+    for k in _TRACE_COUNTS:
+        _TRACE_COUNTS[k] = 0
+
+
+def trace_counts() -> Dict[str, int]:
+    """Times each curve engine has been traced; one full :func:`run_curves`
+    costs exactly one ``*_step`` and one ``*_eval`` trace per ``bits``
+    value, no matter how many ``p_miss`` lanes the grid has."""
+    return dict(_TRACE_COUNTS)
+
+
+# ---------------------------------------------------------------------------
+# configuration + result containers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CurveConfig:
+    """One accuracy-vs-channel-quality experiment grid."""
+
+    bits: Sequence[int] = (8, 16)        # backoff/payload depth axis (static)
+    p_miss: Sequence[float] = (0.0, 0.02, 0.05, 0.1)   # traced lane axis
+    steps: int = 60
+    batch: int = 64
+    lr: float = 3e-3
+    max_rounds: int = 3                  # noisy re-contention bound
+    n_train: int = 2048
+    n_val: int = 512
+    n_classes: int = 4
+    grid: int = 2                        # grid^2 workers (paper §IV-B)
+    hw: int = 16                         # image side (patch_dim = (hw/grid)^2)
+    sigma: float = 0.5
+    encoder_dims: Sequence[int] = (32,)
+    embed_dim: int = 16                  # K — transmitted feature width
+    head_dims: Sequence[int] = (32,)
+    seed: int = 0
+    log_every: int = 10
+
+    def __post_init__(self):
+        for b in self.bits:
+            if b not in (8, 16):
+                raise ValueError(
+                    f"bits={b}: the ideal reference run needs a max_q{{bits}} "
+                    "aggregation mode (8 or 16)")
+        if not self.p_miss or any(not 0.0 <= p < 1.0 for p in self.p_miss):
+            raise ValueError(f"p_miss lanes must be in [0, 1): {self.p_miss}")
+
+    @property
+    def n_workers(self) -> int:
+        return self.grid * self.grid
+
+
+@dataclasses.dataclass
+class CurveResult:
+    """Stacked outcome of one curve grid.
+
+    Lane axis L == ``len(config.p_miss)``; bits axis follows
+    ``config.bits`` order.  ``*_ideal`` rows come from the reference run
+    with ideal ``max_q{bits}`` pooling (a single vmap lane — the ideal run
+    is deterministic and lane-independent).
+    """
+
+    config: CurveConfig
+    p_miss: np.ndarray                  # (L,)
+    acc: np.ndarray                     # (n_bits, L) channel-in-the-loop
+    nll: np.ndarray                     # (n_bits, L)
+    acc_ideal: np.ndarray               # (n_bits,)
+    nll_ideal: np.ndarray               # (n_bits,)
+    loss_history: np.ndarray            # (n_bits, n_logged, L)
+    ideal_loss_history: np.ndarray      # (n_bits, n_logged)
+    logged_steps: np.ndarray            # (n_logged,)
+    noisy_params: List                  # per-bits lane-stacked trained params
+    ideal_params: List                  # per-bits lane-stacked trained params
+
+
+# ---------------------------------------------------------------------------
+# the runner
+# ---------------------------------------------------------------------------
+
+def _lane_stack(tree, lanes: int):
+    return jax.tree.map(lambda x: jnp.stack([x] * lanes), tree)
+
+
+def _vertical_config(ccfg: CurveConfig, bits: int, noisy: bool
+                     ) -> VerticalConfig:
+    patch_dim = (ccfg.hw // ccfg.grid) ** 2
+    return VerticalConfig(
+        n_workers=ccfg.n_workers, input_dim=patch_dim,
+        encoder_dims=tuple(ccfg.encoder_dims), embed_dim=ccfg.embed_dim,
+        head_dims=tuple(ccfg.head_dims), output_dim=ccfg.n_classes,
+        task="classification",
+        aggregation="max_noisy" if noisy else f"max_q{bits}",
+        # the OCS winner is the lowest-indexed max-code holder, so the ideal
+        # reference must route gradients the same way
+        tie_break="first",
+        noise_bits=bits, noise_max_rounds=ccfg.max_rounds)
+
+
+def run_curves(ccfg: CurveConfig = CurveConfig()) -> CurveResult:
+    """Train the p_miss lane axis through the simulated channel, per bits.
+
+    For every ``bits`` value: ONE jitted train step (lane-vmapped over
+    traced ``(rng, p_miss)``) trains all miss-probability lanes
+    simultaneously from identical inits on an identical batch stream, and
+    one ideal ``max_q{bits}`` reference trains beside it.  Evaluation runs
+    channel-in-the-loop as well (fresh sensing keys, same ``p_miss`` lanes).
+    """
+    lanes = len(ccfg.p_miss)
+    p_vec = jnp.asarray(np.asarray(ccfg.p_miss, np.float32))
+
+    task = PatchTaskConfig(n_classes=ccfg.n_classes, grid=ccfg.grid,
+                           hw=ccfg.hw, sigma=ccfg.sigma)
+    views, labels = patch_classification(task, ccfg.n_train, seed=ccfg.seed)
+    v_views, v_labels = patch_classification(task, ccfg.n_val,
+                                             seed=ccfg.seed + 1)
+    views_j, labels_j = jnp.asarray(views), jnp.asarray(labels)
+    vv_j, vl_j = jnp.asarray(v_views), jnp.asarray(v_labels)
+
+    logged = sorted(set(range(0, ccfg.steps, ccfg.log_every))
+                    | {ccfg.steps - 1})
+    acc = np.zeros((len(ccfg.bits), lanes), np.float64)
+    nll = np.zeros_like(acc)
+    acc_ideal = np.zeros((len(ccfg.bits),), np.float64)
+    nll_ideal = np.zeros_like(acc_ideal)
+    hist = np.zeros((len(ccfg.bits), len(logged), lanes), np.float64)
+    hist_ideal = np.zeros((len(ccfg.bits), len(logged)), np.float64)
+    noisy_params_out, ideal_params_out = [], []
+
+    for bi, bits in enumerate(ccfg.bits):
+        vcfg_n = _vertical_config(ccfg, bits, noisy=True)
+        vcfg_i = _vertical_config(ccfg, bits, noisy=False)
+
+        def noisy_loss(values, batch, noise, _cfg=vcfg_n):
+            bviews, blabels = batch
+            return vertical.loss_fn(_cfg, values, bviews, blabels,
+                                    noise=noise)
+
+        def ideal_loss(values, batch, _cfg=vcfg_i):
+            bviews, blabels = batch
+            return vertical.loss_fn(_cfg, values, bviews, blabels)
+
+        warmup = max(1, ccfg.steps // 10)
+        opt = optimizers.adamw(
+            schedules.linear_warmup_cosine(ccfg.lr, warmup, ccfg.steps),
+            weight_decay=0.01)
+        step_n = make_train_step(noisy_loss, opt, with_rng=True)
+        step_i = make_train_step(ideal_loss, opt)
+
+        def jit_noisy(values, opt_state, batch, noise):
+            _TRACE_COUNTS["noisy_step"] += 1
+            return jax.vmap(step_n, in_axes=(0, 0, None, 0))(
+                values, opt_state, batch, noise)
+
+        def jit_ideal(values, opt_state, batch):
+            _TRACE_COUNTS["ideal_step"] += 1
+            return jax.vmap(step_i, in_axes=(0, 0, None))(
+                values, opt_state, batch)
+
+        def eval_noisy(values, noise, _cfg=vcfg_n):
+            _TRACE_COUNTS["noisy_eval"] += 1
+            return jax.vmap(
+                lambda v, nz: vertical.loss_fn(_cfg, v, vv_j, vl_j,
+                                               noise=nz)[1],
+                in_axes=(0, 0))(values, noise)
+
+        def eval_ideal(values, _cfg=vcfg_i):
+            _TRACE_COUNTS["ideal_eval"] += 1
+            return jax.vmap(
+                lambda v: vertical.loss_fn(_cfg, v, vv_j, vl_j)[1])(values)
+
+        jit_noisy = jax.jit(jit_noisy)
+        jit_ideal = jax.jit(jit_ideal)
+        eval_noisy = jax.jit(eval_noisy)
+        eval_ideal = jax.jit(eval_ideal)
+
+        # identical init + identical batch stream for noisy lanes and the
+        # ideal reference: any divergence is the channel's doing.  The ideal
+        # run is deterministic and lane-independent, so a single vmap lane
+        # suffices (it keeps the batched program structure at 1/lanes cost).
+        params0 = vertical.init(vcfg_n, jax.random.PRNGKey(ccfg.seed))
+        vals_n = _lane_stack(params0, lanes)
+        vals_i = _lane_stack(params0, 1)
+        opt0 = opt.init(params0)
+        opt_n = _lane_stack(opt0, lanes)
+        opt_i = _lane_stack(opt0, 1)
+
+        base_key = jax.random.PRNGKey(ccfg.seed + 7919 * bits)
+        batch_rng = np.random.default_rng(ccfg.seed)
+        for step in range(ccfg.steps):
+            idx = batch_rng.integers(0, ccfg.n_train, ccfg.batch)
+            batch = (views_j[:, idx], labels_j[idx])
+            noise = fedocs.ChannelNoise(
+                rng=jax.random.split(jax.random.fold_in(base_key, step),
+                                     lanes),
+                p_miss=p_vec)
+            vals_n, opt_n, met_n = jit_noisy(vals_n, opt_n, batch, noise)
+            vals_i, opt_i, met_i = jit_ideal(vals_i, opt_i, batch)
+            if step in logged:
+                li = logged.index(step)
+                hist[bi, li] = np.asarray(met_n["loss_mean"])
+                hist_ideal[bi, li] = float(np.asarray(met_i["loss_mean"])[0])
+
+        eval_key = jax.random.fold_in(base_key, ccfg.steps)  # unused in train
+        eval_noise = fedocs.ChannelNoise(
+            rng=jax.random.split(eval_key, lanes), p_miss=p_vec)
+        m_n = eval_noisy(vals_n, eval_noise)
+        m_i = eval_ideal(vals_i)
+        acc[bi] = np.asarray(m_n["acc"])
+        nll[bi] = np.asarray(m_n["nll"])
+        acc_ideal[bi] = float(np.asarray(m_i["acc"])[0])
+        nll_ideal[bi] = float(np.asarray(m_i["nll"])[0])
+        noisy_params_out.append(vals_n)
+        ideal_params_out.append(vals_i)
+
+    return CurveResult(
+        config=ccfg, p_miss=np.asarray(ccfg.p_miss, np.float64),
+        acc=acc, nll=nll, acc_ideal=acc_ideal, nll_ideal=nll_ideal,
+        loss_history=hist, ideal_loss_history=hist_ideal,
+        logged_steps=np.asarray(logged), noisy_params=noisy_params_out,
+        ideal_params=ideal_params_out)

@@ -18,19 +18,31 @@ from repro.optim import grad_compression
 
 
 def make_train_step(loss_fn: Callable, optimizer, microbatches: int = 1,
-                    compress_k: Optional[float] = None) -> Callable:
+                    compress_k: Optional[float] = None,
+                    with_rng: bool = False) -> Callable:
     """loss_fn(values, batch) -> (loss, metrics dict).
 
     Returns train_step(values, opt_state, batch, err) ->
         (values, opt_state, err, metrics)
     ``err`` is the error-feedback memory when compress_k is set (else None —
     pass jnp.zeros(()) sentinel-free via the same pytree each call).
-    """
-    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
-    def compute_grads(values, batch):
+    ``with_rng=True`` switches the contract to a stochastic forward (e.g. the
+    channel-in-the-loop ``max_noisy`` aggregation): ``loss_fn(values, batch,
+    rng)`` and ``train_step(values, opt_state, batch, rng[, err])``.  ``rng``
+    is any pytree of traced arrays (a PRNG key, or a ``fedocs.ChannelNoise``)
+    — under microbatching each microbatch receives ``fold_in``-style
+    decorrelated keys via the scan index.
+    """
+    if with_rng:
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    else:
+        grad_fn = jax.value_and_grad(
+            lambda values, batch, rng: loss_fn(values, batch), has_aux=True)
+
+    def compute_grads(values, batch, rng):
         if microbatches == 1:
-            (loss, metrics), grads = grad_fn(values, batch)
+            (loss, metrics), grads = grad_fn(values, batch, rng)
             return grads, loss, metrics
 
         def split(x):
@@ -40,39 +52,74 @@ def make_train_step(loss_fn: Callable, optimizer, microbatches: int = 1,
 
         micro = jax.tree.map(split, batch)
 
-        def body(carry, mb):
+        def is_key_like(r):
+            dtype = jnp.asarray(r).dtype
+            prng_key = getattr(jax.dtypes, "prng_key", None)
+            if prng_key is not None and jnp.issubdtype(dtype, prng_key):
+                return True                   # new-style typed PRNG keys
+            return jnp.issubdtype(dtype, jnp.integer)   # legacy uint32 keys
+
+        def fold_rng(i):
+            if not with_rng:
+                return rng
+            # decorrelate microbatches: fold the scan index into every
+            # key-typed leaf (legacy uint32 or typed PRNG keys); float
+            # leaves (p_miss) pass through untouched.
+            return jax.tree.map(
+                lambda r: jax.random.fold_in(r, i) if is_key_like(r) else r,
+                rng)
+
+        def body(carry, im):
+            i, mb = im
             acc, loss_acc = carry
-            (loss, metrics), grads = grad_fn(values, mb)
+            (loss, metrics), grads = grad_fn(values, mb, fold_rng(i))
             acc = jax.tree.map(jnp.add, acc, grads)
             return (acc, loss_acc + loss), metrics
 
         zeros = jax.tree.map(lambda v: jnp.zeros(v.shape, jnp.float32),
                              values)
         (acc, loss_sum), metrics = jax.lax.scan(
-            body, (zeros, jnp.zeros((), jnp.float32)), micro)
+            body, (zeros, jnp.zeros((), jnp.float32)),
+            (jnp.arange(microbatches), micro))
         grads = jax.tree.map(lambda g: g / microbatches, acc)
         last_metrics = jax.tree.map(lambda m: m[-1], metrics)
         return grads, loss_sum / microbatches, last_metrics
 
-    if compress_k is not None:
-        def train_step(values, opt_state, batch, err):
-            grads, loss, metrics = compute_grads(values, batch)
-            grads, err = grad_compression.compress_tree(grads, err,
-                                                        compress_k)
-            values, opt_state, stats = optimizer.update(grads, opt_state,
-                                                        values)
-            metrics = dict(metrics)
-            metrics.update(stats)
-            metrics["loss_mean"] = loss
-            return values, opt_state, err, metrics
-        return train_step
-
-    def train_step(values, opt_state, batch):
-        grads, loss, metrics = compute_grads(values, batch)
+    def apply_update(values, opt_state, grads, loss, metrics):
         values, opt_state, stats = optimizer.update(grads, opt_state, values)
         metrics = dict(metrics)
         metrics.update(stats)
         metrics["loss_mean"] = loss
         return values, opt_state, metrics
+
+    if compress_k is not None and with_rng:
+        def train_step(values, opt_state, batch, rng, err):
+            grads, loss, metrics = compute_grads(values, batch, rng)
+            grads, err = grad_compression.compress_tree(grads, err,
+                                                        compress_k)
+            values, opt_state, metrics = apply_update(values, opt_state,
+                                                      grads, loss, metrics)
+            return values, opt_state, err, metrics
+        return train_step
+
+    if compress_k is not None:
+        def train_step(values, opt_state, batch, err):
+            grads, loss, metrics = compute_grads(values, batch, None)
+            grads, err = grad_compression.compress_tree(grads, err,
+                                                        compress_k)
+            values, opt_state, metrics = apply_update(values, opt_state,
+                                                      grads, loss, metrics)
+            return values, opt_state, err, metrics
+        return train_step
+
+    if with_rng:
+        def train_step(values, opt_state, batch, rng):
+            grads, loss, metrics = compute_grads(values, batch, rng)
+            return apply_update(values, opt_state, grads, loss, metrics)
+        return train_step
+
+    def train_step(values, opt_state, batch):
+        grads, loss, metrics = compute_grads(values, batch, None)
+        return apply_update(values, opt_state, grads, loss, metrics)
 
     return train_step

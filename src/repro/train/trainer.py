@@ -39,6 +39,10 @@ class TrainerConfig:
     data_deadline_s: Optional[float] = None     # straggler: batch deadline
     watchdog_factor: float = 3.0                # step-time anomaly threshold
     resume: bool = True
+    # stochastic-forward support (channel-in-the-loop training): when set,
+    # loss_fn takes a third rng argument and each step receives a key derived
+    # as fold_in(PRNGKey(seed), step) — resume replays the exact noise stream.
+    channel_rng_seed: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -72,9 +76,12 @@ def train(loss_fn: Callable, init_values, optimizer, data_fn: Callable,
             values, opt_state = restored["values"], restored["opt"]
             start_step = step
 
+    with_rng = tcfg.channel_rng_seed is not None
     step_fn = jax.jit(make_train_step(
         loss_fn, optimizer, microbatches=tcfg.microbatches,
-        compress_k=tcfg.compress_k))
+        compress_k=tcfg.compress_k, with_rng=with_rng))
+    base_rng = (jax.random.PRNGKey(tcfg.channel_rng_seed) if with_rng
+                else None)
 
     history: List[Dict[str, float]] = []
     substituted: List[int] = []
@@ -93,11 +100,13 @@ def train(loss_fn: Callable, init_values, optimizer, data_fn: Callable,
                 batch = data_fn(step)
         else:
             batch = data_fn(step)
+        args = (values, opt_state, batch)
+        if with_rng:
+            args += (jax.random.fold_in(base_rng, step),)
         if tcfg.compress_k is not None:
-            values, opt_state, err, metrics = step_fn(values, opt_state,
-                                                      batch, err)
+            values, opt_state, err, metrics = step_fn(*args, err)
         else:
-            values, opt_state, metrics = step_fn(values, opt_state, batch)
+            values, opt_state, metrics = step_fn(*args)
         dt = time.monotonic() - t0
         if durations and dt > tcfg.watchdog_factor * float(
                 np.median(durations)):

@@ -69,6 +69,80 @@ def test_quantized_maxpool_gradient_routes_to_code_winners():
     assert ((g != 0).sum(axis=0) == 1).all()
 
 
+def test_maxpool_noisy_zero_miss_pins_to_quantized():
+    """ISSUE property: max_noisy at p_miss=0 == maxpool_quantized(tie_break=
+    'first') bit for bit — forward AND vjp — for both bit depths."""
+    def prop(seed):
+        h = jnp.asarray(random_floats(seed, (5, 7, 9), specials=False))
+        key = jax.random.PRNGKey(seed)
+        g = jnp.asarray(random_floats(seed + 100, (7, 9), specials=False))
+        p0 = jnp.float32(0.0)
+        for bits in (8, 16):
+            out_n, vjp_n = jax.vjp(
+                lambda x: fedocs.maxpool_noisy(x, key, p0, bits), h)
+            out_q, vjp_q = jax.vjp(
+                lambda x: fedocs.maxpool_quantized(x, bits, "first"), h)
+            assert np.array_equal(np.asarray(out_n), np.asarray(out_q))
+            assert np.array_equal(np.asarray(vjp_n(g)[0]),
+                                  np.asarray(vjp_q(g)[0]))
+    sweep(prop, list(seeds(6)), "seed")
+
+
+def test_maxpool_noisy_gradient_routes_to_actual_winner():
+    """Under misses the cotangent must follow the worker that actually won
+    the contention (and transmitted), never the ideal argmax."""
+    h = jnp.asarray(random_floats(2, (6, 24), specials=False))
+    key = jax.random.PRNGKey(5)
+    p = jnp.float32(0.4)
+    pooled = fedocs.maxpool_noisy(h, key, p, 8)
+    g = jax.grad(lambda x: jnp.sum(fedocs.maxpool_noisy(x, key, p, 8)))(h)
+    g = np.asarray(g)
+    # exactly one winner per element receives the full cotangent
+    assert ((g != 0).sum(axis=0) == 1).all()
+    assert np.allclose(g.sum(axis=0), 1.0)
+    # the pooled value is the winner's D-bit payload: recompute it from the
+    # gradient's winner mask and the quantizer
+    win = np.argmax(g != 0, axis=0)
+    codes = np.asarray(qz.quantize(h, 8))
+    win_code = np.take_along_axis(codes, win[None], axis=0)[0]
+    expect = qz.dequantize(jnp.asarray(win_code), 8, h.dtype)
+    assert np.array_equal(np.asarray(pooled), np.asarray(expect))
+    # and it never exceeds the ideal quantized max (noisy max-pool is a
+    # lower bound; the value is always a real observation)
+    ideal = np.asarray(fedocs.maxpool_quantized(h, 8, "first"))
+    assert np.all(np.asarray(pooled) <= ideal + 1e-6)
+
+
+def test_maxpool_noisy_traced_p_miss_single_compilation():
+    """One jitted computation must serve the whole p_miss axis."""
+    traces = []
+    h = jnp.asarray(random_floats(0, (4, 8, 8), specials=False))
+    key = jax.random.PRNGKey(0)
+
+    @jax.jit
+    def f(x, k, p):
+        traces.append(1)
+        return fedocs.maxpool_noisy(x, k, p, 8)
+
+    outs = [np.asarray(f(h, key, jnp.float32(p)))
+            for p in (0.0, 0.05, 0.3, 0.9)]
+    assert len(traces) == 1
+    # p=0 lane of the SAME compiled function still pins to the ideal pool
+    assert np.array_equal(outs[0],
+                          np.asarray(fedocs.maxpool_quantized(h, 8, "first")))
+
+
+def test_aggregate_max_noisy_dispatch():
+    h = jnp.asarray(random_floats(1, (4, 3, 8), specials=False))
+    noise = fedocs.ChannelNoise(rng=jax.random.PRNGKey(1),
+                                p_miss=jnp.float32(0.1))
+    out = fedocs.aggregate(h, "max_noisy", noise=noise, noise_bits=8)
+    assert out.shape == (3, 8)
+    assert fedocs.output_dim("max_noisy", 4, 8) == 8
+    with pytest.raises(ValueError):
+        fedocs.aggregate(h, "max_noisy")      # noise is mandatory
+
+
 def test_mean_and_sum_grads():
     h = jnp.asarray(random_floats(2, (4, 8)))
     gm = np.asarray(jax.grad(lambda x: jnp.sum(fedocs.meanpool(x)))(h))

@@ -53,8 +53,32 @@ def test_multichannel_latency_divides():
     h = jnp.asarray(random_floats(2, (4, 32), specials=False))
     r1 = ocs.ocs_maxpool(h, bits=8)
     r4 = ocs.ocs_maxpool_multichannel(h, bits=8, n_channels=4)
-    assert int(r4.contention_slots) == -(-int(r1.contention_slots) // 4)
-    assert np.array_equal(np.asarray(r1.winner), np.asarray(r4.winner))
+    assert int(r4.latency_slots) == -(-int(r1.contention_slots) // 4)
+    # striping never changes the protocol outcome or transmission counts:
+    # OFDMA latency lives in latency_slots only (docstring contract)
+    assert int(r4.result.contention_slots) == int(r1.contention_slots)
+    assert int(r4.result.blocking_tx) == int(r1.blocking_tx)
+    assert np.array_equal(np.asarray(r1.winner), np.asarray(r4.result.winner))
+
+
+def test_comm_load_payload_bits():
+    """uplink_bits must follow ChannelConfig.payload_bits, not a fixed 32."""
+    k, n = 16, 8
+    for pb in (8, 16, 32, 64):
+        cfg = channel.ChannelConfig(payload_bits=pb)
+        f = channel.ocs_load(n, k, bits=8, cfg=cfg)
+        c = channel.concat_load(n, k, cfg=cfg)
+        m = channel.mean_load(n, k, cfg=cfg)
+        a = channel.avg_pred_load(n, k, cfg=cfg)
+        assert f.payload_bits == pb
+        assert f.uplink_bits == k * pb + f.uplink_overhead_bits
+        for load in (c, m, a):
+            assert load.uplink_bits == load.uplink_payload_msgs * pb
+        # bits accounting consistent with the latency model: fedocs payload
+        # slots inside latency use the same width as uplink_bits
+        assert f.latency_slots == f.uplink_overhead_bits + k * pb
+    # default stays the historical 32-bit float payload
+    assert channel.ocs_load(n, k, bits=8).payload_bits == 32
 
 
 def test_comm_load_scaling():

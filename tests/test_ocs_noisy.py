@@ -37,6 +37,59 @@ def test_miss_detection_degrades_gracefully():
     assert bool(jnp.all(codes_win <= jnp.max(h, axis=0) + 1e-6))
 
 
+def test_zero_miss_rounds_and_slots_match_clean_protocol():
+    """p_miss=0 resolves in ONE round and consumes exactly the clean-protocol
+    slot budget — the historical accounting reported rounds=max_rounds and
+    re-billed all K sub-frames every round."""
+    def prop(seed):
+        h = jnp.asarray(random_floats(seed, (6, 24), specials=False))
+        clean = ocs.ocs_maxpool(h, bits=12)
+        noisy = ocs.ocs_maxpool_noisy(h, jax.random.PRNGKey(seed), bits=12,
+                                      p_miss=0.0, max_rounds=3)
+        assert int(noisy.rounds) == 1
+        assert int(noisy.contention_slots) == int(clean.contention_slots)
+    sweep(prop, list(seeds(4)), "seed")
+
+
+def test_certain_miss_rounds_and_slots_hand_computed():
+    """p_miss ~= 1: nobody ever hears a blocking signal, so every worker
+    survives every sub-slot — all max_rounds rounds re-contend with ALL K
+    sub-frames unresolved, then the lowest index captures.  Every quantity
+    is hand-computable: rounds == max_rounds, slots == max_rounds * (D +
+    id_bits) * K, collisions == max_rounds * K, winner == worker 0."""
+    n, k, bits, max_rounds = 5, 7, 10, 3
+    h = jnp.asarray(random_floats(11, (n, k), specials=False))
+    res = ocs.ocs_maxpool_noisy(h, jax.random.PRNGKey(0), bits=bits,
+                                p_miss=1.0 - 1e-12, max_rounds=max_rounds)
+    total_bits = bits + ocs.host_id_bits(n)
+    assert int(res.rounds) == max_rounds
+    assert int(res.contention_slots) == max_rounds * total_bits * k
+    assert int(res.collisions) == max_rounds * k
+    assert np.all(np.asarray(res.winner) == 0)
+
+
+def test_partial_resolution_bills_only_unresolved_subframes():
+    """Re-contention slots scale with the sub-frames still contending: the
+    total must sit strictly between one full round and max_rounds full
+    rounds whenever some (but not all) sub-frames resolve in round one, and
+    must satisfy slots == total_bits * (K + sum of per-round unresolved)."""
+    h = jnp.asarray(random_floats(0, (16, 64), specials=False))
+    total_bits = 12 + ocs.host_id_bits(16)
+    res = ocs.ocs_maxpool_noisy(h, jax.random.PRNGKey(1), bits=12,
+                                p_miss=0.3, max_rounds=4)
+    slots = int(res.contention_slots)
+    rounds = int(res.rounds)
+    assert 1 <= rounds <= 4
+    full_round = total_bits * 64
+    assert slots >= full_round                  # round 1 bills all K
+    if rounds > 1:
+        # later rounds bill strictly fewer than all K sub-frames each
+        # unless literally nothing resolved (astronomically unlikely here)
+        assert slots < rounds * full_round
+    # slot total is a multiple of the per-sub-frame contention length
+    assert slots % total_bits == 0
+
+
 def test_higher_miss_rate_more_collisions():
     h = jnp.asarray(random_floats(2, (16, 64), specials=False))
     lo = ocs.ocs_maxpool_noisy(h, jax.random.PRNGKey(0), bits=12,

@@ -173,6 +173,63 @@ def test_scenario_registry_and_grid():
     assert len({c.name for c in cells}) == 8
 
 
+def test_mixed_bits_grid_uses_per_group_id_bits():
+    """A wide-bits cell next to a large-N narrow-bits cell must not overflow.
+
+    Historically ``max_id_bits`` was the max over ALL scenarios while the
+    32-bit-word guard fired per bits-group, so bits=24 (id_bits=2) raised on
+    the id_bits=9 of an unrelated N=512 bits=8 cell."""
+    cells = [Scenario("mix/wide", n_workers=4, bits=24),
+             Scenario("mix/huge", n_workers=512, bits=8)]
+    sw = sim_sweep.run_sweep(cells, k_elems=8, rounds=1)   # must not raise
+    # each cell still matches the unbatched oracle at its own bits depth
+    for i, s in enumerate(cells):
+        h = jnp.asarray(sw.scenario_h(i)[0])
+        ref = ocs.ocs_maxpool(h, bits=s.bits)
+        cell = sw.clean_cell(i, 0)
+        assert np.array_equal(np.asarray(cell.winner), np.asarray(ref.winner))
+        assert int(cell.contention_slots) == int(ref.contention_slots)
+
+
+def test_sharded_sweep_matches_vmap_path():
+    """Scenario-axis shard_map over >=2 forced host devices is bit-for-bit
+    identical to the single-device vmap path — including a group size that
+    does not divide the device count (padding rows dropped)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = textwrap.dedent("""
+        import jax, numpy as np
+        assert jax.local_device_count() == 4, jax.devices()
+        from repro.sim.scenarios import scenario_grid
+        from repro.sim import sweep as sim_sweep
+        # 6 cells per bits group: not divisible by 4 nor by 2 -> padding
+        cells = scenario_grid(n_workers=(2, 5, 16), bits=(8, 16),
+                              p_miss=(0.0, 0.05))
+        ref = sim_sweep.run_sweep(cells, k_elems=16, rounds=2, n_devices=1)
+        for n_dev in (None, 2, 4):     # None = auto-detect (4 devices)
+            got = sim_sweep.run_sweep(cells, k_elems=16, rounds=2,
+                                      n_devices=n_dev)
+            for ta, tb in ((ref.clean, got.clean), (ref.noisy, got.noisy)):
+                for x, y in zip(jax.tree.leaves(ta), jax.tree.leaves(tb)):
+                    assert np.array_equal(np.asarray(x), np.asarray(y)), n_dev
+            assert np.array_equal(ref.clean_latency_slots,
+                                  got.clean_latency_slots)
+            assert np.array_equal(ref.noisy_latency_slots,
+                                  got.noisy_latency_slots)
+        print("SHARDED_OK")
+    """)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, env=env, timeout=900)
+    assert proc.returncode == 0, f"OUT:\n{proc.stdout}\nERR:\n{proc.stderr}"
+    assert "SHARDED_OK" in proc.stdout
+
+
 def test_run_sweep_input_validation():
     with pytest.raises(ValueError):
         sim_sweep.run_sweep([])

@@ -1,0 +1,153 @@
+"""Channel-in-the-loop training curves (ISSUE 2 tentpole acceptance).
+
+Contracts under test:
+  * one jitted train-step compilation per ``bits`` value serves the whole
+    traced ``p_miss`` lane axis (trace counters);
+  * the ``p_miss=0`` lane is bit-for-bit the ideal ``max_q{bits}`` run —
+    trained parameters and evaluated accuracy;
+  * record/row emission through ``repro.sim.results``;
+  * the rng-threaded train step and trainer hook behind the curve runner.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fedocs, vertical
+from repro.core.vertical import VerticalConfig
+from repro.optim import optimizers, schedules
+from repro.sim import results as sim_results
+from repro.sim import train_curves as tc
+from repro.train.train_step import make_train_step
+from repro.train.trainer import TrainerConfig, train
+
+TINY = tc.CurveConfig(bits=(8,), p_miss=(0.0, 0.3), steps=8, batch=16,
+                      n_train=128, n_val=64, hw=8, encoder_dims=(8,),
+                      embed_dim=8, head_dims=(8,), log_every=4)
+
+
+def _leaves_equal(a, b, lane=0):
+    return all(np.array_equal(np.asarray(x)[lane], np.asarray(y)[lane])
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def test_one_compilation_per_bits_value():
+    cfg = tc.CurveConfig(**{**TINY.__dict__, "bits": (8, 16)})
+    tc.reset_trace_counts()
+    tc.run_curves(cfg)
+    traces = tc.trace_counts()
+    assert traces["noisy_step"] == 2, traces
+    assert traces["ideal_step"] == 2, traces
+    assert traces["noisy_eval"] == 2 and traces["ideal_eval"] == 2, traces
+
+
+def test_zero_miss_lane_matches_ideal_run_bit_for_bit():
+    out = tc.run_curves(TINY)
+    assert out.p_miss[0] == 0.0
+    # trained parameters: lane 0 of the noisy run == the ideal max_q8 run
+    assert _leaves_equal(out.noisy_params[0], out.ideal_params[0], lane=0)
+    assert out.acc[0, 0] == out.acc_ideal[0]
+    assert out.nll[0, 0] == out.nll_ideal[0]
+    # the logged loss history coincides too (same compiled-math trajectory)
+    assert np.array_equal(out.loss_history[0, :, 0],
+                          out.ideal_loss_history[0])
+    # the deterministic ideal reference trains a single vmap lane
+    assert jax.tree.leaves(out.ideal_params[0])[0].shape[0] == 1
+
+
+def test_curve_records_and_rows(tmp_path):
+    out = tc.run_curves(TINY)
+    recs = sim_results.summarize_curves(out)
+    assert len(recs) == len(TINY.bits) * len(TINY.p_miss)
+    r0 = recs[0]
+    assert r0["bits"] == 8 and r0["p_miss"] == 0.0
+    assert r0["acc"] == r0["acc_ideal"] and r0["acc_gap"] == 0.0
+    # uplink accounting uses the D-bit payload the winner transmits
+    from repro.core import channel
+    fed = channel.ocs_load(TINY.n_workers, TINY.embed_dim, bits=8,
+                           cfg=channel.ChannelConfig(payload_bits=8))
+    assert r0["uplink_bits_fedocs"] == fed.uplink_bits
+    rows = sim_results.curve_rows(recs)
+    assert len(rows) == len(recs)
+    assert rows[0].startswith("curves/b8_p0,")
+    sim_results.write_json(recs, str(tmp_path / "curves.json"))
+    import json
+    loaded = json.loads((tmp_path / "curves.json").read_text())
+    assert loaded[1]["p_miss"] == 0.3
+
+
+def test_run_curves_is_deterministic():
+    a = tc.run_curves(TINY)
+    b = tc.run_curves(TINY)
+    assert np.array_equal(a.acc, b.acc)
+    assert _leaves_equal(a.noisy_params[0], b.noisy_params[0], lane=1)
+
+
+def test_curve_config_validation():
+    import pytest
+    with pytest.raises(ValueError):
+        tc.CurveConfig(bits=(12,))            # no ideal max_q12 reference
+    with pytest.raises(ValueError):
+        tc.CurveConfig(p_miss=(0.0, 1.0))
+
+
+def test_train_step_with_rng_microbatches():
+    """with_rng threading: microbatches receive decorrelated keys and the
+    accumulated path stays consistent with the single-batch contract."""
+    vcfg = VerticalConfig(n_workers=2, input_dim=4, encoder_dims=(4,),
+                          embed_dim=4, head_dims=(4,), output_dim=2,
+                          task="classification", aggregation="max_noisy",
+                          noise_bits=8, tie_break="first")
+    params = vertical.init(vcfg, jax.random.PRNGKey(0))
+    opt = optimizers.adamw(schedules.linear_warmup_cosine(1e-3, 1, 4))
+    views = jnp.asarray(np.random.default_rng(0)
+                        .standard_normal((2, 8, 4)).astype(np.float32))
+    labels = jnp.zeros((8,), jnp.int32)
+
+    def loss(values, batch, noise):
+        v, y = batch                 # batch-leading for microbatch splitting
+        return vertical.loss_fn(vcfg, values, jnp.swapaxes(v, 0, 1), y,
+                                noise=noise)
+
+    batch = (jnp.swapaxes(views, 0, 1), labels)      # (B, N, d)
+    noise = fedocs.ChannelNoise(rng=jax.random.PRNGKey(3),
+                                p_miss=jnp.float32(0.2))
+    step1 = make_train_step(loss, opt, with_rng=True)
+    step2 = make_train_step(loss, opt, microbatches=2, with_rng=True)
+    state = opt.init(params)
+    v1, _, m1 = jax.jit(step1)(params, state, batch, noise)
+    v2, _, m2 = jax.jit(step2)(params, state, batch, noise)
+    for m in (m1, m2):
+        assert np.isfinite(float(m["loss_mean"]))
+    # both produce finite updated params of identical structure
+    assert jax.tree.structure(v1) == jax.tree.structure(v2)
+    for x in jax.tree.leaves(v2):
+        assert np.isfinite(np.asarray(x)).all()
+
+
+def test_trainer_channel_rng_hook():
+    """trainer.train drives a stochastic (max_noisy) loss via
+    channel_rng_seed; the run is reproducible step-for-step."""
+    vcfg = VerticalConfig(n_workers=2, input_dim=4, encoder_dims=(4,),
+                          embed_dim=4, head_dims=(4,), output_dim=2,
+                          task="classification", aggregation="max_noisy",
+                          noise_bits=8, tie_break="first")
+    init = vertical.init(vcfg, jax.random.PRNGKey(0))
+    opt = optimizers.adamw(schedules.linear_warmup_cosine(1e-3, 1, 4))
+    rng = np.random.default_rng(0)
+    views = jnp.asarray(rng.standard_normal((2, 8, 4)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 2, (8,)), jnp.int32)
+
+    def loss(values, batch, key):
+        noise = fedocs.ChannelNoise(rng=key, p_miss=jnp.float32(0.1))
+        v, y = batch
+        return vertical.loss_fn(vcfg, values, v, y, noise=noise)
+
+    tcfg = TrainerConfig(steps=4, log_every=2, channel_rng_seed=11)
+    runs = [train(loss, init, opt, lambda step: (views, labels), tcfg)
+            for _ in range(2)]
+    assert runs[0].final_step == 4
+    assert all(np.isfinite(row["loss_mean"]) for row in runs[0].history)
+    for x, y in zip(jax.tree.leaves(runs[0].values),
+                    jax.tree.leaves(runs[1].values)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
