@@ -1,0 +1,127 @@
+"""Noisy-contention backend benchmark: lax.scan vs the fused Pallas kernel.
+
+Times ``fedocs.maxpool_noisy`` — the channel-in-the-loop aggregation that
+dominates the curve runner's step time — on the curve-runner shape (N
+workers x the flattened batch*embed element axis), with the miss-probability
+axis as vmap lanes of one jitted dispatch per backend, exactly as
+``repro.sim.train_curves`` drives it.  Mirrors ``bench_curves``'s smoke
+contract: the run self-checks
+
+  * one compilation per (bits, backend) serving every traced p_miss lane,
+  * scan-vs-pallas bit-for-bit parity (forward AND vjp) on the bench shape,
+  * the ``p_miss=0`` lane pinning to ideal ``maxpool_quantized(bits,
+    'first')`` through BOTH backends,
+
+and reports per-backend step times plus the pallas/scan speedup (the README
+kernels table quotes these numbers).
+
+  PYTHONPATH=src python -m benchmarks.bench_contention           # full shape
+  PYTHONPATH=src python -m benchmarks.bench_contention --smoke   # CI tier
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fedocs
+
+BACKENDS = ("scan", "pallas")
+
+
+def _time(fn, *args, iters: int) -> float:
+    jax.block_until_ready(fn(*args))             # compile outside the clock
+    t0 = time.time()
+    for _ in range(iters):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run(smoke: bool = False) -> List[str]:
+    # curve-runner shapes: fedocs.maxpool_noisy sees (N, batch, embed_dim)
+    # and flattens to (N, batch*embed); bench_curves' smoke/full configs
+    if smoke:
+        n, batch, embed, iters = 4, 32, 16, 5
+        p_lanes = (0.0, 0.05, 0.2)
+    else:
+        n, batch, embed, iters = 4, 64, 32, 20
+        p_lanes = (0.0, 0.01, 0.02, 0.05, 0.1)
+    h = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal((n, batch, embed)).astype(np.float32))
+    keys = jax.random.split(jax.random.PRNGKey(0), len(p_lanes))
+    ps = jnp.asarray(p_lanes, jnp.float32)
+    g = jnp.ones((batch, embed), jnp.float32)
+
+    rows: List[str] = []
+    compiles = {b: 0 for b in BACKENDS}
+    for bits in (8, 16):
+        outs, grads, times = {}, {}, {}
+        for backend in BACKENDS:
+            def lanes_fn(h, keys, ps, _b=backend, _bits=bits):
+                compiles[_b] += 1
+
+                def lane(k, p):
+                    out, vjp = jax.vjp(
+                        lambda x: fedocs.maxpool_noisy(x, k, p, _bits, 3,
+                                                       _b), h)
+                    return out, vjp(g)[0]   # backward runs inside the timing
+
+                return jax.vmap(lane)(keys, ps)
+            lanes = jax.jit(lanes_fn)
+            times[backend] = _time(lanes, h, keys, ps, iters=iters)
+            out_l, grad_l = lanes(h, keys, ps)
+            outs[backend] = np.asarray(out_l)
+            grads[backend] = np.asarray(grad_l)
+
+        # self-check 1: scan and pallas agree bit for bit, forward + vjp
+        # (the routed cotangent is nonzero by construction — one winner per
+        # element receives g — so an all-zero grad means the check went
+        # vacuous, not that parity holds)
+        if not np.any(grads["scan"]):
+            raise RuntimeError(f"bits={bits}: vjp self-check is vacuous")
+        if not np.array_equal(outs["scan"], outs["pallas"]):
+            raise RuntimeError(f"bits={bits}: backend forward mismatch")
+        if not np.array_equal(grads["scan"], grads["pallas"]):
+            raise RuntimeError(f"bits={bits}: backend vjp mismatch")
+        # self-check 2: the p_miss=0 lane pins to the ideal quantized pool
+        ideal = np.asarray(fedocs.maxpool_quantized(h, bits, "first"))
+        for backend in BACKENDS:
+            if not np.array_equal(outs[backend][0], ideal):
+                raise RuntimeError(
+                    f"bits={bits}/{backend}: p_miss=0 lane != ideal "
+                    f"max_q{bits}")
+
+        speedup = times["scan"] / max(times["pallas"], 1e-9)
+        for backend in BACKENDS:
+            rows.append(
+                f"contention/{backend}_b{bits},{times[backend]:.0f},"
+                f"N={n};elems={batch * embed};lanes={len(p_lanes)};"
+                f"fwd+vjp=1")
+        rows.append(
+            f"contention/speedup_b{bits},0,pallas_over_scan="
+            f"{speedup:.2f}x")
+
+    # self-check 3: one trace per (bits, backend) served every p_miss lane
+    # (+1 per timing warm-up is impossible: jit caches; the count is exact)
+    for backend, count in compiles.items():
+        if count != 2:
+            raise RuntimeError(
+                f"{backend} backend recompiled per lane: {count} traces "
+                "for 2 bit depths — traced-(p_miss, rng) regression")
+    rows.append(
+        "contention/meta,0,"
+        f"compiles_scan={compiles['scan']};"
+        f"compiles_pallas={compiles['pallas']};"
+        "p0_matches_ideal=1;backends_bitwise_equal=1")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(smoke="--smoke" in sys.argv):
+        print(r)

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fedocs
+from repro.kernels import interpret_default
 from repro.kernels.maxpool import ops as mp_ops
 from repro.kernels.ocs_quant import ops as q_ops
 
@@ -31,13 +32,14 @@ def run() -> List[str]:
     t_ref = _time(jax.jit(lambda x: jnp.max(x, axis=0)), h)
     t_core = _time(jax.jit(lambda x: fedocs.maxpool(x, "all")), h)
     t_kern = _time(lambda x: mp_ops.maxpool(x), h)
+    interp = f"interpret={interpret_default()}"
     rows.append(f"kernel/maxpool_jnp,{t_ref:.0f},baseline")
     rows.append(f"kernel/maxpool_core,{t_core:.0f},custom_vjp")
-    rows.append(f"kernel/maxpool_pallas_interp,{t_kern:.0f},interpret=True")
+    rows.append(f"kernel/maxpool_pallas,{t_kern:.0f},{interp}")
 
     x = jnp.asarray(rng.standard_normal((512, 512)).astype(np.float32))
     t_enc = _time(lambda v: q_ops.encode(v, 8), x)
-    rows.append(f"kernel/ocs_quant_encode8,{t_enc:.0f},interpret=True")
+    rows.append(f"kernel/ocs_quant_encode8,{t_enc:.0f},{interp}")
     return rows
 
 

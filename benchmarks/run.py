@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_comm      paper §I claim (O(K) vs O(N*K) comm; ICI fusion bytes)
   bench_sweep     batched scenario sweep (repro.sim) over N x bits x p_miss
   bench_curves    channel-in-the-loop training: accuracy vs p_miss x bits
+  bench_contention  noisy-contention backends: lax.scan vs fused Pallas
   bench_kernels   Pallas kernel micro-timings (interpret mode)
   bench_roofline  roofline terms per (arch x shape) from dry-run artifacts
 """
@@ -19,9 +20,9 @@ import time
 
 def main() -> None:
     fast = "--fast" in sys.argv
-    from benchmarks import (bench_comm, bench_curves, bench_fig2,
-                            bench_kernels, bench_roofline, bench_sweep,
-                            bench_table1)
+    from benchmarks import (bench_comm, bench_contention, bench_curves,
+                            bench_fig2, bench_kernels, bench_roofline,
+                            bench_sweep, bench_table1)
     print("name,us_per_call,derived")
     t0 = time.time()
     for row in bench_comm.run():
@@ -29,6 +30,8 @@ def main() -> None:
     for row in bench_sweep.run(smoke=fast):
         print(row)
     for row in bench_curves.run(smoke=fast):
+        print(row)
+    for row in bench_contention.run(smoke=fast):
         print(row)
     for row in bench_kernels.run():
         print(row)

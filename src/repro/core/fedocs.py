@@ -138,25 +138,28 @@ class ChannelNoise:
 
     Both leaves are ordinary traced arrays, so a single compiled train step
     (or a ``vmap`` lane axis) serves every miss probability — only the
-    quantization depth ``bits`` is static.
+    quantization depth ``bits`` is static.  ``p_miss`` is a scalar or a
+    per-worker ``(N,)`` array (heterogeneous near/far users); with every
+    entry equal, the vector path is bit-for-bit the scalar path.
     """
 
     rng: jax.Array       # PRNG key for the per-sub-slot sensing draws
-    p_miss: jax.Array    # () carrier-sensing miss probability
+    p_miss: jax.Array    # () or (N,) carrier-sensing miss probability
 
 
 jax.tree_util.register_dataclass(
     ChannelNoise, data_fields=["rng", "p_miss"], meta_fields=[])
 
 
-def _maxpool_noisy_impl(h, rng, p_miss, bits, max_rounds):
+def _maxpool_noisy_impl(h, rng, p_miss, bits, max_rounds, backend):
     """Protocol-outcome pooling: (pooled value, winner one-hot mask)."""
     n = h.shape[0]
     flat = h.reshape(n, -1)                                    # (N, M)
     id_bits = ocs.host_id_bits(n)
     res = ocs.ocs_maxpool_noisy_core(
         flat, jnp.ones((n,), dtype=bool), id_bits, rng, p_miss,
-        bits=bits, max_id_bits=id_bits, max_rounds=max_rounds)
+        bits=bits, max_id_bits=id_bits, max_rounds=max_rounds,
+        backend=backend)
     codes = qz.quantize(flat, bits)
     win_code = jnp.take_along_axis(codes, res.winner[None, :], axis=0)[0]
     pooled = qz.dequantize(win_code, bits, h.dtype).reshape(h.shape[1:])
@@ -164,9 +167,10 @@ def _maxpool_noisy_impl(h, rng, p_miss, bits, max_rounds):
     return pooled, onehot.reshape(h.shape).astype(h.dtype)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
 def maxpool_noisy(h: jax.Array, rng: jax.Array, p_miss: jax.Array,
-                  bits: int = 16, max_rounds: int = 3) -> jax.Array:
+                  bits: int = 16, max_rounds: int = 3,
+                  backend: str = "scan") -> jax.Array:
     """Max-pool through the *simulated* OCS channel (paper Alg. 1 + misses).
 
     The per-element winner is the noisy-protocol outcome — quantized D-bit
@@ -176,19 +180,26 @@ def maxpool_noisy(h: jax.Array, rng: jax.Array, p_miss: jax.Array,
     decode.  Backward routes the cotangent to the selected winner only
     (Eq. 6 for the *actual* transmitter, not the ideal argmax).
 
+    ``p_miss`` is a traced scalar or per-worker ``(N,)`` array.  ``backend``
+    picks the contention engine for the forward pass: ``"scan"`` (the
+    reference ``lax.scan``) or ``"pallas"`` (the fused
+    ``repro.kernels.ocs_contention`` kernel) — bit-for-bit interchangeable,
+    forward and vjp (the Eq.-6 winner-routed backward is shared).
+
     At ``p_miss=0`` this is bit-for-bit ``maxpool_quantized(h, bits,
     'first')`` in both the forward and the vjp.
     """
-    pooled, _ = _maxpool_noisy_impl(h, rng, p_miss, bits, max_rounds)
+    pooled, _ = _maxpool_noisy_impl(h, rng, p_miss, bits, max_rounds, backend)
     return pooled
 
 
-def _maxpool_noisy_fwd(h, rng, p_miss, bits, max_rounds):
-    pooled, mask = _maxpool_noisy_impl(h, rng, p_miss, bits, max_rounds)
+def _maxpool_noisy_fwd(h, rng, p_miss, bits, max_rounds, backend):
+    pooled, mask = _maxpool_noisy_impl(h, rng, p_miss, bits, max_rounds,
+                                       backend)
     return pooled, (mask, rng, p_miss)
 
 
-def _maxpool_noisy_bwd(bits, max_rounds, res, g):
+def _maxpool_noisy_bwd(bits, max_rounds, backend, res, g):
     mask, rng, p_miss = res
     # rng is integer-typed (a PRNG key): its cotangent space is float0.
     d_rng = np.zeros(np.shape(rng), jax.dtypes.float0)
@@ -215,11 +226,13 @@ def concat(h: jax.Array) -> jax.Array:
 def aggregate(h: jax.Array, mode: str, *, tie_break: str = "all",
               noise: Optional[ChannelNoise] = None,
               noise_bits: int = 16,
-              noise_max_rounds: int = 3) -> jax.Array:
+              noise_max_rounds: int = 3,
+              noise_backend: str = "scan") -> jax.Array:
     """Pool a worker-leading feature tensor. h: (N, ..., K).
 
     ``max_noisy`` additionally needs ``noise`` (a :class:`ChannelNoise`);
-    ``noise_bits``/``noise_max_rounds`` are its static protocol knobs.
+    ``noise_bits``/``noise_max_rounds``/``noise_backend`` are its static
+    protocol knobs (``noise_backend``: ``"scan"`` or ``"pallas"``).
     """
     if mode == "sum":
         return jnp.sum(h, axis=0)
@@ -234,7 +247,7 @@ def aggregate(h: jax.Array, mode: str, *, tie_break: str = "all",
             raise ValueError(
                 "max_noisy aggregation needs noise=ChannelNoise(rng, p_miss)")
         return maxpool_noisy(h, noise.rng, noise.p_miss, noise_bits,
-                             noise_max_rounds)
+                             noise_max_rounds, noise_backend)
     if mode == "mean":
         return meanpool(h)
     if mode == "concat":

@@ -121,6 +121,38 @@ def _id_codes(n_workers: int, id_bits: jax.Array) -> jax.Array:
     return top - idx
 
 
+def sensing_keep_prob(p_miss: jax.Array, dtype) -> jax.Array:
+    """Per-sub-slot hear probability, broadcastable over an (N, K) slot.
+
+    ``p_miss`` is either a scalar (every worker senses equally well) or a
+    per-worker ``(N,)`` array (heterogeneous near/far users: a far worker
+    overhears blocking signals with lower probability).  Returns ``1 - p``
+    shaped ``()`` or ``(N, 1)`` so ``bernoulli(key, p_keep, (N, K))`` draws
+    the worker axis down the leading dimension.  With every entry equal the
+    vector path is bit-for-bit the scalar path (the uniform draw does not
+    depend on the threshold; property-tested).
+    """
+    dt = dtype if jnp.issubdtype(jnp.dtype(dtype), jnp.floating) else jnp.float32
+    p = jnp.asarray(p_miss, dt)
+    if p.ndim == 0:
+        return 1.0 - p
+    if p.ndim == 1:
+        return 1.0 - p[:, None]
+    raise ValueError(f"p_miss must be scalar or (N,), got shape {p.shape}")
+
+
+def sensing_heard(key: jax.Array, p_keep: jax.Array, n: int, k: int) -> jax.Array:
+    """One sub-slot of carrier-sensing draws: heard[n, k] ~ Bern(p_keep[n]).
+
+    The single place the sensing randomness is drawn — the ``lax.scan``
+    protocol core consumes it slot by slot and the fused Pallas contention
+    kernel (``repro.kernels.ocs_contention``) pre-draws the identical stream
+    by vmapping this helper over the (round, sub-slot) key grid, which keeps
+    the two backends bit-for-bit interchangeable.
+    """
+    return jax.random.bernoulli(key, p_keep, (n, k))
+
+
 def ocs_maxpool_core(h: jax.Array, mask: jax.Array, id_bits: jax.Array, *,
                      bits: int, max_id_bits: int) -> OCSResult:
     """Batched Algorithm 1 core over a padded worker axis.
@@ -252,86 +284,120 @@ def reference_maxpool(h: jax.Array, bits: int):
 # beyond-paper: imperfect carrier sensing
 # ---------------------------------------------------------------------------
 
+NOISY_BACKENDS = ("scan", "pallas")
+
+
 def ocs_maxpool_noisy_core(h: jax.Array, mask: jax.Array, id_bits: jax.Array,
                            rng: jax.Array, p_miss: jax.Array, *,
                            bits: int, max_id_bits: int,
-                           max_rounds: int = 3) -> NoisyOCSResult:
+                           max_rounds: int = 3,
+                           backend: str = "scan") -> NoisyOCSResult:
     """Batched imperfect-sensing core (padded N, traced ``id_bits``/``p_miss``).
 
     Same contract as :func:`ocs_maxpool_core`; additionally ``p_miss`` may be
-    a traced scalar, so a whole miss-probability axis of a scenario grid
+    a traced scalar — or a per-worker ``(N_max,)`` array for heterogeneous
+    near/far users — so a whole miss-probability axis of a scenario grid
     shares one compilation.  With ``max_id_bits == id_bits`` the random-bit
     consumption matches the historical unbatched implementation exactly.
+
+    ``backend`` selects the contention engine:
+
+      * ``"scan"``  — the reference ``lax.scan`` over (max_rounds x sub-slot)
+        steps, one Bernoulli draw + alive update per sub-slot;
+      * ``"pallas"`` — the fused ``repro.kernels.ocs_contention`` kernel: the
+        sensing stream is pre-drawn in one batched call and packed into
+        uint32 bit-planes, and the whole tournament runs in a single VMEM
+        pass (interpret-mode on CPU hosts).  Bit-for-bit identical to
+        ``"scan"`` in every ``NoisyOCSResult`` field (property-tested in
+        ``tests/test_kernels_contention.py``).
     """
     if bits + max_id_bits > 32:
         raise ValueError(
             f"contention word overflows uint32: bits={bits} + "
             f"max_id_bits={max_id_bits} > 32")
+    if backend not in NOISY_BACKENDS:
+        raise ValueError(
+            f"unknown noisy-OCS backend {backend!r}; valid: {NOISY_BACKENDS}")
     n_max, k_elems = h.shape
     codes = qz.quantize(h, bits).astype(jnp.uint32)
     id_bits = jnp.asarray(id_bits, jnp.int32)
     ids = _id_codes(n_max, id_bits)
     word = (codes << id_bits.astype(jnp.uint32)) | ids[:, None]
     total_bits = bits + id_bits
-    p_miss = jnp.asarray(p_miss, h.dtype if jnp.issubdtype(h.dtype, jnp.floating)
-                         else jnp.float32)
+    n_slots = bits + max_id_bits
+    p_keep = sensing_keep_prob(p_miss, h.dtype)
 
-    def contention_round(alive, key):
-        def slot(alive, d):
-            active = d < total_bits
-            shift = jnp.maximum(total_bits - 1 - d, 0).astype(jnp.uint32)
-            bit = (word >> shift) & jnp.uint32(1)
-            tx = alive & (bit == 1) & active
-            any_tx = jnp.any(tx, axis=0, keepdims=True)
-            heard = jax.random.bernoulli(
-                jax.random.fold_in(key, d), 1.0 - p_miss,
-                (n_max, k_elems))
-            # a sensing worker quits only if someone transmitted AND it heard
-            alive = alive & (tx | ~(any_tx & heard))
-            return alive, None
+    if backend == "pallas":
+        # imported lazily: the kernels layer is optional and core must not
+        # pull Pallas in for scan-only users.
+        from repro.kernels.ocs_contention import ops as contention_ops
 
-        alive, _ = jax.lax.scan(slot, alive, jnp.arange(bits + max_id_bits))
-        return alive
+        winner, contending, collided = contention_ops.noisy_contention(
+            word, mask, total_bits, rng, p_keep,
+            n_slots=n_slots, max_rounds=max_rounds)
+        slots = total_bits.astype(jnp.int32) * jnp.sum(contending)
+        rounds = jnp.sum((contending > 0).astype(jnp.int32))
+        collisions = jnp.sum(collided)
+    else:
+        def contention_round(alive, key):
+            def slot(alive, d):
+                active = d < total_bits
+                shift = jnp.maximum(total_bits - 1 - d, 0).astype(jnp.uint32)
+                bit = (word >> shift) & jnp.uint32(1)
+                tx = alive & (bit == 1) & active
+                any_tx = jnp.any(tx, axis=0, keepdims=True)
+                heard = sensing_heard(
+                    jax.random.fold_in(key, d), p_keep, n_max, k_elems)
+                # a sensing worker quits only if someone transmitted AND it
+                # heard
+                alive = alive & (tx | ~(any_tx & heard))
+                return alive, None
 
-    def round_body(carry, r):
-        alive, slots, rounds, done = carry
-        key = jax.random.fold_in(rng, r)
-        # only sub-frames still unresolved at round start re-contend: they
-        # alone consume channel slots (bits + id_bits sub-slots each); a
-        # resolved sub-frame's lone survivor keeps its claim untouched.
-        contending = jnp.sum(~done, dtype=jnp.int32)      # () sub-frames
-        survivors = contention_round(alive, key)
-        n_surv = jnp.sum(survivors, axis=0)               # (K,)
-        collided = n_surv > 1
-        # collided sub-frames re-contend among survivors; resolved keep winner
-        new_done = done | ~collided
-        slots = slots + total_bits.astype(jnp.int32) * contending
-        rounds = rounds + (contending > 0).astype(jnp.int32)
-        return (survivors, slots, rounds, new_done), jnp.sum(collided,
-                                                             dtype=jnp.int32)
+            alive, _ = jax.lax.scan(slot, alive, jnp.arange(n_slots))
+            return alive
 
-    alive0 = jnp.broadcast_to(mask[:, None], (n_max, k_elems))
-    done0 = jnp.zeros((k_elems,), dtype=bool)
-    (alive, slots, rounds, done), collisions = jax.lax.scan(
-        round_body, (alive0, jnp.int32(0), jnp.int32(0), done0),
-        jnp.arange(max_rounds))
+        def round_body(carry, r):
+            alive, slots, rounds, done = carry
+            key = jax.random.fold_in(rng, r)
+            # only sub-frames still unresolved at round start re-contend:
+            # they alone consume channel slots (bits + id_bits sub-slots
+            # each); a resolved sub-frame's lone survivor keeps its claim
+            # untouched.
+            contending = jnp.sum(~done, dtype=jnp.int32)      # () sub-frames
+            survivors = contention_round(alive, key)
+            n_surv = jnp.sum(survivors, axis=0)               # (K,)
+            collided = n_surv > 1
+            # collided sub-frames re-contend among survivors; resolved keep
+            # winner
+            new_done = done | ~collided
+            slots = slots + total_bits.astype(jnp.int32) * contending
+            rounds = rounds + (contending > 0).astype(jnp.int32)
+            return (survivors, slots, rounds, new_done), jnp.sum(
+                collided, dtype=jnp.int32)
 
-    winner = jnp.argmax(alive, axis=0).astype(jnp.int32)  # capture: lowest idx
+        alive0 = jnp.broadcast_to(mask[:, None], (n_max, k_elems))
+        done0 = jnp.zeros((k_elems,), dtype=bool)
+        (alive, slots, rounds, done), coll_rounds = jax.lax.scan(
+            round_body, (alive0, jnp.int32(0), jnp.int32(0), done0),
+            jnp.arange(max_rounds))
+        winner = jnp.argmax(alive, axis=0).astype(jnp.int32)  # lowest-idx cap
+        collisions = jnp.sum(coll_rounds)
+
     true_code = jnp.max(jnp.where(mask[:, None], codes, 0), axis=0)
     correct = jnp.take_along_axis(codes, winner[None, :], axis=0)[0] \
         == true_code
     return NoisyOCSResult(
         winner=winner,
         correct=correct,
-        collisions=jnp.sum(collisions),
+        collisions=collisions,
         rounds=rounds,
         contention_slots=slots,
     )
 
 
 def ocs_maxpool_noisy(h: jax.Array, rng: jax.Array, bits: int = 16,
-                      p_miss: float = 0.0, max_rounds: int = 3
-                      ) -> NoisyOCSResult:
+                      p_miss: float = 0.0, max_rounds: int = 3,
+                      backend: str = "scan") -> NoisyOCSResult:
     """Algorithm 1 with miss-detection: a sensing worker overhears a blocking
     signal with probability ``1 - p_miss`` per sub-slot.  Missed detections
     create false survivors; when several survivors transmit payloads the
@@ -339,10 +405,11 @@ def ocs_maxpool_noisy(h: jax.Array, rng: jax.Array, bits: int = 16,
     re-contend (up to ``max_rounds``, then lowest-index capture).
 
     With ``p_miss=0`` this reduces exactly to :func:`ocs_maxpool`
-    (property-tested).  The fusion result degrades gracefully: an incorrect
-    winner still transmits *its own true value*, so the pooled feature is a
-    lower bound of the true max — the learner sees a noisy max-pool, never a
-    corrupted value.
+    (property-tested).  ``p_miss`` is a scalar or a per-worker ``(N,)``
+    array (near/far users).  The fusion result degrades gracefully: an
+    incorrect winner still transmits *its own true value*, so the pooled
+    feature is a lower bound of the true max — the learner sees a noisy
+    max-pool, never a corrupted value.
     """
     if h.ndim != 2:
         raise ValueError(f"h must be (N, K), got {h.shape}")
@@ -350,4 +417,5 @@ def ocs_maxpool_noisy(h: jax.Array, rng: jax.Array, bits: int = 16,
     id_bits = host_id_bits(n_workers)
     return ocs_maxpool_noisy_core(
         h, jnp.ones((n_workers,), dtype=bool), id_bits, rng, p_miss,
-        bits=bits, max_id_bits=id_bits, max_rounds=max_rounds)
+        bits=bits, max_id_bits=id_bits, max_rounds=max_rounds,
+        backend=backend)

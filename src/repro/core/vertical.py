@@ -34,6 +34,7 @@ class VerticalConfig:
     tie_break: str = "all"
     noise_bits: int = 16                 # max_noisy: backoff/payload depth D
     noise_max_rounds: int = 3            # max_noisy: re-contention bound
+    noise_backend: str = "scan"          # max_noisy: "scan" | "pallas"
     prediction_level: bool = False       # True => per-worker heads (baselines
                                          # "Avg. Workers Preds"/"Best Worker")
     dtype: jnp.dtype = jnp.float32
@@ -99,7 +100,8 @@ def forward(cfg: VerticalConfig, params: dict, views: jax.Array, *,
         return jnp.mean(preds, axis=0)                        # Avg. Workers Preds
     v = fedocs.aggregate(h, cfg.aggregation, tie_break=cfg.tie_break,
                          noise=noise, noise_bits=cfg.noise_bits,
-                         noise_max_rounds=cfg.noise_max_rounds)
+                         noise_max_rounds=cfg.noise_max_rounds,
+                         noise_backend=cfg.noise_backend)
     return _mlp_apply(params["head"], v)
 
 

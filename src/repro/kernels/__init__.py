@@ -1,3 +1,58 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel packages (maxpool, ocs_quant, flash_attention,
+ocs_contention).  Each package is <name>.py (the kernel) + ops.py (jit'd
+differentiable wrapper) + ref.py (pure-jnp oracle the parity suite compares
+against, see tests/kernel_parity.py).
+
+Interpret-mode policy: the kernels are written for TPU but every CI container
+is CPU-only, so the wrappers run them through the Pallas interpreter there.
+Historically each ops.py hardcoded ``INTERPRET = True`` at import time, which
+silently interpreted on real TPUs too; :func:`interpret_default` replaces
+that with one env-driven resolution shared by all kernel wrappers.
+"""
+
+from __future__ import annotations
+
+import os
+
+
+def fit_block(dim: int, want: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``want`` (VMEM tile auto-fit).
+
+    Shared by every kernel package's tiling setup so odd shapes degrade to
+    smaller-but-exact tiles instead of requiring padding.
+    """
+    b = min(want, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+_ENV_VAR = "REPRO_PALLAS_INTERPRET"
+_TRUE = ("1", "true", "yes", "on")
+_FALSE = ("0", "false", "no", "off")
+
+
+def interpret_default() -> bool:
+    """Should Pallas kernels run in interpreter mode by default?
+
+    Resolution order:
+      1. ``REPRO_PALLAS_INTERPRET`` env var (``1/true/yes/on`` or
+         ``0/false/no/off``) — explicit operator override, read on every
+         resolution (eager calls and each fresh jit trace; a value already
+         baked into a cached jit executable persists until retrace);
+      2. otherwise: interpret unless JAX is actually running on a TPU
+         backend (so real-TPU runs compile the kernels instead of silently
+         interpreting, and CPU/GPU hosts keep working out of the box).
+    """
+    env = os.environ.get(_ENV_VAR)
+    if env is not None:
+        val = env.strip().lower()
+        if val in _TRUE:
+            return True
+        if val in _FALSE:
+            return False
+        raise ValueError(
+            f"{_ENV_VAR}={env!r}: expected one of {_TRUE + _FALSE}")
+    import jax
+
+    return jax.default_backend() != "tpu"

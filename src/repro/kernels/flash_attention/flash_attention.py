@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import interpret_default
+
 NEG_INF = -1e30
 
 
@@ -72,10 +74,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
                                              "interpret"))
-def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                    causal: bool = True, block_q: int = 128,
-                    block_k: int = 128, interpret: bool = True) -> jax.Array:
-    """q: (B, H, Sq, D); k/v: (B, Hkv, Sk, D) -> (B, H, Sq, D)."""
+def _flash_attention_jit(q: jax.Array, k: jax.Array, v: jax.Array,
+                         causal: bool, block_q: int, block_k: int,
+                         interpret: bool) -> jax.Array:
     b, h, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     group = h // hkv
@@ -106,3 +107,17 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         ],
         interpret=interpret,
     )(q, k, v)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """q: (B, H, Sq, D); k/v: (B, Hkv, Sk, D) -> (B, H, Sq, D).
+
+    ``interpret=None`` resolves via ``repro.kernels.interpret_default``.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    return _flash_attention_jit(q, k, v, causal, block_q, block_k,
+                                interpret=interpret)

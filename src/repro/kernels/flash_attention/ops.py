@@ -1,4 +1,8 @@
-"""jit'd wrapper with a recompute (jnp-oracle) backward for training use."""
+"""jit'd wrapper with a recompute (jnp-oracle) backward for training use.
+
+Interpret mode is resolved per call by ``repro.kernels.interpret_default``
+(env-overridable; compiled on real TPU, interpreted elsewhere).
+"""
 
 from __future__ import annotations
 
@@ -9,12 +13,10 @@ import jax
 from repro.kernels.flash_attention import flash_attention as K
 from repro.kernels.flash_attention import ref
 
-INTERPRET = True   # CPU container: interpret mode; False on real TPU
-
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
 def flash_attention(q, k, v, causal: bool = True):
-    return K.flash_attention(q, k, v, causal=causal, interpret=INTERPRET)
+    return K.flash_attention(q, k, v, causal=causal)
 
 
 def _fwd(q, k, v, causal):

@@ -25,13 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-
-def fit_block(dim: int, want: int) -> int:
-    """Largest divisor of `dim` that is <= `want` (VMEM tile auto-fit)."""
-    b = min(want, dim)
-    while dim % b != 0:
-        b -= 1
-    return b
+from repro.kernels import fit_block, interpret_default
 
 
 def _maxpool_kernel(h_ref, v_ref, w_ref):
@@ -44,9 +38,8 @@ def _maxpool_kernel(h_ref, v_ref, w_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_k",
                                              "interpret"))
-def maxpool_fused(h: jax.Array, block_m: int = 256, block_k: int = 256,
-                  interpret: bool = True):
-    """h: (N, M, K) -> (v (M, K), winner (M, K) int32)."""
+def _maxpool_fused_jit(h: jax.Array, block_m: int, block_k: int,
+                       interpret: bool):
     n, m, k = h.shape
     bm = fit_block(m, block_m)
     bk = fit_block(k, block_k)
@@ -63,6 +56,19 @@ def maxpool_fused(h: jax.Array, block_m: int = 256, block_k: int = 256,
     )(h)
 
 
+def maxpool_fused(h: jax.Array, block_m: int = 256, block_k: int = 256,
+                  interpret: bool | None = None):
+    """h: (N, M, K) -> (v (M, K), winner (M, K) int32).
+
+    ``interpret=None`` resolves via ``repro.kernels.interpret_default`` —
+    compiled on real TPU, interpreted elsewhere — so parity tests exercise
+    whatever the host would actually run.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    return _maxpool_fused_jit(h, block_m, block_k, interpret=interpret)
+
+
 def _maxpool_bwd_kernel(w_ref, g_ref, out_ref):
     w = w_ref[...]                                   # (BM, BK) int32
     g = g_ref[...]                                   # (BM, BK)
@@ -75,10 +81,8 @@ def _maxpool_bwd_kernel(w_ref, g_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("n", "block_m", "block_k",
                                              "interpret"))
-def maxpool_winner_bwd(winner: jax.Array, g: jax.Array, n: int,
-                       block_m: int = 256, block_k: int = 256,
-                       interpret: bool = True):
-    """(winner (M,K) i32, g (M,K)) -> grad_h (N, M, K), Eq. 6 routing."""
+def _maxpool_winner_bwd_jit(winner: jax.Array, g: jax.Array, n: int,
+                            block_m: int, block_k: int, interpret: bool):
     m, k = winner.shape
     bm = fit_block(m, block_m)
     bk = fit_block(k, block_k)
@@ -92,3 +96,13 @@ def maxpool_winner_bwd(winner: jax.Array, g: jax.Array, n: int,
         out_shape=jax.ShapeDtypeStruct((n, m, k), g.dtype),
         interpret=interpret,
     )(winner, g)
+
+
+def maxpool_winner_bwd(winner: jax.Array, g: jax.Array, n: int,
+                       block_m: int = 256, block_k: int = 256,
+                       interpret: bool | None = None):
+    """(winner (M,K) i32, g (M,K)) -> grad_h (N, M, K), Eq. 6 routing."""
+    if interpret is None:
+        interpret = interpret_default()
+    return _maxpool_winner_bwd_jit(winner, g, n, block_m, block_k,
+                                   interpret=interpret)

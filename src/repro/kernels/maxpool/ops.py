@@ -2,8 +2,8 @@
 
 ``maxpool(h)`` is a drop-in for ``jnp.max(h, axis=0)`` with the paper's
 Eq.-6 single-winner backward, fwd and bwd both running as Pallas kernels.
-On the CPU dry-run host the kernels execute in interpret mode; flip
-``INTERPRET = False`` on real TPU.
+Interpret mode is resolved per call by ``repro.kernels.interpret_default``
+(env-overridable; compiled on real TPU, interpreted elsewhere).
 """
 
 from __future__ import annotations
@@ -14,22 +14,19 @@ import jax
 
 from repro.kernels.maxpool import maxpool as K
 
-INTERPRET = True   # CPU container: interpret mode; False on real TPU
-
 
 @functools.lru_cache(maxsize=None)
 def _make(n: int):
     @jax.custom_vjp
     def mp(h):
-        v, _ = K.maxpool_fused(h, interpret=INTERPRET)
+        v, _ = K.maxpool_fused(h)
         return v
 
     def fwd(h):
-        v, w = K.maxpool_fused(h, interpret=INTERPRET)
-        return v, w
+        return K.maxpool_fused(h)
 
     def bwd(w, g):
-        return (K.maxpool_winner_bwd(w, g, n, interpret=INTERPRET),)
+        return (K.maxpool_winner_bwd(w, g, n),)
 
     mp.defvjp(fwd, bwd)
     return mp

@@ -1,0 +1,149 @@
+"""Fused noisy-contention Pallas kernel (Alg. 1 + miss detection, on-chip).
+
+The noisy-OCS winner selection used by ``fedocs.maxpool_noisy`` is the curve
+runner's dominant step-time cost: a ``lax.scan`` over
+``max_rounds x (bits + id_bits)`` sub-slots, each step re-deriving a threefry
+sub-key, drawing an (N, K) Bernoulli block, and materializing the alive mask
+through HBM.  This kernel runs the entire tournament — every round, every
+sub-slot — as one VMEM pass per (N, BK) tile:
+
+  * the *sensing stream* is pre-drawn outside (``ops.draw_heard_packed``
+    vmaps the exact per-sub-slot Bernoulli calls the scan makes, so the two
+    backends stay bit-for-bit interchangeable) and packed along the sub-slot
+    axis into one uint32 **bit-plane word per (round, worker, element)** —
+    8-32x less HBM traffic than per-slot boolean blocks, and the in-kernel
+    sub-slot loop becomes plain shift/mask arithmetic on registers;
+  * the contention itself is a bit-plane reduction over the *leading* worker
+    axis: for each sub-slot the transmit set is a shift of the contention
+    word, the blocking condition an ``any`` over workers, and the alive mask
+    never leaves VMEM;
+  * the rounds/slots/collision accounting is emitted as per-tile partial
+    sums (unresolved sub-frames at round start, collided sub-frames per
+    round) that the wrapper reduces across tiles — integer sums, so the
+    accounting is exactly the scan's.
+
+Both loops are unrolled at trace time (``max_rounds <= 4`` and
+``n_slots <= 32`` by the 32-bit contention-word guard), which keeps every
+memory access statically indexed — no SMEM-resident loop state needed.
+``total_bits`` stays a *traced* scalar (a (1, 1) int32 operand) so the
+sweep engine's padded scenarios (``max_id_bits > id_bits``) share one
+compilation: sub-slots past ``total_bits`` compute but are gated inactive,
+exactly like the scan.
+
+Tiling: 1-D grid over K / BK element columns; the worker axis (N <= 64 for
+every registered scenario) always fits the tile, so the reduction never
+crosses tiles.  Validated bit-for-bit against ``ref.py`` and the scan core
+in ``tests/kernel_parity.py`` / ``tests/test_kernels_contention.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import fit_block, interpret_default
+
+
+def _contention_kernel(word_ref, heard_ref, mask_ref, tb_ref,
+                       winner_ref, cont_ref, coll_ref, *,
+                       n_slots: int, max_rounds: int):
+    word = word_ref[...]                              # (N, BK) uint32
+    tb = tb_ref[0, 0]                                 # () int32, traced
+    alive = jnp.broadcast_to(mask_ref[...] != 0, word.shape)
+    done = jnp.zeros((1, word.shape[1]), dtype=bool)  # resolved sub-frames
+    conts, colls = [], []
+    one = jnp.uint32(1)
+    for r in range(max_rounds):
+        heard_r = heard_ref[r]                        # (N, BK) packed planes
+        # unresolved sub-frames at round start: these alone bill channel
+        # slots (the wrapper multiplies the cross-tile sum by total_bits)
+        conts.append(jnp.sum((~done).astype(jnp.int32)))
+        for d in range(n_slots):
+            active = jnp.int32(d) < tb
+            shift = jnp.maximum(tb - 1 - jnp.int32(d), 0).astype(jnp.uint32)
+            bit = (word >> shift) & one
+            heard = ((heard_r >> jnp.uint32(n_slots - 1 - d)) & one) == one
+            tx = alive & (bit == one) & active
+            any_tx = jnp.any(tx, axis=0, keepdims=True)
+            # a sensing worker quits only if someone transmitted AND it heard
+            alive = alive & (tx | ~(any_tx & heard))
+        n_surv = jnp.sum(alive.astype(jnp.int32), axis=0, keepdims=True)
+        collided = n_surv > 1
+        colls.append(jnp.sum(collided.astype(jnp.int32)))
+        done = done | ~collided
+    # lowest-index capture: first alive worker per element column
+    winner_ref[...] = jnp.argmax(alive, axis=0).astype(jnp.int32)[None, :]
+    cont_ref[...] = jnp.stack(conts)[None, :]
+    coll_ref[...] = jnp.stack(colls)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("n_slots", "max_rounds",
+                                             "block_k", "interpret"))
+def _contend_jit(word, heard, mask, total_bits, *, n_slots, max_rounds,
+                 block_k, interpret):
+    n, k = word.shape
+    bk = fit_block(k, block_k)
+    tiles = k // bk
+    winner, cont, coll = pl.pallas_call(
+        functools.partial(_contention_kernel, n_slots=n_slots,
+                          max_rounds=max_rounds),
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((n, bk), lambda j: (0, j)),
+            pl.BlockSpec((max_rounds, n, bk), lambda j: (0, 0, j)),
+            pl.BlockSpec((n, 1), lambda j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk), lambda j: (0, j)),
+            pl.BlockSpec((1, max_rounds), lambda j: (j, 0)),
+            pl.BlockSpec((1, max_rounds), lambda j: (j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, k), jnp.int32),
+            jax.ShapeDtypeStruct((tiles, max_rounds), jnp.int32),
+            jax.ShapeDtypeStruct((tiles, max_rounds), jnp.int32),
+        ],
+        interpret=interpret,
+    )(word, heard.astype(jnp.uint32),
+      mask.astype(jnp.int32).reshape(n, 1),
+      jnp.asarray(total_bits, jnp.int32).reshape(1, 1))
+    return winner[0], cont, coll
+
+
+def contend(word: jax.Array, heard: jax.Array, mask: jax.Array,
+            total_bits: jax.Array, *, n_slots: int, max_rounds: int,
+            block_k: int = 1024, interpret: bool | None = None):
+    """Run the full noisy tournament over packed bit-planes.
+
+    Args:
+      word:       (N, K) uint32 — [value code | id code] contention words.
+      heard:      (max_rounds, N, K) uint32 — sensing draws packed along the
+                  sub-slot axis; bit ``n_slots - 1 - d`` of ``heard[r, n, k]``
+                  is sub-slot d's draw (see ``ops.draw_heard_packed``).
+      mask:       (N,) bool — real (non-padded) workers.
+      total_bits: () int32 — live sub-slots ``bits + id_bits``; may be
+                  traced.  Sub-slots past it are inert (padded scan bound).
+      n_slots:    static sub-slot count per round (``bits + max_id_bits``).
+      max_rounds: static re-contention bound.
+      interpret:  ``None`` resolves via ``repro.kernels.interpret_default``
+                  (compiled on real TPU, interpreted elsewhere).
+
+    Returns:
+      winner:    (K,) int32 — surviving worker per element (lowest-index
+                 capture among survivors).
+      contending: (T, max_rounds) int32 — per-tile unresolved sub-frames at
+                 each round start (T = K / block tiles).
+      collided:  (T, max_rounds) int32 — per-tile collided sub-frames per
+                 round.
+    """
+    if not (1 <= n_slots <= 32):
+        raise ValueError(f"n_slots must be in [1, 32], got {n_slots}")
+    if interpret is None:
+        interpret = interpret_default()
+    return _contend_jit(word, heard, mask, total_bits, n_slots=n_slots,
+                        max_rounds=max_rounds, block_k=block_k,
+                        interpret=interpret)

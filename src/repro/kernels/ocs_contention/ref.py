@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the fused contention kernel.
+
+Replays the tournament with the same ``lax.scan`` idiom as the protocol core
+in ``repro.core.ocs``, but over the kernel's *packed* operands (uint32
+bit-plane sensing words), returning globally-reduced accounting so the
+parity harness can compare it against the tile-reduced kernel wrapper
+(``ops.contend``) bit for bit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def contend(word: jax.Array, heard: jax.Array, mask: jax.Array,
+            total_bits: jax.Array, *, n_slots: int, max_rounds: int):
+    """Same contract as ``ops.contend``: (winner (K,), contending
+    (max_rounds,), collided (max_rounds,)) — counts reduced over all K."""
+    n, k = word.shape
+    tb = jnp.asarray(total_bits, jnp.int32)
+    heard = heard.astype(jnp.uint32)
+    one = jnp.uint32(1)
+
+    def round_body(carry, r):
+        alive, done = carry
+        contending = jnp.sum(~done, dtype=jnp.int32)
+
+        def slot(alive, d):
+            active = d < tb
+            shift = jnp.maximum(tb - 1 - d, 0).astype(jnp.uint32)
+            bit = (word >> shift) & one
+            hbit = (heard[r] >> (jnp.uint32(n_slots - 1) - d.astype(
+                jnp.uint32))) & one
+            tx = alive & (bit == one) & active
+            any_tx = jnp.any(tx, axis=0, keepdims=True)
+            alive = alive & (tx | ~(any_tx & (hbit == one)))
+            return alive, None
+
+        alive, _ = jax.lax.scan(slot, alive, jnp.arange(n_slots))
+        collided = jnp.sum(alive, axis=0) > 1
+        done = done | ~collided
+        return (alive, done), (contending, jnp.sum(collided,
+                                                   dtype=jnp.int32))
+
+    alive0 = jnp.broadcast_to(jnp.asarray(mask, bool)[:, None], (n, k))
+    done0 = jnp.zeros((k,), dtype=bool)
+    (alive, _), (contending, collided) = jax.lax.scan(
+        round_body, (alive0, done0), jnp.arange(max_rounds))
+    winner = jnp.argmax(alive, axis=0).astype(jnp.int32)
+    return winner, contending, collided

@@ -16,6 +16,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import interpret_default
+from repro.kernels import fit_block as _fit
+
 _SIGN = {jnp.dtype(jnp.float32): (jnp.uint32, 0x80000000, 32),
          jnp.dtype(jnp.bfloat16): (jnp.uint16, 0x8000, 16),
          jnp.dtype(jnp.float16): (jnp.uint16, 0x8000, 16)}
@@ -47,16 +50,9 @@ def _code_dtype(bits: int):
     return jnp.uint8 if bits <= 8 else jnp.uint16
 
 
-def _fit(dim: int, want: int) -> int:
-    b = min(want, dim)
-    while dim % b != 0:
-        b -= 1
-    return b
-
-
 @functools.partial(jax.jit, static_argnames=("bits", "block", "interpret"))
-def encode(x: jax.Array, bits: int, block: int = 256,
-           interpret: bool = True) -> jax.Array:
+def _encode_jit(x: jax.Array, bits: int, block: int,
+                interpret: bool) -> jax.Array:
     m, k = x.shape
     bm, bk = _fit(m, block), _fit(k, block)
     return pl.pallas_call(
@@ -69,10 +65,17 @@ def encode(x: jax.Array, bits: int, block: int = 256,
     )(x)
 
 
+def encode(x: jax.Array, bits: int, block: int = 256,
+           interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = interpret_default()
+    return _encode_jit(x, bits, block, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "dtype", "block",
                                              "interpret"))
-def decode(c: jax.Array, bits: int, dtype, block: int = 256,
-           interpret: bool = True) -> jax.Array:
+def _decode_jit(c: jax.Array, bits: int, dtype, block: int,
+                interpret: bool) -> jax.Array:
     m, k = c.shape
     bm, bk = _fit(m, block), _fit(k, block)
     return pl.pallas_call(
@@ -83,3 +86,10 @@ def decode(c: jax.Array, bits: int, dtype, block: int = 256,
         out_shape=jax.ShapeDtypeStruct((m, k), jnp.dtype(dtype)),
         interpret=interpret,
     )(c)
+
+
+def decode(c: jax.Array, bits: int, dtype, block: int = 256,
+           interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = interpret_default()
+    return _decode_jit(c, bits, dtype, block, interpret=interpret)

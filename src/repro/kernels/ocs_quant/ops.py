@@ -1,22 +1,23 @@
-"""jit'd wrappers for the monotone-code kernels with straight-through grads."""
+"""jit'd wrappers for the monotone-code kernels with straight-through grads.
+
+Interpret mode is resolved per call by ``repro.kernels.interpret_default``
+(env-overridable; compiled on real TPU, interpreted elsewhere).
+"""
 
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.ocs_quant import ocs_quant as K
-
-INTERPRET = True   # CPU container: interpret mode; False on real TPU
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
 def quantize_st(x: jax.Array, bits: int) -> jax.Array:
     """dequantize(encode(x)) with a straight-through gradient."""
-    c = K.encode(x, bits, interpret=INTERPRET)
-    return K.decode(c, bits, x.dtype, interpret=INTERPRET)
+    c = K.encode(x, bits)
+    return K.decode(c, bits, x.dtype)
 
 
 def _fwd(x, bits):
@@ -31,8 +32,8 @@ quantize_st.defvjp(_fwd, _bwd)
 
 
 def encode(x, bits):
-    return K.encode(x, bits, interpret=INTERPRET)
+    return K.encode(x, bits)
 
 
 def decode(c, bits, dtype):
-    return K.decode(c, bits, dtype, interpret=INTERPRET)
+    return K.decode(c, bits, dtype)

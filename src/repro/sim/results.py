@@ -23,6 +23,14 @@ from repro.sim.sweep import SweepResult
 Record = Dict[str, object]
 
 
+def _fmt_p_miss(p) -> str:
+    """Row label for a scalar or per-worker miss probability."""
+    arr = np.asarray(p, np.float64).ravel()
+    if arr.size == 1 or np.all(arr == arr[0]):
+        return f"{arr[0]:g}"
+    return f"{arr.min():g}..{arr.max():g}"
+
+
 def summarize(sweep: SweepResult) -> List[Record]:
     """One merged record per scenario (measured counters + analytic loads)."""
     records: List[Record] = []
@@ -91,11 +99,13 @@ def summarize_curves(curves) -> List[Record]:
         fed = channel.ocs_load(ccfg.n_workers, ccfg.embed_dim, bits=bits,
                                cfg=cfg)
         cat = channel.concat_load(ccfg.n_workers, ccfg.embed_dim)
-        for li, p in enumerate(curves.p_miss):
+        for li in range(curves.p_miss.shape[0]):
+            p = curves.p_miss[li]
             records.append({
-                "curve": f"b{bits}_p{p:g}",
+                "curve": f"b{bits}_p{_fmt_p_miss(p)}",
                 "bits": bits,
-                "p_miss": float(p),
+                "p_miss": float(p) if np.ndim(p) == 0
+                else [float(x) for x in p],
                 "n_workers": ccfg.n_workers,
                 "k_elems": ccfg.embed_dim,
                 "steps": ccfg.steps,
@@ -116,7 +126,7 @@ def curve_rows(records: List[Record], prefix: str = "curves") -> List[str]:
     rows = []
     for rec in records:
         derived = [
-            f"bits={rec['bits']}", f"p_miss={rec['p_miss']:g}",
+            f"bits={rec['bits']}", f"p_miss={_fmt_p_miss(rec['p_miss'])}",
             f"acc={rec['acc']:.4f}", f"acc_ideal={rec['acc_ideal']:.4f}",
             f"acc_gap={rec['acc_gap']:+.4f}", f"nll={rec['nll']:.4f}",
             f"uplink_bits={rec['uplink_bits_fedocs']}",
@@ -131,8 +141,8 @@ def to_rows(records: List[Record], prefix: str = "sweep") -> List[str]:
     rows = []
     for rec in records:
         derived = [f"N={rec['n_workers']}", f"bits={rec['bits']}"]
-        if rec["p_miss"]:
-            derived.append(f"p_miss={rec['p_miss']:g}")
+        if np.any(np.asarray(rec["p_miss"])):
+            derived.append(f"p_miss={_fmt_p_miss(rec['p_miss'])}")
         if rec["n_channels"] != 1:
             derived.append(f"ch={rec['n_channels']}")
         if "payload_tx" in rec:

@@ -15,19 +15,27 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Sequence
+from typing import Dict, List, Sequence, Tuple, Union
 
 from repro.core.ocs import host_id_bits
+
+PMiss = Union[float, Tuple[float, ...]]
 
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """One operating point of the wireless max-pooling channel."""
+    """One operating point of the wireless max-pooling channel.
+
+    ``p_miss`` is either one probability shared by every worker or a
+    per-worker tuple of length ``n_workers`` (heterogeneous near/far users:
+    a far worker overhears blocking signals with lower probability, so its
+    entry is larger).
+    """
 
     name: str
     n_workers: int
     bits: int = 16          # D, backoff quantization depth (paper Eq. 7)
-    p_miss: float = 0.0     # per-sub-slot carrier-sensing miss probability
+    p_miss: PMiss = 0.0     # per-sub-slot carrier-sensing miss probability
     n_channels: int = 1     # orthogonal OFDMA channels (latency divider)
 
     def __post_init__(self):
@@ -40,10 +48,24 @@ class Scenario:
                 f"{self.name}: bits={self.bits} + "
                 f"{host_id_bits(self.n_workers)} tie-break bits overflow the "
                 f"32-bit contention word (reduce bits or n_workers)")
-        if not (0.0 <= self.p_miss < 1.0):
-            raise ValueError(f"{self.name}: p_miss must be in [0, 1)")
+        if isinstance(self.p_miss, (list, tuple)):
+            object.__setattr__(self, "p_miss", tuple(
+                float(p) for p in self.p_miss))
+            if len(self.p_miss) != self.n_workers:
+                raise ValueError(
+                    f"{self.name}: per-worker p_miss needs "
+                    f"{self.n_workers} entries, got {len(self.p_miss)}")
+        for p in self.p_miss_per_worker():
+            if not (0.0 <= p < 1.0):
+                raise ValueError(f"{self.name}: p_miss must be in [0, 1)")
         if self.n_channels < 1:
             raise ValueError(f"{self.name}: n_channels must be >= 1")
+
+    def p_miss_per_worker(self) -> Tuple[float, ...]:
+        """Broadcast ``p_miss`` to one probability per worker."""
+        if isinstance(self.p_miss, tuple):
+            return self.p_miss
+        return (float(self.p_miss),) * self.n_workers
 
 
 _REGISTRY: Dict[str, Scenario] = {}
@@ -88,6 +110,16 @@ def scenario_grid(n_workers: Sequence[int],
     return out
 
 
+def near_far_p_miss(n_workers: int, p_near: float = 0.0,
+                    p_far: float = 0.1) -> Tuple[float, ...]:
+    """Two-tier per-worker miss profile: the first half of the workers are
+    cell-center (near) users sensing at ``p_near``, the second half are
+    cell-edge (far) users at ``p_far`` — the heterogeneous-channel setting
+    surveyed in *Collaborative Learning over Wireless Networks*."""
+    far = n_workers // 2
+    return (p_near,) * (n_workers - far) + (p_far,) * far
+
+
 # ---------------------------------------------------------------------------
 # default registry: the operating points the benchmarks report
 # ---------------------------------------------------------------------------
@@ -104,6 +136,11 @@ for _s in (
     # imperfect carrier sensing (beyond-paper extension)
     Scenario("noisy_urban",    n_workers=16, p_miss=0.02),
     Scenario("noisy_dense",    n_workers=64, p_miss=0.05),
+    # heterogeneous near/far users: per-worker miss probabilities
+    Scenario("near_far_cell",  n_workers=16,
+             p_miss=near_far_p_miss(16, 0.01, 0.1)),
+    Scenario("near_far_dense", n_workers=64, bits=8,
+             p_miss=near_far_p_miss(64, 0.0, 0.05)),
     # OFDMA striping: same transmissions, latency / n_channels
     Scenario("ofdma_wideband", n_workers=16, n_channels=8),
     Scenario("ofdma_noisy",    n_workers=64, bits=8, p_miss=0.02, n_channels=4),

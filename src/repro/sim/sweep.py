@@ -114,7 +114,9 @@ def _sweep_clean(h, mask, id_bits, n_channels, *, bits, max_id_bits,
                                     "n_devices"))
 def _sweep_noisy(h, mask, id_bits, rng, p_miss, n_channels, *,
                  bits, max_id_bits, max_rounds, n_devices=1):
-    """As `_sweep_clean` plus rng: (S, R, 2) keys and p_miss: (S,) traced."""
+    """As `_sweep_clean` plus rng: (S, R, 2) keys and p_miss: (S, N_max)
+    per-worker miss probabilities, traced (homogeneous scenarios carry the
+    scalar broadcast — bit-for-bit the historical scalar path)."""
     _TRACE_COUNTS["noisy"] += 1
     core = functools.partial(ocs.ocs_maxpool_noisy_core, bits=bits,
                              max_id_bits=max_id_bits, max_rounds=max_rounds)
@@ -226,7 +228,9 @@ def run_sweep(scenarios: Sequence[Scenario], *,
     h_pad = np.zeros((s_total, rounds, n_max, k_elems), dtype=np.float32)
     mask = np.zeros((s_total, n_max), dtype=bool)
     id_bits = np.zeros((s_total,), dtype=np.int32)
-    p_miss = np.zeros((s_total,), dtype=np.float32)
+    # per-worker miss probabilities (padded rows are masked-out in the core,
+    # so their p_miss entries are inert)
+    p_miss = np.zeros((s_total, n_max), dtype=np.float32)
     n_channels = np.zeros((s_total,), dtype=np.int32)
     for i, (s, h) in enumerate(zip(scenarios, h_by_scenario)):
         h = np.asarray(h, dtype=np.float32)
@@ -237,7 +241,7 @@ def run_sweep(scenarios: Sequence[Scenario], *,
         h_pad[i, :, :s.n_workers, :] = h
         mask[i, :s.n_workers] = True
         id_bits[i] = ocs.host_id_bits(s.n_workers)
-        p_miss[i] = s.p_miss
+        p_miss[i, :s.n_workers] = s.p_miss_per_worker()
         n_channels[i] = s.n_channels
 
     # independent noise keys per (scenario, round), stable under regrouping

@@ -60,10 +60,18 @@ def trace_counts() -> Dict[str, int]:
 
 @dataclasses.dataclass(frozen=True)
 class CurveConfig:
-    """One accuracy-vs-channel-quality experiment grid."""
+    """One accuracy-vs-channel-quality experiment grid.
+
+    ``p_miss`` lanes are scalars (every worker senses equally) or length-
+    ``n_workers`` sequences (heterogeneous near/far users, e.g. from
+    ``repro.sim.scenarios.near_far_p_miss``); lanes may mix both — scalars
+    broadcast.  ``backend`` picks the noisy-contention engine of the
+    channel-in-the-loop forward pass (``"scan"`` or the fused ``"pallas"``
+    kernel; bit-for-bit interchangeable).
+    """
 
     bits: Sequence[int] = (8, 16)        # backoff/payload depth axis (static)
-    p_miss: Sequence[float] = (0.0, 0.02, 0.05, 0.1)   # traced lane axis
+    p_miss: Sequence = (0.0, 0.02, 0.05, 0.1)          # traced lane axis
     steps: int = 60
     batch: int = 64
     lr: float = 3e-3
@@ -79,6 +87,7 @@ class CurveConfig:
     head_dims: Sequence[int] = (32,)
     seed: int = 0
     log_every: int = 10
+    backend: str = "scan"                # noisy-contention engine
 
     def __post_init__(self):
         for b in self.bits:
@@ -86,12 +95,33 @@ class CurveConfig:
                 raise ValueError(
                     f"bits={b}: the ideal reference run needs a max_q{{bits}} "
                     "aggregation mode (8 or 16)")
-        if not self.p_miss or any(not 0.0 <= p < 1.0 for p in self.p_miss):
-            raise ValueError(f"p_miss lanes must be in [0, 1): {self.p_miss}")
+        if not self.p_miss:
+            raise ValueError("p_miss needs at least one lane")
+        for p in self.p_miss:
+            arr = np.asarray(p, np.float64)
+            if arr.ndim not in (0, 1):
+                raise ValueError(f"p_miss lane must be scalar or "
+                                 f"per-worker, got shape {arr.shape}")
+            if arr.ndim == 1 and arr.shape[0] != self.n_workers:
+                raise ValueError(
+                    f"per-worker p_miss lane needs {self.n_workers} "
+                    f"entries, got {arr.shape[0]}")
+            if not np.all((0.0 <= arr) & (arr < 1.0)):
+                raise ValueError(
+                    f"p_miss lanes must be in [0, 1): {self.p_miss}")
 
     @property
     def n_workers(self) -> int:
         return self.grid * self.grid
+
+    def lane_p_miss(self, dtype=np.float32) -> np.ndarray:
+        """Lane axis as an array: (L,) if all lanes are scalar, else the
+        per-worker broadcast (L, n_workers)."""
+        if all(np.ndim(p) == 0 for p in self.p_miss):
+            return np.asarray(self.p_miss, dtype)
+        return np.stack([
+            np.broadcast_to(np.asarray(p, dtype), (self.n_workers,))
+            for p in self.p_miss])
 
 
 @dataclasses.dataclass
@@ -105,7 +135,7 @@ class CurveResult:
     """
 
     config: CurveConfig
-    p_miss: np.ndarray                  # (L,)
+    p_miss: np.ndarray                  # (L,) or (L, N) per-worker lanes
     acc: np.ndarray                     # (n_bits, L) channel-in-the-loop
     nll: np.ndarray                     # (n_bits, L)
     acc_ideal: np.ndarray               # (n_bits,)
@@ -137,7 +167,8 @@ def _vertical_config(ccfg: CurveConfig, bits: int, noisy: bool
         # the OCS winner is the lowest-indexed max-code holder, so the ideal
         # reference must route gradients the same way
         tie_break="first",
-        noise_bits=bits, noise_max_rounds=ccfg.max_rounds)
+        noise_bits=bits, noise_max_rounds=ccfg.max_rounds,
+        noise_backend=ccfg.backend)
 
 
 def run_curves(ccfg: CurveConfig = CurveConfig()) -> CurveResult:
@@ -150,7 +181,8 @@ def run_curves(ccfg: CurveConfig = CurveConfig()) -> CurveResult:
     channel-in-the-loop as well (fresh sensing keys, same ``p_miss`` lanes).
     """
     lanes = len(ccfg.p_miss)
-    p_vec = jnp.asarray(np.asarray(ccfg.p_miss, np.float32))
+    p_lanes = ccfg.lane_p_miss()                 # (L,) or (L, N)
+    p_vec = jnp.asarray(p_lanes)
 
     task = PatchTaskConfig(n_classes=ccfg.n_classes, grid=ccfg.grid,
                            hw=ccfg.hw, sigma=ccfg.sigma)
@@ -257,7 +289,7 @@ def run_curves(ccfg: CurveConfig = CurveConfig()) -> CurveResult:
         ideal_params_out.append(vals_i)
 
     return CurveResult(
-        config=ccfg, p_miss=np.asarray(ccfg.p_miss, np.float64),
+        config=ccfg, p_miss=ccfg.lane_p_miss(np.float64),
         acc=acc, nll=nll, acc_ideal=acc_ideal, nll_ideal=nll_ideal,
         loss_history=hist, ideal_loss_history=hist_ideal,
         logged_steps=np.asarray(logged), noisy_params=noisy_params_out,

@@ -1,0 +1,114 @@
+"""Unified kernel-parity harness: any Pallas op vs its ``ref.py`` oracle.
+
+Every kernel package (``repro.kernels.{maxpool, ocs_quant, flash_attention,
+ocs_contention}``) ships a pure-jnp/lax reference; this module is the single
+place that compares the two, replacing the hand-rolled comparison loops the
+per-kernel test files used to carry.  A :class:`ParityOp` binds
+
+  * ``make``      — a case dict -> the positional inputs both sides take,
+  * ``kernel``    — the Pallas entry point (interpret mode on CPU CI),
+  * ``reference`` — the oracle with the identical signature,
+  * ``cases``     — a ``proptest.grid``-style case list (dtype/shape/seed),
+
+and :func:`check` sweeps the grid via ``proptest.sweep`` (failures are
+annotated with the offending case), asserting
+
+  * **forward parity** on the full output pytree — bit-for-bit
+    (``atol=0``: equal shapes, dtypes, and every bit of every leaf) or
+    within an absolute tolerance for accumulation-order-sensitive kernels
+    (flash attention); a per-case ``atol`` key overrides the op default;
+  * **vjp parity** when ``diff_argnums`` is set: both sides are pulled back
+    through ``jax.vjp`` with the same cotangent (``cotangent(case, primal)``
+    or ones) and every input cotangent must agree to ``grad_atol``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from proptest import sweep
+
+
+@dataclasses.dataclass(frozen=True)
+class ParityOp:
+    """One kernel-vs-reference binding for the parity sweep."""
+
+    name: str
+    make: Callable[[dict], Tuple]            # case -> positional inputs
+    kernel: Callable[..., Any]               # Pallas side
+    reference: Callable[..., Any]            # jnp/lax oracle
+    cases: Sequence[dict] = ()
+    atol: float = 0.0                        # 0.0 => bit-for-bit
+    diff_argnums: Tuple[int, ...] = ()       # nonempty => assert vjp parity
+    grad_atol: Optional[float] = None        # defaults to ``atol``
+    cotangent: Optional[Callable[[dict, Any], Any]] = None
+
+
+def assert_trees_match(got, want, *, atol: float = 0.0, what: str = "output",
+                       name: str = "op"):
+    """Structure + shape + dtype always; values bit-for-bit iff atol==0."""
+    got_l, got_tree = jax.tree.flatten(got)
+    want_l, want_tree = jax.tree.flatten(want)
+    assert got_tree == want_tree, \
+        f"{name} {what}: tree {got_tree} != {want_tree}"
+    for i, (a, b) in enumerate(zip(got_l, want_l)):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.shape == b.shape, \
+            f"{name} {what} leaf {i}: shape {a.shape} != {b.shape}"
+        assert a.dtype == b.dtype, \
+            f"{name} {what} leaf {i}: dtype {a.dtype} != {b.dtype}"
+        if atol == 0.0:
+            assert np.array_equal(a, b), \
+                f"{name} {what} leaf {i}: kernel != reference (bit-for-bit)"
+        else:
+            err = float(np.max(np.abs(a.astype(np.float64)
+                                      - b.astype(np.float64))))
+            assert err <= atol, \
+                f"{name} {what} leaf {i}: max err {err} > atol {atol}"
+
+
+def _vjp_through(fn, args, diff_argnums, cotangent):
+    """Pull ``cotangent`` back through ``fn`` w.r.t. ``diff_argnums``."""
+    args = list(args)
+
+    def closed(*diff_args):
+        full = list(args)
+        for pos, val in zip(diff_argnums, diff_args):
+            full[pos] = val
+        return fn(*full)
+
+    primal, vjp_fn = jax.vjp(closed, *[args[i] for i in diff_argnums])
+    return primal, vjp_fn(cotangent)
+
+
+def check_case(op: ParityOp, case: dict):
+    """Assert forward (and configured vjp) parity for one case."""
+    args = op.make(case)
+    atol = case.get("atol", op.atol)
+    out_k = op.kernel(*args)
+    out_r = op.reference(*args)
+    assert_trees_match(out_k, out_r, atol=atol, what="forward", name=op.name)
+    if op.diff_argnums:
+        ct = (op.cotangent(case, out_r) if op.cotangent is not None
+              else jax.tree.map(jnp.ones_like, out_r))
+        prim_k, grads_k = _vjp_through(op.kernel, args, op.diff_argnums, ct)
+        prim_r, grads_r = _vjp_through(op.reference, args, op.diff_argnums,
+                                       ct)
+        gatol = case.get("grad_atol",
+                         op.grad_atol if op.grad_atol is not None else atol)
+        assert_trees_match(prim_k, prim_r, atol=atol, what="vjp primal",
+                           name=op.name)
+        assert_trees_match(grads_k, grads_r, atol=gatol, what="vjp grads",
+                           name=op.name)
+
+
+def check(op: ParityOp):
+    """Sweep every case of ``op`` (the per-kernel test entry point)."""
+    assert op.cases, f"{op.name}: empty case grid"
+    sweep(functools.partial(check_case, op), list(op.cases), label=op.name)

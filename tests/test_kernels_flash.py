@@ -1,56 +1,64 @@
-"""Per-kernel allclose sweep: flash attention vs materialized-softmax oracle."""
+"""Flash attention vs materialized-softmax oracle, via the parity harness.
 
-import jax
+Accumulation order differs between the streaming kernel and the oracle, so
+forward parity is tolerance-based (per-dtype ``atol`` in the case dicts);
+vjp parity runs through ``ops.flash_attention`` (the recompute backward)
+against the oracle's autodiff.
+"""
+
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from proptest import grid, random_floats, sweep
+from kernel_parity import ParityOp, check
+from proptest import grid
 from repro.kernels.flash_attention import flash_attention as K
 from repro.kernels.flash_attention import ops as O
 from repro.kernels.flash_attention import ref as R
 
 
-@pytest.mark.parametrize("causal", [True, False])
-def test_flash_sweep(causal):
-    def prop(case):
-        b, h, hkv, s, d = 1, case["h"], case["hkv"], case["s"], 64
-        rng = np.random.default_rng(case["seed"])
-        q = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
-        k = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
-        v = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
-        o = K.flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
-        orf = R.flash_attention(q, k, v, causal=causal)
-        err = float(jnp.max(jnp.abs(o - orf)))
-        assert err < 3e-5, f"err={err}"
-    sweep(prop, list(grid(h=[4], hkv=[1, 2, 4], s=[128, 192],
-                          seed=[0, 1])))
+def _qkv(case):
+    rng = np.random.default_rng(case["seed"])
+    b, h, hkv, s, d = 1, case["h"], case["hkv"], case["s"], case["d"]
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)), case["dtype"])
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, d)), case["dtype"])
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, d)), case["dtype"])
+    return q, k, v, case["causal"]
 
 
-def test_flash_bf16():
-    rng = np.random.default_rng(0)
-    q = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.bfloat16)
-    k = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.bfloat16)
-    v = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.bfloat16)
-    o = K.flash_attention(q, k, v, causal=True)
-    orf = R.flash_attention(q, k, v, causal=True)
-    assert float(jnp.max(jnp.abs(o.astype(jnp.float32)
-                                 - orf.astype(jnp.float32)))) < 0.05
+FORWARD = ParityOp(
+    name="flash_forward",
+    make=_qkv,
+    kernel=lambda q, k, v, causal: K.flash_attention(
+        q, k, v, causal=causal, block_q=64, block_k=64),
+    reference=lambda q, k, v, causal: R.flash_attention(q, k, v,
+                                                        causal=causal),
+    cases=(list(grid(h=[4], hkv=[1, 2, 4], s=[128, 192], d=[64],
+                     seed=[0, 1], causal=[True, False],
+                     dtype=[jnp.float32], atol=[3e-5]))
+           + list(grid(h=[2], hkv=[2], s=[128], d=[64], seed=[0],
+                       causal=[True], dtype=[jnp.bfloat16], atol=[0.05]))),
+    atol=3e-5,
+)
+
+# the ops wrapper's custom_vjp recomputes the backward from the oracle, so
+# kernel-vs-reference gradient parity checks the fwd/bwd pairing end to end
+GRAD = ParityOp(
+    name="flash_vjp",
+    make=_qkv,
+    kernel=O.flash_attention,
+    reference=lambda q, k, v, causal: R.flash_attention(q, k, v,
+                                                        causal=causal),
+    cases=list(grid(h=[2], hkv=[1], s=[64], d=[32], seed=[1],
+                    causal=[True], dtype=[jnp.float32], atol=[3e-5],
+                    grad_atol=[1e-4])),
+    diff_argnums=(0, 1, 2),
+    cotangent=lambda case, primal: 2.0 * primal,   # == grad of sum(out**2)
+)
 
 
-def test_flash_grad_via_recompute_bwd():
-    rng = np.random.default_rng(1)
-    q = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), jnp.float32)
-    k = jnp.asarray(rng.standard_normal((1, 1, 64, 32)), jnp.float32)
-    v = jnp.asarray(rng.standard_normal((1, 1, 64, 32)), jnp.float32)
+def test_flash_forward_parity():
+    check(FORWARD)
 
-    def loss_kernel(q, k, v):
-        return jnp.sum(O.flash_attention(q, k, v, True) ** 2)
 
-    def loss_ref(q, k, v):
-        return jnp.sum(R.flash_attention(q, k, v, True) ** 2)
-
-    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
-    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
-    for a, b in zip(gk, gr):
-        assert float(jnp.max(jnp.abs(a - b))) < 1e-4
+def test_flash_vjp_parity():
+    check(GRAD)

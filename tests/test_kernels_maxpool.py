@@ -1,42 +1,70 @@
-"""Per-kernel allclose sweep: fused max-pool vs jnp oracle (interpret mode)."""
+"""Fused max-pool kernel vs jnp oracle, via the unified parity harness."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from proptest import grid, random_floats, sweep
+from kernel_parity import ParityOp, check
+from proptest import grid, random_floats
 from repro.kernels.maxpool import maxpool as K
 from repro.kernels.maxpool import ops as O
 from repro.kernels.maxpool import ref as R
 
 
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_fused_maxpool_sweep(dtype):
-    def prop(case):
-        n, m, k = case["n"], case["m"], case["k"]
-        h = jnp.asarray(random_floats(case["seed"], (n, m, k),
-                                      specials=False), dtype)
-        v, w = K.maxpool_fused(h, block_m=64, block_k=64)
-        vr, wr = R.maxpool_fused(h)
-        assert jnp.array_equal(v, vr), "pooled values"
-        assert jnp.array_equal(w, wr), "winner indices"
-    sweep(prop, list(grid(n=[2, 8, 16], m=[64, 192], k=[128],
-                          seed=[0, 1])))
+def _h(case):
+    return jnp.asarray(
+        random_floats(case["seed"], (case["n"], case["m"], case["k"]),
+                      specials=False), case["dtype"])
 
 
-def test_winner_bwd_sweep():
-    def prop(case):
-        n, m, k = 8, case["m"], case["k"]
-        h = jnp.asarray(random_floats(case["seed"], (n, m, k),
-                                      specials=False))
-        _, w = K.maxpool_fused(h)
-        g = jnp.asarray(random_floats(case["seed"] + 100, (m, k),
-                                      specials=False))
-        gh = K.maxpool_winner_bwd(w, g, n)
-        ghr = R.maxpool_winner_bwd(w, g, n)
-        assert jnp.allclose(gh, ghr)
-    sweep(prop, list(grid(m=[64, 128], k=[64, 256], seed=[0, 1])))
+FUSED = ParityOp(
+    name="maxpool_fused",
+    make=lambda case: (_h(case),),
+    kernel=lambda h: K.maxpool_fused(h, block_m=64, block_k=64),
+    reference=R.maxpool_fused,
+    cases=list(grid(n=[2, 8, 16], m=[64, 192], k=[128], seed=[0, 1],
+                    dtype=[jnp.float32, jnp.bfloat16])),
+)
+
+
+def _bwd_args(case):
+    h = _h(case)
+    _, w = K.maxpool_fused(h)
+    g = jnp.asarray(random_floats(case["seed"] + 100,
+                                  (case["m"], case["k"]), specials=False))
+    return w, g, case["n"]
+
+
+WINNER_BWD = ParityOp(
+    name="maxpool_winner_bwd",
+    make=_bwd_args,
+    kernel=K.maxpool_winner_bwd,
+    reference=R.maxpool_winner_bwd,
+    cases=list(grid(n=[8], m=[64, 128], k=[64, 256], seed=[0, 1],
+                    dtype=[jnp.float32])),
+)
+
+AUTOFIT = ParityOp(
+    name="maxpool_block_autofit",
+    make=lambda case: (_h(case),),
+    kernel=lambda h: K.maxpool_fused(h, block_m=128, block_k=256),
+    reference=R.maxpool_fused,
+    # odd shapes force fit_block below the requested tile sizes
+    cases=list(grid(n=[3], m=[96], k=[384], seed=[2],
+                    dtype=[jnp.float32])),
+)
+
+
+def test_fused_maxpool_parity():
+    check(FUSED)
+
+
+def test_winner_bwd_parity():
+    check(WINNER_BWD)
+
+
+def test_block_autofit_odd_shapes():
+    check(AUTOFIT)
 
 
 def test_ops_maxpool_grad_single_winner():
@@ -51,10 +79,3 @@ def test_ops_matches_core_fedocs():
     from repro.core import fedocs
     h = jnp.asarray(random_floats(9, (8, 128, 256), specials=False))
     assert jnp.array_equal(O.maxpool(h), fedocs.maxpool(h, "all"))
-
-
-def test_block_autofit_odd_shapes():
-    h = jnp.asarray(random_floats(2, (3, 96, 384), specials=False))
-    v, w = K.maxpool_fused(h, block_m=128, block_k=256)
-    vr, wr = R.maxpool_fused(h)
-    assert jnp.array_equal(v, vr) and jnp.array_equal(w, wr)

@@ -1,33 +1,50 @@
-"""Per-kernel allclose sweep: monotone code kernel vs core.quantize oracle."""
+"""Monotone code kernel vs core.quantize oracle, via the parity harness."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from proptest import grid, random_floats, sweep
+from kernel_parity import ParityOp, check
+from proptest import grid, random_floats
 from repro.kernels.ocs_quant import ocs_quant as K
 from repro.kernels.ocs_quant import ops as O
 from repro.kernels.ocs_quant import ref as R
 
+_CASES = list(grid(m=[64, 256], k=[128], scale=[0.1, 100.0], seed=[0, 1],
+                   bits=[8, 16], dtype=[jnp.float32, jnp.bfloat16]))
 
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-@pytest.mark.parametrize("bits", [8, 16])
-def test_encode_decode_sweep(dtype, bits):
-    if dtype == jnp.bfloat16 and bits > 16:
-        pytest.skip("bf16 caps at 16-bit codes")
 
-    def prop(case):
-        x = jnp.asarray(random_floats(case["seed"], (case["m"], case["k"]),
-                                      scale=case["scale"]), dtype)
-        c = K.encode(x, bits)
-        cr = R.encode(x, bits)
-        assert jnp.array_equal(c, cr), "codes"
-        d = K.decode(c, bits, dtype)
-        dr = R.decode(cr, bits, dtype)
-        assert jnp.array_equal(d, dr), "decoded values"
-    sweep(prop, list(grid(m=[64, 256], k=[128], scale=[0.1, 100.0],
-                          seed=[0, 1])))
+def _x(case):
+    return jnp.asarray(random_floats(case["seed"], (case["m"], case["k"]),
+                                     scale=case["scale"]), case["dtype"])
+
+
+ENCODE = ParityOp(
+    name="ocs_quant_encode",
+    make=lambda case: (_x(case), case["bits"]),
+    kernel=K.encode,
+    reference=R.encode,
+    cases=_CASES,
+)
+
+# decode parity over the codes the reference encoder emits (same stream both
+# sides, so decode is exercised on exactly the reachable code values)
+DECODE = ParityOp(
+    name="ocs_quant_decode",
+    make=lambda case: (R.encode(_x(case), case["bits"]), case["bits"],
+                       case["dtype"]),
+    kernel=K.decode,
+    reference=R.decode,
+    cases=_CASES,
+)
+
+
+def test_encode_parity():
+    check(ENCODE)
+
+
+def test_decode_parity():
+    check(DECODE)
 
 
 def test_straight_through_grad():

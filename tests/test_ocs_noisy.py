@@ -98,3 +98,72 @@ def test_higher_miss_rate_more_collisions():
                                p_miss=0.5)
     assert int(hi.collisions) >= int(lo.collisions)
     assert float(jnp.mean(hi.correct)) <= float(jnp.mean(lo.correct)) + 0.05
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous per-worker p_miss (near/far users)
+# ---------------------------------------------------------------------------
+
+def test_per_worker_p_miss_broadcast_equals_scalar():
+    """An (N,) p_miss with every entry equal must be bit-for-bit the scalar
+    path (the uniform sensing draw is threshold-independent), through both
+    contention backends."""
+    def prop(case):
+        n, p = 6, case["p"]
+        h = jnp.asarray(random_floats(case["seed"], (n, 24), specials=False))
+        key = jax.random.PRNGKey(case["seed"])
+        pv = jnp.full((n,), p, jnp.float32)
+        for backend in ("scan", "pallas"):
+            a = ocs.ocs_maxpool_noisy(h, key, bits=12, p_miss=p,
+                                      backend=backend)
+            b = ocs.ocs_maxpool_noisy(h, key, bits=12, p_miss=pv,
+                                      backend=backend)
+            for f in ("winner", "correct", "collisions", "rounds",
+                      "contention_slots"):
+                assert np.array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f))), \
+                    f"{backend}/{f}"
+    sweep(prop, [{"p": p, "seed": s} for p in (0.0, 0.1, 0.4)
+                 for s in (0, 1)], "case")
+
+
+def test_per_worker_p_miss_monotone_win_rate():
+    """Raising one worker's own p_miss never decreases its win rate.
+
+    Direction matters: ``p_miss`` is *receiver-side* — a worker that misses
+    others' blocking signals survives sub-slots it should have conceded, so
+    a deafer worker becomes an aggressive false survivor and (with
+    lowest-index capture) wins weakly MORE often, not less.  The draws are
+    coupled (same rng => same uniforms, only the threshold moves), so the
+    effect is monotone up to rare second-order chains; a small epsilon
+    absorbs those."""
+    def prop(seed):
+        n, k = 8, 256
+        h = jnp.asarray(random_floats(seed, (n, k), specials=False))
+        key = jax.random.PRNGKey(seed)
+        target = 3
+        rates = []
+        for p_t in (0.05, 0.2, 0.5, 0.8):
+            pv = jnp.full((n,), 0.05, jnp.float32).at[target].set(p_t)
+            res = ocs.ocs_maxpool_noisy(h, key, bits=10, p_miss=pv)
+            rates.append(float(np.mean(np.asarray(res.winner) == target)))
+        for lo, hi in zip(rates, rates[1:]):
+            assert hi >= lo - 0.02, rates
+        # and the effect is substantial end to end
+        assert rates[-1] > rates[0], rates
+    sweep(prop, list(seeds(3)), "seed")
+
+
+def test_per_worker_p_miss_degrades_far_users_detection():
+    """In a near/far cell the far (deaf) half causes more collisions than a
+    uniformly-near cell, and correctness degrades."""
+    from repro.sim.scenarios import near_far_p_miss
+    h = jnp.asarray(random_floats(3, (8, 64), specials=False))
+    key = jax.random.PRNGKey(0)
+    near = ocs.ocs_maxpool_noisy(h, key, bits=12,
+                                 p_miss=jnp.zeros((8,), jnp.float32))
+    mixed = ocs.ocs_maxpool_noisy(
+        h, key, bits=12,
+        p_miss=jnp.asarray(near_far_p_miss(8, 0.0, 0.5), jnp.float32))
+    assert int(mixed.collisions) > int(near.collisions)
+    assert float(jnp.mean(mixed.correct)) <= float(jnp.mean(near.correct))

@@ -149,6 +149,40 @@ def test_multichannel_latency_and_results_emitter(tmp_path):
     assert loaded[1]["latency_slots"] == -(-slots // 4)
 
 
+def test_near_far_scenario_matches_unbatched_vector_p():
+    """A per-worker p_miss scenario through the batched sweep equals the
+    unbatched noisy protocol with the same (N,) vector, and a tuple with
+    equal entries equals the scalar scenario (broadcast equivalence at the
+    sweep level)."""
+    from repro.sim.scenarios import near_far_p_miss
+    nf = near_far_p_miss(8, 0.0, 0.3)
+    cells = [Scenario("t/nf", n_workers=8, bits=12, p_miss=nf),
+             Scenario("t/flat_vec", n_workers=8, bits=12,
+                      p_miss=(0.05,) * 8),
+             Scenario("t/flat", n_workers=8, bits=12, p_miss=0.05)]
+    sw = sim_sweep.run_sweep(cells, k_elems=24, rounds=2, rng_seed=9,
+                             include_clean=False)
+    keys = jax.random.split(jax.random.PRNGKey(9), 3 * 2).reshape(3, 2, -1)
+    for i, p in ((0, jnp.asarray(nf, jnp.float32)), (1, 0.05)):
+        for r in range(2):
+            h = jnp.asarray(sw.scenario_h(i)[r])
+            ref = ocs.ocs_maxpool_noisy(h, keys[i, r], bits=12, p_miss=p)
+            cell = sw.noisy_cell(i, r)
+            assert np.array_equal(np.asarray(cell.winner),
+                                  np.asarray(ref.winner)), (i, r)
+            assert int(cell.contention_slots) == int(ref.contention_slots)
+            assert int(cell.rounds) == int(ref.rounds)
+    # equal-entry tuple == scalar scenario, every leaf (single-cell sweeps
+    # so both draw the same features and noise keys)
+    s_vec = sim_sweep.run_sweep([cells[1]], k_elems=24, rounds=1,
+                                rng_seed=3, include_clean=False)
+    s_sca = sim_sweep.run_sweep([cells[2]], k_elems=24, rounds=1,
+                                rng_seed=3, include_clean=False)
+    for x, y in zip(jax.tree.leaves(s_vec.noisy),
+                    jax.tree.leaves(s_sca.noisy)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
 def test_scenario_registry_and_grid():
     assert "dense_cell" in sim_scenarios.names()
     s = sim_scenarios.get("dense_cell")
@@ -161,6 +195,14 @@ def test_scenario_registry_and_grid():
         Scenario("bad", n_workers=0)
     with pytest.raises(ValueError):
         Scenario("bad", n_workers=2, p_miss=1.0)
+    with pytest.raises(ValueError):              # per-worker length mismatch
+        Scenario("bad", n_workers=4, p_miss=(0.0, 0.1))
+    with pytest.raises(ValueError):              # per-worker out of range
+        Scenario("bad", n_workers=2, p_miss=(0.0, 1.0))
+    assert "near_far_cell" in sim_scenarios.names()
+    nf = sim_scenarios.get("near_far_cell")
+    assert nf.p_miss_per_worker() == nf.p_miss and len(nf.p_miss) == 16
+    assert sim_scenarios.get("lab_bench").p_miss_per_worker() == (0.0, 0.0)
     # bits + ceil(log2 N) tie-break bits must fit the 32-bit contention word
     with pytest.raises(ValueError):
         Scenario("bad", n_workers=4, bits=32)

@@ -12,6 +12,7 @@ Contracts under test:
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import fedocs, vertical
 from repro.core.vertical import VerticalConfig
@@ -89,6 +90,42 @@ def test_curve_config_validation():
         tc.CurveConfig(bits=(12,))            # no ideal max_q12 reference
     with pytest.raises(ValueError):
         tc.CurveConfig(p_miss=(0.0, 1.0))
+    with pytest.raises(ValueError):           # wrong per-worker length
+        tc.CurveConfig(p_miss=((0.0, 0.1),))  # n_workers = 4
+    with pytest.raises(ValueError):
+        tc.CurveConfig(p_miss=(0.0, (0.1, 0.2, 0.3, 1.5)))
+    with pytest.raises(ValueError):
+        tc.CurveConfig(backend="scan", p_miss=())
+
+
+def test_curve_per_worker_lanes_broadcast():
+    """Scalar and per-worker lanes mix: lane_p_miss broadcasts to (L, N)."""
+    cfg = tc.CurveConfig(**{**TINY.__dict__,
+                            "p_miss": (0.0, (0.0, 0.1, 0.1, 0.3))})
+    lanes = cfg.lane_p_miss()
+    assert lanes.shape == (2, 4)
+    assert np.array_equal(lanes[0], np.zeros(4, np.float32))
+    # all-scalar configs keep the historical (L,) lane axis
+    assert TINY.lane_p_miss().shape == (2,)
+
+
+@pytest.mark.slow
+def test_curve_pallas_backend_matches_scan_bit_for_bit():
+    """The fused contention kernel drives the whole training loop to the
+    exact same trajectory as the scan backend (tentpole acceptance at the
+    train-curve level), including a heterogeneous near/far lane.  Slow
+    tier: the fast tier covers the same contract at the aggregator level
+    (test_kernels_contention + bench_contention --smoke)."""
+    small = {**TINY.__dict__, "steps": 4, "n_train": 64, "n_val": 32,
+             "p_miss": (0.0, (0.0, 0.1, 0.1, 0.3))}
+    a = tc.run_curves(tc.CurveConfig(**{**small, "backend": "scan"}))
+    b = tc.run_curves(tc.CurveConfig(**{**small, "backend": "pallas"}))
+    assert np.array_equal(a.acc, b.acc)
+    assert np.array_equal(a.nll, b.nll)
+    assert np.array_equal(a.loss_history, b.loss_history)
+    for x, y in zip(jax.tree.leaves(a.noisy_params[0]),
+                    jax.tree.leaves(b.noisy_params[0])):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
 
 
 def test_train_step_with_rng_microbatches():
