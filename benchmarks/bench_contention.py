@@ -13,7 +13,10 @@ contract: the run self-checks
     'first')`` through BOTH backends,
 
 and reports per-backend step times plus the pallas/scan speedup (the README
-kernels table quotes these numbers).
+kernels table quotes these numbers).  ``json_path``/a positional JSON
+argument additionally persists the numbers (``benchmarks/run.py`` writes the
+canonical ``BENCH_contention.json`` at the repo root for trajectory
+tracking).
 
   PYTHONPATH=src python -m benchmarks.bench_contention           # full shape
   PYTHONPATH=src python -m benchmarks.bench_contention --smoke   # CI tier
@@ -21,9 +24,10 @@ kernels table quotes these numbers).
 
 from __future__ import annotations
 
+import json
 import sys
 import time
-from typing import List
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +47,7 @@ def _time(fn, *args, iters: int) -> float:
     return (time.time() - t0) / iters * 1e6
 
 
-def run(smoke: bool = False) -> List[str]:
+def run(smoke: bool = False, json_path: Optional[str] = None) -> List[str]:
     # curve-runner shapes: fedocs.maxpool_noisy sees (N, batch, embed_dim)
     # and flattens to (N, batch*embed); bench_curves' smoke/full configs
     if smoke:
@@ -60,6 +64,10 @@ def run(smoke: bool = False) -> List[str]:
 
     rows: List[str] = []
     compiles = {b: 0 for b in BACKENDS}
+    bench = {"bench": "contention", "smoke": smoke,
+             "shape": {"n": n, "elems": batch * embed,
+                       "lanes": len(p_lanes), "iters": iters},
+             "fwd_vjp_us": {}, "pallas_over_scan": {}}
     for bits in (8, 16):
         outs, grads, times = {}, {}, {}
         for backend in BACKENDS:
@@ -103,6 +111,9 @@ def run(smoke: bool = False) -> List[str]:
                 f"contention/{backend}_b{bits},{times[backend]:.0f},"
                 f"N={n};elems={batch * embed};lanes={len(p_lanes)};"
                 f"fwd+vjp=1")
+            bench["fwd_vjp_us"][f"{backend}_b{bits}"] = round(
+                times[backend], 1)
+        bench["pallas_over_scan"][f"b{bits}"] = round(speedup, 2)
         rows.append(
             f"contention/speedup_b{bits},0,pallas_over_scan="
             f"{speedup:.2f}x")
@@ -119,9 +130,18 @@ def run(smoke: bool = False) -> List[str]:
         f"compiles_scan={compiles['scan']};"
         f"compiles_pallas={compiles['pallas']};"
         "p0_matches_ideal=1;backends_bitwise_equal=1")
+    if json_path:
+        bench["compiles"] = dict(compiles)
+        bench["p0_matches_ideal"] = True
+        bench["backends_bitwise_equal"] = True
+        with open(json_path, "w") as f:
+            json.dump(bench, f, indent=2, sort_keys=True)
+            f.write("\n")
     return rows
 
 
 if __name__ == "__main__":
-    for r in run(smoke="--smoke" in sys.argv):
+    argv = [a for a in sys.argv[1:] if a != "--smoke"]
+    for r in run(smoke="--smoke" in sys.argv,
+                 json_path=argv[0] if argv else None):
         print(r)

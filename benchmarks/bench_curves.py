@@ -3,13 +3,23 @@
 The paper's end-to-end experiment — train the vertical learner with the
 noisy-OCS channel *in the forward pass* and report accuracy as a function of
 the sensing-miss probability and the backoff depth.  Every ``p_miss`` lane
-of a ``bits`` value trains inside ONE jitted train step (``p_miss`` and the
-sensing rng are traced); the meta row reports the jit trace counters and the
-run self-checks two contracts from the curve engine:
+of a ``bits`` value trains inside ONE compiled train step (``p_miss`` and
+the sensing rng are traced), and the fused ``engine="scan"`` driver runs the
+whole steps loop in ONE dispatch per ``bits`` value.  The run times BOTH
+curve engines (the fused scan engine and the legacy per-step python driver)
+and self-checks the engine contracts:
 
-  * exactly one train-step compilation per ``bits`` value, and
+  * exactly one fused compilation AND ``<= ceil(steps/log_every) + 2``
+    dispatches per ``bits`` value on the scan engine,
+  * >= 3x fewer dispatches per ``bits`` value than the python engine,
+  * scan-vs-python bit-for-bit parity (accuracy, nll, loss history AND
+    trained parameters),
   * the ``p_miss=0`` lane matches the ideal ``max_q{bits}`` reference run
     bit for bit (accuracy AND trained parameters).
+
+``--bench-json PATH`` (or ``bench_json_path=``) additionally emits the
+timing/dispatch numbers as ``BENCH_curves.json`` — ``benchmarks/run.py``
+writes the canonical copy at the repo root for trajectory tracking.
 
   PYTHONPATH=src python -m benchmarks.bench_curves           # full curves
   PYTHONPATH=src python -m benchmarks.bench_curves --smoke   # CI smoke tier
@@ -17,7 +27,9 @@ run self-checks two contracts from the curve engine:
 
 from __future__ import annotations
 
+import dataclasses
 import json
+import math
 import sys
 import time
 from typing import List, Optional
@@ -42,20 +54,65 @@ def _full_config() -> tc.CurveConfig:
                           head_dims=(128, 64), log_every=25)
 
 
-def run(smoke: bool = False, json_path: Optional[str] = None) -> List[str]:
-    ccfg = _smoke_config() if smoke else _full_config()
-
+def _run_engine(ccfg: tc.CurveConfig):
     tc.reset_trace_counts()
-    t0 = time.time()
+    tc.reset_dispatch_counts()
+    t0 = time.perf_counter()
     curves = tc.run_curves(ccfg)
-    dt_us = (time.time() - t0) * 1e6 / max(1, ccfg.steps)
-    traces = tc.trace_counts()
+    wall = time.perf_counter() - t0
+    return curves, wall, tc.trace_counts(), tc.dispatch_counts()
 
+
+def _assert_bitwise_equal(a: tc.CurveResult, b: tc.CurveResult) -> None:
+    import jax
+
+    for name in ("acc", "nll", "acc_ideal", "nll_ideal", "loss_history",
+                 "ideal_loss_history"):
+        if not np.array_equal(getattr(a, name), getattr(b, name)):
+            raise RuntimeError(
+                f"engine parity broken: scan vs python disagree on {name}")
+    for bi in range(len(a.config.bits)):
+        for pa, pb in ((a.noisy_params, b.noisy_params),
+                       (a.ideal_params, b.ideal_params)):
+            for x, y in zip(jax.tree.leaves(pa[bi]), jax.tree.leaves(pb[bi])):
+                if not np.array_equal(np.asarray(x), np.asarray(y)):
+                    raise RuntimeError(
+                        "engine parity broken: trained params diverged")
+
+
+def run(smoke: bool = False, json_path: Optional[str] = None,
+        bench_json_path: Optional[str] = None) -> List[str]:
+    ccfg = _smoke_config() if smoke else _full_config()
     n_bits = len(ccfg.bits)
-    if traces["noisy_step"] != n_bits or traces["ideal_step"] != n_bits:
+    trained_steps = ccfg.steps * n_bits          # total steps per engine
+
+    curves, wall_scan, traces_s, disp_s = _run_engine(ccfg)
+    if traces_s["fused"] != n_bits:
         raise RuntimeError(
-            f"curve engine recompiled per lane: {traces} for {n_bits} bit "
+            f"scan engine recompiled per lane: {traces_s} for {n_bits} bit "
             "depths — traced-(p_miss, rng) batching regression")
+    per_bits_scan = disp_s["fused"] / n_bits
+    bound = math.ceil(ccfg.steps / ccfg.log_every) + 2
+    if per_bits_scan > bound:
+        raise RuntimeError(
+            f"scan engine dispatched {per_bits_scan}/bits — exceeds the "
+            f"ceil(steps/log_every)+2 = {bound} fusion bound")
+
+    curves_py, wall_py, traces_p, disp_p = _run_engine(
+        dataclasses.replace(ccfg, engine="python"))
+    if traces_p["noisy_step"] != n_bits or traces_p["ideal_step"] != n_bits:
+        raise RuntimeError(
+            f"python engine recompiled per lane: {traces_p} for {n_bits} "
+            "bit depths — traced-(p_miss, rng) batching regression")
+    per_bits_python = sum(disp_p.values()) / n_bits
+    dispatch_ratio = per_bits_python / per_bits_scan
+    if dispatch_ratio < 3:
+        raise RuntimeError(
+            f"scan engine only saves {dispatch_ratio:.1f}x dispatches per "
+            "bits value (acceptance floor: 3x)")
+
+    # engine parity: the fused scan trajectory IS the per-step trajectory
+    _assert_bitwise_equal(curves, curves_py)
 
     # p_miss lane 0 is 0.0 in both configs: it must reproduce the ideal
     # max_q{bits} run bit for bit (same trained params, same accuracy).
@@ -73,23 +130,77 @@ def run(smoke: bool = False, json_path: Optional[str] = None) -> List[str]:
                     f"bits={bits}: p_miss=0 trained params diverged from "
                     "the ideal reference run")
 
+    # wall-clock includes the (cacheable) compile; the python engine pays
+    # dispatch + host-sync overhead per step, the scan engine does not —
+    # their gap is the host-overhead share of the per-step driver
+    sps_scan = trained_steps / wall_scan
+    sps_python = trained_steps / wall_py
+    host_overhead = max(0.0, 1.0 - wall_scan / wall_py)
+
     records = sim_results.summarize_curves(curves)
     rows = sim_results.curve_rows(records)
     rows.append(
-        f"curves/meta,{dt_us:.0f},"
-        f"bits={len(ccfg.bits)};lanes={len(ccfg.p_miss)};"
-        f"steps={ccfg.steps};"
-        f"compiles_noisy={traces['noisy_step']};"
-        f"compiles_ideal={traces['ideal_step']};p0_matches_ideal=1")
+        f"curves/engine_scan,{wall_scan / trained_steps * 1e6:.0f},"
+        f"steps_per_sec={sps_scan:.1f};dispatches_per_bits="
+        f"{per_bits_scan:g};compiles={traces_s['fused']}")
+    rows.append(
+        f"curves/engine_python,{wall_py / trained_steps * 1e6:.0f},"
+        f"steps_per_sec={sps_python:.1f};dispatches_per_bits="
+        f"{per_bits_python:g}")
+    rows.append(
+        f"curves/dispatch,0,ratio={dispatch_ratio:.0f}x;"
+        f"scan_bound={bound};host_overhead_frac={host_overhead:.2f}")
+    rows.append(
+        f"curves/meta,0,"
+        f"bits={n_bits};lanes={len(ccfg.p_miss)};steps={ccfg.steps};"
+        f"engines_bitwise_equal=1;p0_matches_ideal=1")
+
     if json_path:
         with open(json_path, "w") as f:
             json.dump(records, f, indent=2, sort_keys=True)
+            f.write("\n")
+    if bench_json_path:
+        bench = {
+            "bench": "curves",
+            "smoke": smoke,
+            "grid": {"bits": list(ccfg.bits), "lanes": len(ccfg.p_miss),
+                     "steps": ccfg.steps, "batch": ccfg.batch,
+                     "log_every": ccfg.log_every,
+                     "n_workers": ccfg.n_workers,
+                     "embed_dim": ccfg.embed_dim},
+            "engines": {
+                "scan": {"wall_s": round(wall_scan, 3),
+                         "steps_per_sec": round(sps_scan, 2),
+                         "dispatches_per_bits": per_bits_scan,
+                         "traces_per_bits": traces_s["fused"] / n_bits},
+                "python": {"wall_s": round(wall_py, 3),
+                           "steps_per_sec": round(sps_python, 2),
+                           "dispatches_per_bits": per_bits_python},
+            },
+            "dispatch_ratio": round(dispatch_ratio, 1),
+            "speedup_scan_over_python": round(wall_py / wall_scan, 2),
+            "host_overhead_frac": round(host_overhead, 3),
+            "parity_bitwise": True,
+            "p0_matches_ideal": True,
+        }
+        with open(bench_json_path, "w") as f:
+            json.dump(bench, f, indent=2, sort_keys=True)
             f.write("\n")
     return rows
 
 
 if __name__ == "__main__":
-    argv = [a for a in sys.argv[1:] if a != "--smoke"]
-    for r in run(smoke="--smoke" in sys.argv,
-                 json_path=argv[0] if argv else None):
+    argv = sys.argv[1:]
+    bench_json = None
+    if "--bench-json" in argv:
+        i = argv.index("--bench-json")
+        if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
+            sys.exit("usage: bench_curves [--smoke] [--bench-json PATH] "
+                     "[records.json]")
+        bench_json = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
+    positional = [a for a in argv if a != "--smoke"]
+    for r in run(smoke="--smoke" in argv,
+                 json_path=positional[0] if positional else None,
+                 bench_json_path=bench_json):
         print(r)

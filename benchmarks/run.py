@@ -10,12 +10,20 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_contention  noisy-contention backends: lax.scan vs fused Pallas
   bench_kernels   Pallas kernel micro-timings (interpret mode)
   bench_roofline  roofline terms per (arch x shape) from dry-run artifacts
+
+Full (non ``--fast``) runs additionally persist their numbers as canonical
+``BENCH_*.json`` files at the repo root (``BENCH_curves.json``,
+``BENCH_contention.json``), so the perf trajectory is diffable across PRs;
+``--fast`` leaves the committed full-scale numbers untouched.
 """
 
 from __future__ import annotations
 
+import pathlib
 import sys
 import time
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
 def main() -> None:
@@ -29,9 +37,17 @@ def main() -> None:
         print(row)
     for row in bench_sweep.run(smoke=fast):
         print(row)
-    for row in bench_curves.run(smoke=fast):
+    # canonical trajectory files only from full-scale runs: a --fast smoke
+    # must not overwrite the committed 600-step numbers with 24-step ones
+    for row in bench_curves.run(
+            smoke=fast,
+            bench_json_path=None if fast
+            else str(REPO_ROOT / "BENCH_curves.json")):
         print(row)
-    for row in bench_contention.run(smoke=fast):
+    for row in bench_contention.run(
+            smoke=fast,
+            json_path=None if fast
+            else str(REPO_ROOT / "BENCH_contention.json")):
         print(row)
     for row in bench_kernels.run():
         print(row)

@@ -22,16 +22,18 @@ def main():
                           hw=32, encoder_dims=(128, 64), embed_dim=32,
                           head_dims=(128, 64))
     tc.reset_trace_counts()
+    tc.reset_dispatch_counts()
     curves = tc.run_curves(ccfg)
     records = results.summarize_curves(curves)
 
     print("# accuracy vs p_miss (channel-in-the-loop training)")
     for row in results.curve_rows(records):
         print(row)
-    traces = tc.trace_counts()
+    traces, disp = tc.trace_counts(), tc.dispatch_counts()
     print(f"# {len(ccfg.bits)} bit depths x {len(ccfg.p_miss)} p_miss lanes, "
-          f"train-step compilations: noisy={traces['noisy_step']} "
-          f"ideal={traces['ideal_step']}")
+          f"fused scan engine: {traces['fused']} compilations, "
+          f"{disp['fused']} dispatches "
+          f"(vs {2 * ccfg.steps + 2} per bits on the python engine)")
 
     if len(sys.argv) > 1:
         with open(sys.argv[1], "w") as f:

@@ -41,7 +41,9 @@ def adamw(lr_fn: Callable, b1: float = 0.9, b2: float = 0.95,
     """AdamW with decoupled weight decay and fp32 master weights."""
 
     def init(params):
-        f32 = lambda p: p.astype(jnp.float32)
+        # a fresh buffer even for fp32 params (astype would alias), so the
+        # params and master carries stay donatable side by side
+        f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
         return {
             "step": jnp.zeros((), jnp.int32),
             "master": jax.tree.map(f32, params),

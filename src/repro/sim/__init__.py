@@ -3,8 +3,10 @@
 ``scenarios``    — registry of named wireless scenarios and grid builders.
 ``sweep``        — the vmap/jit (and shard_map-sharded) grid runner over the
                    batched protocol cores.
-``train_curves`` — accuracy-vs-p_miss/bits curve runner: short training runs
-                   with the noisy-OCS channel in the forward pass.
+``train_curves`` — accuracy-vs-p_miss/bits curve runner: the fused on-device
+                   scan engine (one dispatch per ``bits`` value, lane axis
+                   device-sharded) beside the legacy per-step python engine.
+``shard``        — the shared 1-D shard_map machinery both runners use.
 ``results``      — table/JSON emission with channel-accounting merge.
 """
 
@@ -15,7 +17,8 @@ from repro.sim.sweep import (  # noqa: F401
     SweepResult, run_sweep, reset_trace_counts, trace_counts,
 )
 from repro.sim.train_curves import (  # noqa: F401
-    CurveConfig, CurveResult, run_curves,
+    CurveConfig, CurveResult, dispatch_counts, reset_dispatch_counts,
+    run_curves,
 )
 from repro.sim.results import (  # noqa: F401
     curve_rows, summarize, summarize_curves, to_json, to_rows, write_json,

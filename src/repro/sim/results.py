@@ -90,7 +90,9 @@ def summarize_curves(curves) -> List[Record]:
     ``curves`` is a ``repro.sim.train_curves.CurveResult``.  The flat record
     list serves both tables: filter on ``bits`` for accuracy-vs-p_miss, on
     ``p_miss`` for accuracy-vs-bits.  Uplink accounting uses the D-bit code
-    payload the ``max_noisy`` winner actually transmits.
+    payload the ``max_noisy`` winner actually transmits.  Records label
+    lanes by the configured operating points (``config.p_miss``);
+    ``CurveResult.p_miss`` carries their float32 traced counterparts.
     """
     ccfg = curves.config
     records: List[Record] = []
@@ -100,7 +102,7 @@ def summarize_curves(curves) -> List[Record]:
                                cfg=cfg)
         cat = channel.concat_load(ccfg.n_workers, ccfg.embed_dim)
         for li in range(curves.p_miss.shape[0]):
-            p = curves.p_miss[li]
+            p = ccfg.p_miss[li]
             records.append({
                 "curve": f"b{bits}_p{_fmt_p_miss(p)}",
                 "bits": bits,

@@ -1,0 +1,71 @@
+"""Shared 1-D `shard_map` machinery for batched-lane axes.
+
+Both grid runners shard one leading "lane" axis over the host's local
+devices: ``repro.sim.sweep`` shards the *scenario* axis, and
+``repro.sim.train_curves`` shards the *p_miss lane* axis of the fused curve
+engine.  The mesh construction and the jax-version shims (``jax.shard_map``
+vs ``jax.experimental.shard_map``, ``check_vma`` vs ``check_rep``) live here
+so every runner gets the identical placement semantics — and the identical
+bit-for-bit-vs-vmap property that ``tests/test_sweep.py`` and
+``tests/test_train_curves.py`` assert with forced host devices.
+
+Sharding only changes placement, never results: callers pad the lane axis up
+to a device-count multiple (:func:`pad_lanes`) and drop the padding rows
+after the dispatch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P  # noqa: F401  (re-exported)
+
+
+@functools.lru_cache(maxsize=None)
+def mesh_1d(n_devices: int, axis: str = "s"):
+    """1-D device mesh for a lane axis (cached: jit keys on identity)."""
+    make_mesh = getattr(jax, "make_mesh", None)
+    if make_mesh is not None:
+        return make_mesh((n_devices,), (axis,))
+    # jax<0.4.35 (pyproject floor is 0.4.30): build the Mesh directly
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:n_devices]), (axis,))
+
+
+def shard_1d(fn, n_devices: int, in_specs, out_specs, axis: str = "s"):
+    """Wrap ``fn`` in shard_map over a 1-D ``axis`` mesh.
+
+    ``in_specs``/``out_specs`` follow the shard_map contract (pytree
+    prefixes of the arguments/results); pass ``P(axis)`` for lane-leading
+    arguments and ``P()`` for replicated ones.
+    """
+    shard_map = getattr(jax, "shard_map", None)
+    kwargs = {}
+    if shard_map is None:            # jax<0.6: experimental namespace,
+        from jax.experimental.shard_map import shard_map
+        kwargs["check_rep"] = False  # replication check kwarg predates
+    else:                            # its rename to check_vma
+        kwargs["check_vma"] = False
+    return shard_map(fn, mesh=mesh_1d(n_devices, axis),
+                     in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+def lane_devices(n_devices, n_lanes: int) -> int:
+    """Devices actually used for ``n_lanes`` lanes (``None`` = all local)."""
+    if n_devices is None:
+        n_devices = jax.local_device_count()
+    return max(1, min(int(n_devices), n_lanes))
+
+
+def pad_lanes(x: np.ndarray, n_devices: int) -> np.ndarray:
+    """Pad axis 0 up to a device-count multiple by repeating row 0.
+
+    Padding rows ride along as inert extra lanes (lane computations are
+    independent) and are sliced off by the caller after the dispatch.
+    """
+    pad = (-x.shape[0]) % n_devices
+    if not pad:
+        return x
+    return np.concatenate([x, np.repeat(x[:1], pad, axis=0)], axis=0)

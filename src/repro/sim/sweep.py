@@ -15,7 +15,8 @@ On multi-device hosts the scenario axis is additionally sharded over a 1-D
 multiple; the padding rows are dropped before results are returned), so a
 grid scales with hardware while staying bit-for-bit identical to the
 single-device vmap path (property-tested with forced host devices).  Pass
-``n_devices=1`` to force the plain vmap path.
+``n_devices=1`` to force the plain vmap path.  The mesh/shard_map machinery
+is shared with the curve engine's lane sharding via ``repro.sim.shard``.
 
 The padded accounting is bit-for-bit identical to unpadded per-round calls
 (``tests/test_sweep.py``), so ``benchmarks/bench_comm.py`` reproduces its
@@ -34,6 +35,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import ocs
+from repro.sim import shard as sim_shard
 from repro.sim.scenarios import Scenario
 
 # ---------------------------------------------------------------------------
@@ -68,28 +70,10 @@ def _ceil_div(a: jax.Array, b: jax.Array) -> jax.Array:
     return (a + b - 1) // b
 
 
-@functools.lru_cache(maxsize=None)
-def _scenario_mesh(n_devices: int):
-    """1-D device mesh for the scenario axis (cached: jit keys on identity)."""
-    make_mesh = getattr(jax, "make_mesh", None)
-    if make_mesh is not None:
-        return make_mesh((n_devices,), ("s",))
-    # jax<0.4.35 (pyproject floor is 0.4.30): build the Mesh directly
-    return jax.sharding.Mesh(
-        np.asarray(jax.devices()[:n_devices]), ("s",))
-
-
 def _shard_scenarios(fn, n_devices: int, n_args: int):
     """Wrap an all-scenario-leading engine in shard_map over the ``s`` mesh."""
-    shard_map = getattr(jax, "shard_map", None)
-    kwargs = {}
-    if shard_map is None:            # jax<0.6: experimental namespace,
-        from jax.experimental.shard_map import shard_map
-        kwargs["check_rep"] = False  # replication check kwarg predates
-    else:                            # its rename to check_vma
-        kwargs["check_vma"] = False
-    return shard_map(fn, mesh=_scenario_mesh(n_devices),
-                     in_specs=(P("s"),) * n_args, out_specs=P("s"), **kwargs)
+    return sim_shard.shard_1d(fn, n_devices,
+                              in_specs=(P("s"),) * n_args, out_specs=P("s"))
 
 
 @functools.partial(jax.jit,
@@ -253,8 +237,6 @@ def run_sweep(scenarios: Sequence[Scenario], *,
     by_bits: Dict[int, List[int]] = {}
     for i, s in enumerate(scenarios):
         by_bits.setdefault(s.bits, []).append(i)
-    if n_devices is None:
-        n_devices = jax.local_device_count()
 
     clean_groups, noisy_groups = [], []
     for bits, idx in sorted(by_bits.items()):
@@ -263,13 +245,10 @@ def run_sweep(scenarios: Sequence[Scenario], *,
         # a global max over *all* scenarios would make a wide-bits cell raise
         # on the id_bits of an unrelated large-N narrow-bits cell.
         max_id_bits = int(id_bits[sel].max())
-        n_dev = max(1, min(n_devices, len(sel)))
-        pad = (-len(sel)) % n_dev
+        n_dev = sim_shard.lane_devices(n_devices, len(sel))
 
         def dev_pad(x: np.ndarray) -> jax.Array:
-            if pad:
-                x = np.concatenate([x, np.repeat(x[:1], pad, axis=0)], axis=0)
-            return jnp.asarray(x)
+            return jnp.asarray(sim_shard.pad_lanes(x, n_dev))
 
         def unpad(tree):
             return jax.tree.map(lambda x: np.asarray(x)[:len(sel)], tree)

@@ -11,34 +11,65 @@ tables (emitted by ``repro.sim.results``).
 
 Compilation contract (mirrors the sweep engine): ``p_miss`` and the sensing
 rng are *traced* — the whole miss-probability axis trains as ``vmap`` lanes
-of ONE jitted train step per ``bits`` value.  An ideal ``max_q{bits}``
-reference run (same init, same data stream, same lane structure) trains
-alongside; the ``p_miss=0`` lane must match it bit for bit, which
+of ONE compiled train step per ``bits`` value.  An ideal ``max_q{bits}``
+reference run (same init, same data stream) trains alongside; the
+``p_miss=0`` lane must match it bit for bit, which
 ``benchmarks/bench_curves.py`` and ``tests/test_train_curves.py`` assert.
-Compilations are observable via :func:`trace_counts`.
+
+Two engines drive that compiled step (``CurveConfig.engine``):
+
+``"scan"`` (default)
+    The fused on-device engine: the whole ``steps`` loop is one ``lax.scan``
+    inside ONE jitted dispatch per ``bits`` value.  Batch indices are drawn
+    on device from a threaded PRNG key, the noisy lanes, the ideal reference
+    and the final channel-in-the-loop evaluation all run in that single
+    dispatch, and the logged losses accumulate into an on-device
+    ``(lanes, n_logged)`` buffer fetched once at the end — no per-step
+    dispatch or host sync.  On multi-device hosts the ``p_miss`` lane axis
+    is sharded over a 1-D mesh via ``repro.sim.shard`` (the same machinery
+    as ``run_sweep``'s scenario sharding; vmap fallback on one device,
+    bit-for-bit identical either way).  The scan carries the train state on
+    device, so params/opt-state never cross the host boundary mid-run.
+
+``"python"``
+    The legacy per-step driver (2 jitted dispatches per step from a Python
+    loop, train-state carries donated across dispatches).  Kept for one
+    release so scan-vs-python bit-for-bit parity is assertable; the batch
+    and noise streams are defined by the same key-derivation formulas, so
+    both engines train the exact same trajectory.
+
+Compilations are observable via :func:`trace_counts`, host dispatches via
+:func:`dispatch_counts` — the scan engine costs ONE dispatch per ``bits``
+value where the python engine costs ``2*steps + 2``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core import fedocs, vertical
 from repro.core.vertical import VerticalConfig
 from repro.data.vertical_data import PatchTaskConfig, patch_classification
 from repro.optim import optimizers, schedules
+from repro.sim import shard as sim_shard
 from repro.train.train_step import make_train_step
 
+ENGINES = ("scan", "python")
+
 # ---------------------------------------------------------------------------
-# compilation observability (same contract as repro.sim.sweep)
+# compilation + dispatch observability (same contract as repro.sim.sweep)
 # ---------------------------------------------------------------------------
 
-_TRACE_COUNTS: Dict[str, int] = {
-    "noisy_step": 0, "ideal_step": 0, "noisy_eval": 0, "ideal_eval": 0}
+_COUNTER_KEYS = ("fused", "noisy_step", "ideal_step", "noisy_eval",
+                 "ideal_eval")
+_TRACE_COUNTS: Dict[str, int] = {k: 0 for k in _COUNTER_KEYS}
+_DISPATCH_COUNTS: Dict[str, int] = {k: 0 for k in _COUNTER_KEYS}
 
 
 def reset_trace_counts() -> None:
@@ -48,10 +79,33 @@ def reset_trace_counts() -> None:
 
 
 def trace_counts() -> Dict[str, int]:
-    """Times each curve engine has been traced; one full :func:`run_curves`
-    costs exactly one ``*_step`` and one ``*_eval`` trace per ``bits``
-    value, no matter how many ``p_miss`` lanes the grid has."""
+    """Times each curve engine has been traced.  One :func:`run_curves`
+    costs exactly one ``fused`` trace per ``bits`` value on the scan engine
+    (one ``*_step`` + one ``*_eval`` on the python engine), no matter how
+    many ``p_miss`` lanes the grid has."""
     return dict(_TRACE_COUNTS)
+
+
+def reset_dispatch_counts() -> None:
+    """Zero the per-engine host-dispatch counters."""
+    for k in _DISPATCH_COUNTS:
+        _DISPATCH_COUNTS[k] = 0
+
+
+def dispatch_counts() -> Dict[str, int]:
+    """Jitted-engine dispatches issued from the host by each curve driver.
+
+    The scan engine issues ONE ``fused`` dispatch per ``bits`` value (train
+    loop + ideal reference + eval, all on device); the python engine issues
+    one ``noisy_step`` + one ``ideal_step`` per training step plus one
+    ``*_eval`` each per ``bits`` value (the small eager index/key ops it
+    also issues per step are not counted — this tracks the engine's own
+    call structure, it is not a profiler).  ``benchmarks/bench_curves.py``
+    asserts the ratio and the scan engine's
+    ``<= ceil(steps/log_every) + 2`` per-bits bound, guarding the fused
+    call structure against falling back to per-step driving.
+    """
+    return dict(_DISPATCH_COUNTS)
 
 
 # ---------------------------------------------------------------------------
@@ -67,7 +121,9 @@ class CurveConfig:
     ``repro.sim.scenarios.near_far_p_miss``); lanes may mix both — scalars
     broadcast.  ``backend`` picks the noisy-contention engine of the
     channel-in-the-loop forward pass (``"scan"`` or the fused ``"pallas"``
-    kernel; bit-for-bit interchangeable).
+    kernel; bit-for-bit interchangeable).  ``engine`` picks the driver:
+    the fused on-device ``"scan"`` engine (default) or the legacy per-step
+    ``"python"`` loop — bit-for-bit interchangeable as well.
     """
 
     bits: Sequence[int] = (8, 16)        # backoff/payload depth axis (static)
@@ -88,6 +144,7 @@ class CurveConfig:
     seed: int = 0
     log_every: int = 10
     backend: str = "scan"                # noisy-contention engine
+    engine: str = "scan"                 # curve driver: "scan" | "python"
 
     def __post_init__(self):
         for b in self.bits:
@@ -95,6 +152,9 @@ class CurveConfig:
                 raise ValueError(
                     f"bits={b}: the ideal reference run needs a max_q{{bits}} "
                     "aggregation mode (8 or 16)")
+        if self.engine not in ENGINES:
+            raise ValueError(
+                f"engine={self.engine!r}: valid engines are {ENGINES}")
         if not self.p_miss:
             raise ValueError("p_miss needs at least one lane")
         for p in self.p_miss:
@@ -123,6 +183,11 @@ class CurveConfig:
             np.broadcast_to(np.asarray(p, dtype), (self.n_workers,))
             for p in self.p_miss])
 
+    def logged_steps(self) -> List[int]:
+        """Steps whose train loss lands in ``CurveResult.loss_history``."""
+        return sorted(set(range(0, self.steps, self.log_every))
+                      | {self.steps - 1})
+
 
 @dataclasses.dataclass
 class CurveResult:
@@ -131,7 +196,9 @@ class CurveResult:
     Lane axis L == ``len(config.p_miss)``; bits axis follows
     ``config.bits`` order.  ``*_ideal`` rows come from the reference run
     with ideal ``max_q{bits}`` pooling (a single vmap lane — the ideal run
-    is deterministic and lane-independent).
+    is deterministic and lane-independent).  ``p_miss`` is the float32 lane
+    array the engines trace (``config.lane_p_miss()``), so the reported
+    operating points are exactly the compiled ones.
     """
 
     config: CurveConfig
@@ -148,11 +215,13 @@ class CurveResult:
 
 
 # ---------------------------------------------------------------------------
-# the runner
+# shared engine pieces: data/key streams, losses, per-bits train steps
 # ---------------------------------------------------------------------------
 
 def _lane_stack(tree, lanes: int):
-    return jax.tree.map(lambda x: jnp.stack([x] * lanes), tree)
+    """Add a leading lane axis without materializing per-lane host copies."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (lanes,) + jnp.shape(x)), tree)
 
 
 def _vertical_config(ccfg: CurveConfig, bits: int, noisy: bool
@@ -171,29 +240,176 @@ def _vertical_config(ccfg: CurveConfig, bits: int, noisy: bool
         noise_backend=ccfg.backend)
 
 
-def run_curves(ccfg: CurveConfig = CurveConfig()) -> CurveResult:
-    """Train the p_miss lane axis through the simulated channel, per bits.
+def _stream_keys(ccfg: CurveConfig, bits: int):
+    """Root keys of the (engine-independent) batch and sensing streams.
 
-    For every ``bits`` value: ONE jitted train step (lane-vmapped over
-    traced ``(rng, p_miss)``) trains all miss-probability lanes
-    simultaneously from identical inits on an identical batch stream, and
-    one ideal ``max_q{bits}`` reference trains beside it.  Evaluation runs
-    channel-in-the-loop as well (fresh sensing keys, same ``p_miss`` lanes).
+    Both engines derive every stochastic input from these by the same
+    formulas — ``_batch_indices(k_data, step)`` for the shared batch stream,
+    ``fold_in(lane_keys[l], step)`` for lane ``l``'s per-step sensing key
+    (``step == steps`` is the held-out evaluation key) — so the scan and
+    python engines train bit-for-bit identical trajectories.
     """
-    lanes = len(ccfg.p_miss)
-    p_lanes = ccfg.lane_p_miss()                 # (L,) or (L, N)
-    p_vec = jnp.asarray(p_lanes)
+    base = jax.random.PRNGKey(ccfg.seed + 7919 * bits)
+    k_data, k_noise = jax.random.split(base)
+    lane_keys = jax.random.split(k_noise, len(ccfg.p_miss))
+    return k_data, lane_keys
 
+
+def _batch_indices(k_data, step, batch: int, n_train: int):
+    """On-device minibatch draw: a pure function of (k_data, step)."""
+    return jax.random.randint(jax.random.fold_in(k_data, step),
+                              (batch,), 0, n_train)
+
+
+def _fold_lanes(lane_keys, step):
+    """Per-lane sensing keys for one step: fold the step into every lane."""
+    return jax.vmap(jax.random.fold_in, in_axes=(0, None))(lane_keys, step)
+
+
+def _make_data(ccfg: CurveConfig):
     task = PatchTaskConfig(n_classes=ccfg.n_classes, grid=ccfg.grid,
                            hw=ccfg.hw, sigma=ccfg.sigma)
     views, labels = patch_classification(task, ccfg.n_train, seed=ccfg.seed)
     v_views, v_labels = patch_classification(task, ccfg.n_val,
                                              seed=ccfg.seed + 1)
-    views_j, labels_j = jnp.asarray(views), jnp.asarray(labels)
-    vv_j, vl_j = jnp.asarray(v_views), jnp.asarray(v_labels)
+    return (jnp.asarray(views), jnp.asarray(labels),
+            jnp.asarray(v_views), jnp.asarray(v_labels))
 
-    logged = sorted(set(range(0, ccfg.steps, ccfg.log_every))
-                    | {ccfg.steps - 1})
+
+def _make_steps(ccfg: CurveConfig, bits: int):
+    """Per-bits vertical configs, optimizer, and train-step closures."""
+    vcfg_n = _vertical_config(ccfg, bits, noisy=True)
+    vcfg_i = _vertical_config(ccfg, bits, noisy=False)
+
+    def noisy_loss(values, batch, noise, _cfg=vcfg_n):
+        bviews, blabels = batch
+        return vertical.loss_fn(_cfg, values, bviews, blabels, noise=noise)
+
+    def ideal_loss(values, batch, _cfg=vcfg_i):
+        bviews, blabels = batch
+        return vertical.loss_fn(_cfg, values, bviews, blabels)
+
+    warmup = max(1, ccfg.steps // 10)
+    opt = optimizers.adamw(
+        schedules.linear_warmup_cosine(ccfg.lr, warmup, ccfg.steps),
+        weight_decay=0.01)
+    step_n = make_train_step(noisy_loss, opt, with_rng=True)
+    step_i = make_train_step(ideal_loss, opt)
+    return vcfg_n, vcfg_i, opt, step_n, step_i
+
+
+def _log_slots(ccfg: CurveConfig, logged: List[int]) -> np.ndarray:
+    """(steps,) map step -> loss_history slot; unlogged steps point one past
+    the buffer and are dropped by the scatter's ``mode="drop"``."""
+    slots = np.full((ccfg.steps,), len(logged), np.int32)
+    for i, s in enumerate(logged):
+        slots[s] = i
+    return slots
+
+
+# ---------------------------------------------------------------------------
+# the fused on-device engine: the whole curve run is one dispatch per bits
+# ---------------------------------------------------------------------------
+
+def _make_fused(ccfg: CurveConfig, per_bits, n_logged: int, n_dev: int):
+    """Build the jitted fused engine for one ``bits`` value.
+
+    ``per_bits`` is that value's ``_make_steps`` tuple (shared with the
+    caller, which needs its optimizer for the init).  One dispatch runs:
+    the ``lax.scan`` over all training steps (noisy lanes vmapped over
+    traced ``(rng, p_miss)``, batch indices drawn on device), the
+    single-lane ideal reference scan, and both channel-in-the-loop
+    evaluations.  Logged losses accumulate in carried on-device buffers
+    (scattered by the precomputed step->slot map), so nothing syncs to the
+    host until the caller fetches the results.  With ``n_dev > 1`` the lane
+    axis runs under ``shard_map`` (lane-leading args sharded, data/keys
+    replicated) — bit-for-bit the vmap path, as with ``run_sweep``.
+    """
+    vcfg_n, vcfg_i, _opt, step_n, step_i = per_bits
+    steps, batch, n_train = ccfg.steps, ccfg.batch, ccfg.n_train
+
+    def scan_lanes(step_fn, vals, opts, hist, k_data, views, labels, slots):
+        """Shared steps-scan: train ``vals`` lanes, scatter logged losses."""
+        def body(carry, x):
+            vals, opts, hist = carry
+            step, slot = x
+            idx = _batch_indices(k_data, step, batch, n_train)
+            b = (views[:, idx], labels[idx])
+            vals, opts, met = step_fn(vals, opts, b, step)
+            hist = hist.at[:, slot].set(met["loss_mean"], mode="drop")
+            return (vals, opts, hist), None
+
+        (vals, opts, hist), _ = jax.lax.scan(
+            body, (vals, opts, hist),
+            (jnp.arange(steps, dtype=jnp.int32), slots))
+        return vals, opts, hist
+
+    def noisy_lanes(params0, opt0, lane_keys, p, k_data, views, labels,
+                    vviews, vlabels, slots):
+        lanes = lane_keys.shape[0]          # shard-local lane count
+        vals, opts = _lane_stack(params0, lanes), _lane_stack(opt0, lanes)
+        hist = jnp.zeros((lanes, n_logged), jnp.float32)
+
+        def step_fn(vals, opts, b, step):
+            noise = fedocs.ChannelNoise(rng=_fold_lanes(lane_keys, step),
+                                        p_miss=p)
+            return jax.vmap(step_n, in_axes=(0, 0, None, 0))(
+                vals, opts, b, noise)
+
+        vals, _opts, hist = scan_lanes(step_fn, vals, opts, hist,
+                                       k_data, views, labels, slots)
+        eval_noise = fedocs.ChannelNoise(rng=_fold_lanes(lane_keys, steps),
+                                         p_miss=p)
+        met = jax.vmap(
+            lambda v, nz: vertical.loss_fn(vcfg_n, v, vviews, vlabels,
+                                           noise=nz)[1],
+            in_axes=(0, 0))(vals, eval_noise)
+        return vals, hist, met["acc"], met["nll"]
+
+    def ideal_lanes(params0, opt0, k_data, views, labels, vviews, vlabels,
+                    slots):
+        vals, opts = _lane_stack(params0, 1), _lane_stack(opt0, 1)
+        hist = jnp.zeros((1, n_logged), jnp.float32)
+
+        def step_fn(vals, opts, b, step):
+            return jax.vmap(step_i, in_axes=(0, 0, None))(vals, opts, b)
+
+        vals, _opts, hist = scan_lanes(step_fn, vals, opts, hist,
+                                       k_data, views, labels, slots)
+        met = jax.vmap(
+            lambda v: vertical.loss_fn(vcfg_i, v, vviews, vlabels)[1])(vals)
+        return vals, hist, met["acc"], met["nll"]
+
+    noisy_engine = noisy_lanes
+    if n_dev > 1:
+        noisy_engine = sim_shard.shard_1d(
+            noisy_lanes, n_dev,
+            in_specs=(P(), P(), P("s"), P("s"), P(), P(), P(), P(), P(),
+                      P()),
+            out_specs=(P("s"), P("s"), P("s"), P("s")))
+
+    def fused(params0, opt0, lane_keys, p, k_data, views, labels, vviews,
+              vlabels, slots):
+        _TRACE_COUNTS["fused"] += 1
+        n_out = noisy_engine(params0, opt0, lane_keys, p, k_data, views,
+                             labels, vviews, vlabels, slots)
+        i_out = ideal_lanes(params0, opt0, k_data, views, labels, vviews,
+                            vlabels, slots)
+        return n_out, i_out
+
+    return jax.jit(fused)
+
+
+def _run_curves_scan(ccfg: CurveConfig, n_devices) -> CurveResult:
+    lanes = len(ccfg.p_miss)
+    p_lanes = ccfg.lane_p_miss()                 # float32 (L,) or (L, N)
+    n_dev = sim_shard.lane_devices(n_devices, lanes)
+    p_pad = jnp.asarray(sim_shard.pad_lanes(p_lanes, n_dev))
+
+    views_j, labels_j, vv_j, vl_j = _make_data(ccfg)
+    logged = ccfg.logged_steps()
+    slots = jnp.asarray(_log_slots(ccfg, logged))
+
     acc = np.zeros((len(ccfg.bits), lanes), np.float64)
     nll = np.zeros_like(acc)
     acc_ideal = np.zeros((len(ccfg.bits),), np.float64)
@@ -203,24 +419,66 @@ def run_curves(ccfg: CurveConfig = CurveConfig()) -> CurveResult:
     noisy_params_out, ideal_params_out = [], []
 
     for bi, bits in enumerate(ccfg.bits):
-        vcfg_n = _vertical_config(ccfg, bits, noisy=True)
-        vcfg_i = _vertical_config(ccfg, bits, noisy=False)
+        per_bits = _make_steps(ccfg, bits)
+        vcfg_n, opt = per_bits[0], per_bits[2]
+        k_data, lane_keys = _stream_keys(ccfg, bits)
+        keys_pad = jnp.asarray(
+            sim_shard.pad_lanes(np.asarray(lane_keys), n_dev))
 
-        def noisy_loss(values, batch, noise, _cfg=vcfg_n):
-            bviews, blabels = batch
-            return vertical.loss_fn(_cfg, values, bviews, blabels,
-                                    noise=noise)
+        # identical init + identical batch stream for noisy lanes and the
+        # ideal reference: any divergence is the channel's doing
+        params0 = vertical.init(vcfg_n, jax.random.PRNGKey(ccfg.seed))
+        opt0 = opt.init(params0)
 
-        def ideal_loss(values, batch, _cfg=vcfg_i):
-            bviews, blabels = batch
-            return vertical.loss_fn(_cfg, values, bviews, blabels)
+        fused = _make_fused(ccfg, per_bits, len(logged), n_dev)
+        _DISPATCH_COUNTS["fused"] += 1
+        n_out, i_out = fused(params0, opt0, keys_pad, p_pad, k_data,
+                             views_j, labels_j, vv_j, vl_j, slots)
+        vals_n, hist_n, acc_n, nll_n = n_out
+        vals_i, hist_i, acc_i, nll_i = i_out
 
-        warmup = max(1, ccfg.steps // 10)
-        opt = optimizers.adamw(
-            schedules.linear_warmup_cosine(ccfg.lr, warmup, ccfg.steps),
-            weight_decay=0.01)
-        step_n = make_train_step(noisy_loss, opt, with_rng=True)
-        step_i = make_train_step(ideal_loss, opt)
+        # results come back to the host only here, after the single fused
+        # dispatch — no per-step sync anywhere above
+        acc[bi] = np.asarray(acc_n)[:lanes]
+        nll[bi] = np.asarray(nll_n)[:lanes]
+        acc_ideal[bi] = float(np.asarray(acc_i)[0])
+        nll_ideal[bi] = float(np.asarray(nll_i)[0])
+        hist[bi] = np.asarray(hist_n)[:lanes].T
+        hist_ideal[bi] = np.asarray(hist_i)[0]
+        noisy_params_out.append(
+            jax.tree.map(lambda x: x[:lanes], vals_n))
+        ideal_params_out.append(vals_i)
+
+    return CurveResult(
+        config=ccfg, p_miss=ccfg.lane_p_miss(),
+        acc=acc, nll=nll, acc_ideal=acc_ideal, nll_ideal=nll_ideal,
+        loss_history=hist, ideal_loss_history=hist_ideal,
+        logged_steps=np.asarray(logged), noisy_params=noisy_params_out,
+        ideal_params=ideal_params_out)
+
+
+# ---------------------------------------------------------------------------
+# the legacy per-step python engine (kept one release for parity assertions)
+# ---------------------------------------------------------------------------
+
+def _run_curves_python(ccfg: CurveConfig) -> CurveResult:
+    lanes = len(ccfg.p_miss)
+    p_vec = jnp.asarray(ccfg.lane_p_miss())      # (L,) or (L, N)
+
+    views_j, labels_j, vv_j, vl_j = _make_data(ccfg)
+    logged = ccfg.logged_steps()
+    slot_of = {step: i for i, step in enumerate(logged)}
+
+    acc = np.zeros((len(ccfg.bits), lanes), np.float64)
+    nll = np.zeros_like(acc)
+    acc_ideal = np.zeros((len(ccfg.bits),), np.float64)
+    nll_ideal = np.zeros_like(acc_ideal)
+    hist = np.zeros((len(ccfg.bits), len(logged), lanes), np.float64)
+    hist_ideal = np.zeros((len(ccfg.bits), len(logged)), np.float64)
+    noisy_params_out, ideal_params_out = [], []
+
+    for bi, bits in enumerate(ccfg.bits):
+        vcfg_n, vcfg_i, opt, step_n, step_i = _make_steps(ccfg, bits)
 
         def jit_noisy(values, opt_state, batch, noise):
             _TRACE_COUNTS["noisy_step"] += 1
@@ -244,8 +502,10 @@ def run_curves(ccfg: CurveConfig = CurveConfig()) -> CurveResult:
             return jax.vmap(
                 lambda v: vertical.loss_fn(_cfg, v, vv_j, vl_j)[1])(values)
 
-        jit_noisy = jax.jit(jit_noisy)
-        jit_ideal = jax.jit(jit_ideal)
+        # the train-state carries are donated: params/opt-state update in
+        # place across the per-step dispatches instead of double-buffering
+        jit_noisy = jax.jit(jit_noisy, donate_argnums=(0, 1))
+        jit_ideal = jax.jit(jit_ideal, donate_argnums=(0, 1))
         eval_noisy = jax.jit(eval_noisy)
         eval_ideal = jax.jit(eval_ideal)
 
@@ -260,26 +520,26 @@ def run_curves(ccfg: CurveConfig = CurveConfig()) -> CurveResult:
         opt_n = _lane_stack(opt0, lanes)
         opt_i = _lane_stack(opt0, 1)
 
-        base_key = jax.random.PRNGKey(ccfg.seed + 7919 * bits)
-        batch_rng = np.random.default_rng(ccfg.seed)
+        k_data, lane_keys = _stream_keys(ccfg, bits)
         for step in range(ccfg.steps):
-            idx = batch_rng.integers(0, ccfg.n_train, ccfg.batch)
+            idx = _batch_indices(k_data, step, ccfg.batch, ccfg.n_train)
             batch = (views_j[:, idx], labels_j[idx])
-            noise = fedocs.ChannelNoise(
-                rng=jax.random.split(jax.random.fold_in(base_key, step),
-                                     lanes),
-                p_miss=p_vec)
+            noise = fedocs.ChannelNoise(rng=_fold_lanes(lane_keys, step),
+                                        p_miss=p_vec)
+            _DISPATCH_COUNTS["noisy_step"] += 1
             vals_n, opt_n, met_n = jit_noisy(vals_n, opt_n, batch, noise)
+            _DISPATCH_COUNTS["ideal_step"] += 1
             vals_i, opt_i, met_i = jit_ideal(vals_i, opt_i, batch)
-            if step in logged:
-                li = logged.index(step)
+            if step in slot_of:
+                li = slot_of[step]
                 hist[bi, li] = np.asarray(met_n["loss_mean"])
                 hist_ideal[bi, li] = float(np.asarray(met_i["loss_mean"])[0])
 
-        eval_key = jax.random.fold_in(base_key, ccfg.steps)  # unused in train
         eval_noise = fedocs.ChannelNoise(
-            rng=jax.random.split(eval_key, lanes), p_miss=p_vec)
+            rng=_fold_lanes(lane_keys, ccfg.steps), p_miss=p_vec)
+        _DISPATCH_COUNTS["noisy_eval"] += 1
         m_n = eval_noisy(vals_n, eval_noise)
+        _DISPATCH_COUNTS["ideal_eval"] += 1
         m_i = eval_ideal(vals_i)
         acc[bi] = np.asarray(m_n["acc"])
         nll[bi] = np.asarray(m_n["nll"])
@@ -289,8 +549,41 @@ def run_curves(ccfg: CurveConfig = CurveConfig()) -> CurveResult:
         ideal_params_out.append(vals_i)
 
     return CurveResult(
-        config=ccfg, p_miss=ccfg.lane_p_miss(np.float64),
+        config=ccfg, p_miss=ccfg.lane_p_miss(),
         acc=acc, nll=nll, acc_ideal=acc_ideal, nll_ideal=nll_ideal,
         loss_history=hist, ideal_loss_history=hist_ideal,
         logged_steps=np.asarray(logged), noisy_params=noisy_params_out,
         ideal_params=ideal_params_out)
+
+
+# ---------------------------------------------------------------------------
+# the public runner
+# ---------------------------------------------------------------------------
+
+def run_curves(ccfg: CurveConfig = CurveConfig(), *,
+               n_devices: Optional[int] = None) -> CurveResult:
+    """Train the p_miss lane axis through the simulated channel, per bits.
+
+    For every ``bits`` value: ONE compiled train step (lane-vmapped over
+    traced ``(rng, p_miss)``) trains all miss-probability lanes
+    simultaneously from identical inits on an identical batch stream, and
+    one ideal ``max_q{bits}`` reference trains beside it.  Evaluation runs
+    channel-in-the-loop as well (fresh sensing keys, same ``p_miss`` lanes).
+
+    ``ccfg.engine`` picks the driver: the fused on-device ``"scan"`` engine
+    (one dispatch per ``bits`` value; default) or the legacy per-step
+    ``"python"`` loop — bit-for-bit identical trajectories either way.
+
+    ``n_devices`` (scan engine only) shards the ``p_miss`` lane axis over
+    local devices.  ``None`` (the default) uses every local device; ``1``
+    forces the single-device vmap path.  Results are identical either way —
+    sharding only changes placement (lanes are padded up to a device-count
+    multiple and the padding is dropped before results are returned).
+    """
+    if ccfg.engine == "python":
+        if n_devices not in (None, 1):
+            raise ValueError(
+                "engine='python' is the legacy single-device driver; use "
+                "the scan engine for sharded lanes")
+        return _run_curves_python(ccfg)
+    return _run_curves_scan(ccfg, n_devices)

@@ -19,7 +19,8 @@ from repro.optim import grad_compression
 
 def make_train_step(loss_fn: Callable, optimizer, microbatches: int = 1,
                     compress_k: Optional[float] = None,
-                    with_rng: bool = False) -> Callable:
+                    with_rng: bool = False,
+                    donate: bool = False) -> Callable:
     """loss_fn(values, batch) -> (loss, metrics dict).
 
     Returns train_step(values, opt_state, batch, err) ->
@@ -33,6 +34,13 @@ def make_train_step(loss_fn: Callable, optimizer, microbatches: int = 1,
     is any pytree of traced arrays (a PRNG key, or a ``fedocs.ChannelNoise``)
     — under microbatching each microbatch receives ``fold_in``-style
     decorrelated keys via the scan index.
+
+    ``donate=True`` returns the step pre-jitted with the train-state carries
+    (``values``, ``opt_state``) donated, so params/optimizer moments are
+    updated in place instead of double-buffering across dispatches.  The
+    caller's input buffers are consumed: rebind them from the step's outputs
+    (the usual ``values, opt_state, ... = step(values, opt_state, ...)``
+    loop) and copy any initial state that must survive the first call.
     """
     if with_rng:
         grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
@@ -92,6 +100,11 @@ def make_train_step(loss_fn: Callable, optimizer, microbatches: int = 1,
         metrics["loss_mean"] = loss
         return values, opt_state, metrics
 
+    def finalize(step):
+        # the first two positions are the train-state carries in every
+        # contract variant: updated in place when donated
+        return jax.jit(step, donate_argnums=(0, 1)) if donate else step
+
     if compress_k is not None and with_rng:
         def train_step(values, opt_state, batch, rng, err):
             grads, loss, metrics = compute_grads(values, batch, rng)
@@ -100,7 +113,7 @@ def make_train_step(loss_fn: Callable, optimizer, microbatches: int = 1,
             values, opt_state, metrics = apply_update(values, opt_state,
                                                       grads, loss, metrics)
             return values, opt_state, err, metrics
-        return train_step
+        return finalize(train_step)
 
     if compress_k is not None:
         def train_step(values, opt_state, batch, err):
@@ -110,16 +123,16 @@ def make_train_step(loss_fn: Callable, optimizer, microbatches: int = 1,
             values, opt_state, metrics = apply_update(values, opt_state,
                                                       grads, loss, metrics)
             return values, opt_state, err, metrics
-        return train_step
+        return finalize(train_step)
 
     if with_rng:
         def train_step(values, opt_state, batch, rng):
             grads, loss, metrics = compute_grads(values, batch, rng)
             return apply_update(values, opt_state, grads, loss, metrics)
-        return train_step
+        return finalize(train_step)
 
     def train_step(values, opt_state, batch):
         grads, loss, metrics = compute_grads(values, batch, None)
         return apply_update(values, opt_state, grads, loss, metrics)
 
-    return train_step
+    return finalize(train_step)

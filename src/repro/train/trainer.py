@@ -61,7 +61,10 @@ def train(loss_fn: Callable, init_values, optimizer, data_fn: Callable,
           delay_injector: Optional[Callable[[int], float]] = None
           ) -> TrainResult:
     """data_fn(step) -> batch pytree; delay_injector simulates slow hosts."""
-    values = init_values
+    # the train-state carries are donated to the jitted step (updated in
+    # place, no double-buffering); copy the caller's init so their arrays
+    # survive the first step — train(loss, init, ...) stays re-runnable.
+    values = jax.tree.map(lambda x: jnp.array(x, copy=True), init_values)
     opt_state = optimizer.init(values)
     err = grad_compression.init_error(values)
     start_step = 0
@@ -77,9 +80,9 @@ def train(loss_fn: Callable, init_values, optimizer, data_fn: Callable,
             start_step = step
 
     with_rng = tcfg.channel_rng_seed is not None
-    step_fn = jax.jit(make_train_step(
+    step_fn = make_train_step(
         loss_fn, optimizer, microbatches=tcfg.microbatches,
-        compress_k=tcfg.compress_k, with_rng=with_rng))
+        compress_k=tcfg.compress_k, with_rng=with_rng, donate=True)
     base_rng = (jax.random.PRNGKey(tcfg.channel_rng_seed) if with_rng
                 else None)
 

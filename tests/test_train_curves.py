@@ -1,13 +1,22 @@
-"""Channel-in-the-loop training curves (ISSUE 2 tentpole acceptance).
+"""Channel-in-the-loop training curves (ISSUE 2 + ISSUE 4 tentpoles).
 
 Contracts under test:
-  * one jitted train-step compilation per ``bits`` value serves the whole
-    traced ``p_miss`` lane axis (trace counters);
+  * the fused scan engine trains a whole curve grid in ONE compiled dispatch
+    per ``bits`` value (trace + dispatch counters, ``<= ceil(steps/
+    log_every) + 2`` per-bits bound) and matches the legacy per-step
+    ``engine="python"`` driver bit for bit — accuracy, nll, loss history and
+    trained parameters, including per-worker ``p_miss`` lanes;
+  * the ``p_miss`` lane axis shards over local devices bit-for-bit
+    (forced-host-device subprocess, mirroring the sweep-engine property);
   * the ``p_miss=0`` lane is bit-for-bit the ideal ``max_q{bits}`` run —
     trained parameters and evaluated accuracy;
   * record/row emission through ``repro.sim.results``;
-  * the rng-threaded train step and trainer hook behind the curve runner.
+  * the rng-threaded train step, donated train-state carries, and the
+    trainer hook behind the curve runner.
 """
+
+import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
@@ -32,19 +41,108 @@ def _leaves_equal(a, b, lane=0):
                for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
 
 
-def test_one_compilation_per_bits_value():
-    cfg = tc.CurveConfig(**{**TINY.__dict__, "bits": (8, 16)})
+def test_scan_engine_one_dispatch_per_bits_value():
+    """The fused engine compiles once AND dispatches once per bits value —
+    the whole steps loop, the ideal reference and both evals included."""
+    cfg = dataclasses.replace(TINY, bits=(8, 16))
     tc.reset_trace_counts()
+    tc.reset_dispatch_counts()
     tc.run_curves(cfg)
-    traces = tc.trace_counts()
-    assert traces["noisy_step"] == 2, traces
-    assert traces["ideal_step"] == 2, traces
-    assert traces["noisy_eval"] == 2 and traces["ideal_eval"] == 2, traces
+    traces, disp = tc.trace_counts(), tc.dispatch_counts()
+    assert traces["fused"] == 2, traces
+    assert disp["fused"] == 2, disp
+    # nothing fell back to the per-step driver
+    assert all(v == 0 for k, v in disp.items() if k != "fused"), disp
+    # the ISSUE bound: <= ceil(steps/log_every) + 2 dispatches per bits
+    bound = math.ceil(cfg.steps / cfg.log_every) + 2
+    assert disp["fused"] / len(cfg.bits) <= bound
+
+
+def test_python_engine_dispatch_accounting_and_ratio():
+    """The legacy driver costs 2*steps + 2 dispatches per bits value; the
+    scan engine beats it by far more than the 3x acceptance floor."""
+    cfg = dataclasses.replace(TINY, engine="python")
+    tc.reset_trace_counts()
+    tc.reset_dispatch_counts()
+    tc.run_curves(cfg)
+    traces, disp = tc.trace_counts(), tc.dispatch_counts()
+    assert traces["noisy_step"] == 1 and traces["ideal_step"] == 1, traces
+    assert traces["noisy_eval"] == 1 and traces["ideal_eval"] == 1, traces
+    per_bits_python = sum(disp.values()) / len(cfg.bits)
+    assert per_bits_python == 2 * cfg.steps + 2, disp
+    assert per_bits_python / 1 >= 3          # scan engine: 1 per bits
+
+
+def test_scan_engine_matches_python_engine_bit_for_bit():
+    """Tentpole acceptance: same batch stream, same sensing streams, same
+    compiled math — the fused engine IS the python engine, including a
+    heterogeneous per-worker near/far lane."""
+    grid = dataclasses.replace(TINY,
+                               p_miss=(0.0, (0.0, 0.1, 0.1, 0.3), 0.3))
+    a = tc.run_curves(grid)                                       # scan
+    b = tc.run_curves(dataclasses.replace(grid, engine="python"))
+    assert np.array_equal(a.acc, b.acc)
+    assert np.array_equal(a.nll, b.nll)
+    assert np.array_equal(a.acc_ideal, b.acc_ideal)
+    assert np.array_equal(a.nll_ideal, b.nll_ideal)
+    assert np.array_equal(a.loss_history, b.loss_history)
+    assert np.array_equal(a.ideal_loss_history, b.ideal_loss_history)
+    assert np.array_equal(a.logged_steps, b.logged_steps)
+    for pa, pb in ((a.noisy_params, b.noisy_params),
+                   (a.ideal_params, b.ideal_params)):
+        for x, y in zip(jax.tree.leaves(pa[0]), jax.tree.leaves(pb[0])):
+            assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_sharded_curve_lanes_match_vmap_path():
+    """p_miss-lane shard_map over >=2 forced host devices is bit-for-bit
+    identical to the single-device vmap path — including a lane count that
+    does not divide the device count (padding lanes dropped) and a
+    per-worker heterogeneous lane."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = textwrap.dedent("""
+        import jax, numpy as np
+        assert jax.local_device_count() == 4, jax.devices()
+        from repro.sim import train_curves as tc
+        # 3 lanes: not divisible by 4 nor by 2 -> padding on both meshes
+        cfg = tc.CurveConfig(bits=(8,), p_miss=(0.0, (0.0, 0.1, 0.1, 0.3),
+                                                0.3),
+                             steps=6, batch=16, n_train=128, n_val=64, hw=8,
+                             encoder_dims=(8,), embed_dim=8, head_dims=(8,),
+                             log_every=3)
+        ref = tc.run_curves(cfg, n_devices=1)
+        for n_dev in (None, 2, 4):     # None = auto-detect (4 devices)
+            got = tc.run_curves(cfg, n_devices=n_dev)
+            assert np.array_equal(ref.acc, got.acc), n_dev
+            assert np.array_equal(ref.nll, got.nll), n_dev
+            assert np.array_equal(ref.loss_history, got.loss_history), n_dev
+            for pa, pb in ((ref.noisy_params, got.noisy_params),
+                           (ref.ideal_params, got.ideal_params)):
+                for x, y in zip(jax.tree.leaves(pa[0]),
+                                jax.tree.leaves(pb[0])):
+                    assert np.array_equal(np.asarray(x), np.asarray(y)), n_dev
+        print("SHARDED_CURVES_OK")
+    """)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, env=env, timeout=900)
+    assert proc.returncode == 0, f"OUT:\n{proc.stdout}\nERR:\n{proc.stderr}"
+    assert "SHARDED_CURVES_OK" in proc.stdout
 
 
 def test_zero_miss_lane_matches_ideal_run_bit_for_bit():
     out = tc.run_curves(TINY)
     assert out.p_miss[0] == 0.0
+    # the traced lane array is what the result reports (float32, not a
+    # float64 re-derivation)
+    assert out.p_miss.dtype == np.float32
+    assert np.array_equal(out.p_miss, TINY.lane_p_miss())
     # trained parameters: lane 0 of the noisy run == the ideal max_q8 run
     assert _leaves_equal(out.noisy_params[0], out.ideal_params[0], lane=0)
     assert out.acc[0, 0] == out.acc_ideal[0]
@@ -85,7 +183,6 @@ def test_run_curves_is_deterministic():
 
 
 def test_curve_config_validation():
-    import pytest
     with pytest.raises(ValueError):
         tc.CurveConfig(bits=(12,))            # no ideal max_q12 reference
     with pytest.raises(ValueError):
@@ -96,12 +193,16 @@ def test_curve_config_validation():
         tc.CurveConfig(p_miss=(0.0, (0.1, 0.2, 0.3, 1.5)))
     with pytest.raises(ValueError):
         tc.CurveConfig(backend="scan", p_miss=())
+    with pytest.raises(ValueError):
+        tc.CurveConfig(engine="per_step")     # unknown curve driver
+    with pytest.raises(ValueError):           # legacy driver has no lanes
+        tc.run_curves(dataclasses.replace(TINY, engine="python"),
+                      n_devices=2)
 
 
 def test_curve_per_worker_lanes_broadcast():
     """Scalar and per-worker lanes mix: lane_p_miss broadcasts to (L, N)."""
-    cfg = tc.CurveConfig(**{**TINY.__dict__,
-                            "p_miss": (0.0, (0.0, 0.1, 0.1, 0.3))})
+    cfg = dataclasses.replace(TINY, p_miss=(0.0, (0.0, 0.1, 0.1, 0.3)))
     lanes = cfg.lane_p_miss()
     assert lanes.shape == (2, 4)
     assert np.array_equal(lanes[0], np.zeros(4, np.float32))
@@ -116,10 +217,10 @@ def test_curve_pallas_backend_matches_scan_bit_for_bit():
     train-curve level), including a heterogeneous near/far lane.  Slow
     tier: the fast tier covers the same contract at the aggregator level
     (test_kernels_contention + bench_contention --smoke)."""
-    small = {**TINY.__dict__, "steps": 4, "n_train": 64, "n_val": 32,
-             "p_miss": (0.0, (0.0, 0.1, 0.1, 0.3))}
-    a = tc.run_curves(tc.CurveConfig(**{**small, "backend": "scan"}))
-    b = tc.run_curves(tc.CurveConfig(**{**small, "backend": "pallas"}))
+    small = dataclasses.replace(TINY, steps=4, n_train=64, n_val=32,
+                                p_miss=(0.0, (0.0, 0.1, 0.1, 0.3)))
+    a = tc.run_curves(small)
+    b = tc.run_curves(dataclasses.replace(small, backend="pallas"))
     assert np.array_equal(a.acc, b.acc)
     assert np.array_equal(a.nll, b.nll)
     assert np.array_equal(a.loss_history, b.loss_history)
@@ -128,9 +229,7 @@ def test_curve_pallas_backend_matches_scan_bit_for_bit():
         assert np.array_equal(np.asarray(x), np.asarray(y))
 
 
-def test_train_step_with_rng_microbatches():
-    """with_rng threading: microbatches receive decorrelated keys and the
-    accumulated path stays consistent with the single-batch contract."""
+def _tiny_step_fixture():
     vcfg = VerticalConfig(n_workers=2, input_dim=4, encoder_dims=(4,),
                           embed_dim=4, head_dims=(4,), output_dim=2,
                           task="classification", aggregation="max_noisy",
@@ -149,6 +248,13 @@ def test_train_step_with_rng_microbatches():
     batch = (jnp.swapaxes(views, 0, 1), labels)      # (B, N, d)
     noise = fedocs.ChannelNoise(rng=jax.random.PRNGKey(3),
                                 p_miss=jnp.float32(0.2))
+    return params, opt, loss, batch, noise
+
+
+def test_train_step_with_rng_microbatches():
+    """with_rng threading: microbatches receive decorrelated keys and the
+    accumulated path stays consistent with the single-batch contract."""
+    params, opt, loss, batch, noise = _tiny_step_fixture()
     step1 = make_train_step(loss, opt, with_rng=True)
     step2 = make_train_step(loss, opt, microbatches=2, with_rng=True)
     state = opt.init(params)
@@ -162,9 +268,27 @@ def test_train_step_with_rng_microbatches():
         assert np.isfinite(np.asarray(x)).all()
 
 
+def test_train_step_donated_carries():
+    """donate=True: same math, but the params/opt-state input buffers are
+    consumed by the dispatch (updated in place, no double-buffering)."""
+    params, opt, loss, batch, noise = _tiny_step_fixture()
+    plain = make_train_step(loss, opt, with_rng=True)
+    v0, s0, _ = jax.jit(plain)(params, opt.init(params), batch, noise)
+
+    donated = make_train_step(loss, opt, with_rng=True, donate=True)
+    p_in = jax.tree.map(lambda x: jnp.array(x, copy=True), params)
+    s_in = opt.init(p_in)
+    in_leaves = jax.tree.leaves((p_in, s_in))
+    v1, s1, _ = donated(p_in, s_in, batch, noise)
+    for x, y in zip(jax.tree.leaves((v0, s0)), jax.tree.leaves((v1, s1))):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    assert all(x.is_deleted() for x in in_leaves)
+
+
 def test_trainer_channel_rng_hook():
     """trainer.train drives a stochastic (max_noisy) loss via
-    channel_rng_seed; the run is reproducible step-for-step."""
+    channel_rng_seed; the run is reproducible step-for-step (and the donated
+    carries never consume the caller's init across repeat runs)."""
     vcfg = VerticalConfig(n_workers=2, input_dim=4, encoder_dims=(4,),
                           embed_dim=4, head_dims=(4,), output_dim=2,
                           task="classification", aggregation="max_noisy",
@@ -188,3 +312,4 @@ def test_trainer_channel_rng_hook():
     for x, y in zip(jax.tree.leaves(runs[0].values),
                     jax.tree.leaves(runs[1].values)):
         assert np.array_equal(np.asarray(x), np.asarray(y))
+    assert all(not x.is_deleted() for x in jax.tree.leaves(init))
