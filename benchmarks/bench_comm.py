@@ -24,6 +24,7 @@ from typing import List
 import numpy as np
 
 from repro.core import channel
+from repro.protocol import Protocol
 from repro.sim import sweep as sim_sweep
 from repro.sim.scenarios import Scenario, scenario_grid
 
@@ -34,9 +35,12 @@ NOISY_P_MISS = (0.0, 0.01, 0.02, 0.05, 0.1)
 def run() -> List[str]:
     rows = []
     k = 64
+    # analytic accounting off the Protocol objects (Protocol.max: D bits
+    # drive contention, winner transmits its full float payload)
+    fedocs_proto, concat_proto = Protocol.max(bits=16), Protocol.concat()
     for n in (2, 4, 9, 16, 64, 256):
-        f = channel.ocs_load(n, k, bits=16)
-        c = channel.concat_load(n, k)
+        f = fedocs_proto.comm_load(n, k)
+        c = concat_proto.comm_load(n, k)
         rows.append(
             f"comm/uplink_msgs/N{n},0,"
             f"fedocs={f.uplink_payload_msgs};concat={c.uplink_payload_msgs};"

@@ -1,16 +1,21 @@
 """Noisy-contention backend benchmark: lax.scan vs the fused Pallas kernel.
 
-Times ``fedocs.maxpool_noisy`` — the channel-in-the-loop aggregation that
-dominates the curve runner's step time — on the curve-runner shape (N
+Times ``Protocol.ocs(...).aggregate`` — the channel-in-the-loop aggregation
+that dominates the curve runner's step time — on the curve-runner shape (N
 workers x the flattened batch*embed element axis), with the miss-probability
-axis as vmap lanes of one jitted dispatch per backend, exactly as
-``repro.sim.train_curves`` drives it.  Mirrors ``bench_curves``'s smoke
-contract: the run self-checks
+axis as vmap lanes of one jitted dispatch per backend (each lane carries its
+own traced ``Protocol`` pytree), exactly as ``repro.sim.train_curves``
+drives it.  ``Protocol.backend`` is the only static difference between the
+two timed programs.  Mirrors ``bench_curves``'s smoke contract: the run
+self-checks
 
   * one compilation per (bits, backend) serving every traced p_miss lane,
-  * scan-vs-pallas bit-for-bit parity (forward AND vjp) on the bench shape,
+  * scan-vs-pallas bit-for-bit parity — forward, vjp AND the
+    ``ProtocolAccounting`` counters (rounds/collisions/slots/correctness)
+    the new entry point surfaces — on the bench shape,
   * the ``p_miss=0`` lane pinning to ideal ``maxpool_quantized(bits,
-    'first')`` through BOTH backends,
+    'first')`` through BOTH backends (trajectory unchanged under the
+    Protocol API),
 
 and reports per-backend step times plus the pallas/scan speedup (the README
 kernels table quotes these numbers).  ``json_path``/a positional JSON
@@ -34,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fedocs
+from repro.protocol import Protocol
 
 BACKENDS = ("scan", "pallas")
 
@@ -48,7 +54,7 @@ def _time(fn, *args, iters: int) -> float:
 
 
 def run(smoke: bool = False, json_path: Optional[str] = None) -> List[str]:
-    # curve-runner shapes: fedocs.maxpool_noisy sees (N, batch, embed_dim)
+    # curve-runner shapes: the protocol aggregate sees (N, batch, embed_dim)
     # and flattens to (N, batch*embed); bench_curves' smoke/full configs
     if smoke:
         n, batch, embed, iters = 4, 32, 16, 5
@@ -69,34 +75,46 @@ def run(smoke: bool = False, json_path: Optional[str] = None) -> List[str]:
                        "lanes": len(p_lanes), "iters": iters},
              "fwd_vjp_us": {}, "pallas_over_scan": {}}
     for bits in (8, 16):
-        outs, grads, times = {}, {}, {}
+        outs, grads, accts, times = {}, {}, {}, {}
         for backend in BACKENDS:
-            def lanes_fn(h, keys, ps, _b=backend, _bits=bits):
+            proto = Protocol.ocs(bits=bits, backend=backend)
+
+            def lanes_fn(h, keys, ps, _b=backend, _proto=proto):
                 compiles[_b] += 1
 
                 def lane(k, p):
-                    out, vjp = jax.vjp(
-                        lambda x: fedocs.maxpool_noisy(x, k, p, _bits, 3,
-                                                       _b), h)
-                    return out, vjp(g)[0]   # backward runs inside the timing
-
+                    lane_proto = _proto.with_p_miss(p)
+                    (out, acct), vjp = jax.vjp(
+                        lambda x: lane_proto.aggregate(x, k), h,
+                        has_aux=False)
+                    cot = (g, jax.tree.map(
+                        lambda a: (np.zeros(a.shape, jax.dtypes.float0)
+                                   if a.dtype.kind in "iu"
+                                   else jnp.zeros_like(a)), acct))
+                    return out, acct, vjp(cot)[0]   # backward in the timing
                 return jax.vmap(lane)(keys, ps)
             lanes = jax.jit(lanes_fn)
             times[backend] = _time(lanes, h, keys, ps, iters=iters)
-            out_l, grad_l = lanes(h, keys, ps)
+            out_l, acct_l, grad_l = lanes(h, keys, ps)
             outs[backend] = np.asarray(out_l)
             grads[backend] = np.asarray(grad_l)
+            accts[backend] = jax.tree.map(np.asarray, acct_l)
 
-        # self-check 1: scan and pallas agree bit for bit, forward + vjp
-        # (the routed cotangent is nonzero by construction — one winner per
-        # element receives g — so an all-zero grad means the check went
-        # vacuous, not that parity holds)
+        # self-check 1: scan and pallas agree bit for bit — forward, vjp
+        # AND the protocol accounting (the routed cotangent is nonzero by
+        # construction — one winner per element receives g — so an all-zero
+        # grad means the check went vacuous, not that parity holds)
         if not np.any(grads["scan"]):
             raise RuntimeError(f"bits={bits}: vjp self-check is vacuous")
         if not np.array_equal(outs["scan"], outs["pallas"]):
             raise RuntimeError(f"bits={bits}: backend forward mismatch")
         if not np.array_equal(grads["scan"], grads["pallas"]):
             raise RuntimeError(f"bits={bits}: backend vjp mismatch")
+        for x, y in zip(jax.tree.leaves(accts["scan"]),
+                        jax.tree.leaves(accts["pallas"])):
+            if not np.array_equal(x, y):
+                raise RuntimeError(
+                    f"bits={bits}: backend accounting mismatch")
         # self-check 2: the p_miss=0 lane pins to the ideal quantized pool
         ideal = np.asarray(fedocs.maxpool_quantized(h, bits, "first"))
         for backend in BACKENDS:
@@ -124,16 +142,18 @@ def run(smoke: bool = False, json_path: Optional[str] = None) -> List[str]:
         if count != 2:
             raise RuntimeError(
                 f"{backend} backend recompiled per lane: {count} traces "
-                "for 2 bit depths — traced-(p_miss, rng) regression")
+                "for 2 bit depths — traced-(rng, Protocol) regression")
     rows.append(
         "contention/meta,0,"
         f"compiles_scan={compiles['scan']};"
         f"compiles_pallas={compiles['pallas']};"
-        "p0_matches_ideal=1;backends_bitwise_equal=1")
+        "p0_matches_ideal=1;backends_bitwise_equal=1;"
+        "accounting_bitwise_equal=1")
     if json_path:
         bench["compiles"] = dict(compiles)
         bench["p0_matches_ideal"] = True
         bench["backends_bitwise_equal"] = True
+        bench["accounting_bitwise_equal"] = True
         with open(json_path, "w") as f:
             json.dump(bench, f, indent=2, sort_keys=True)
             f.write("\n")

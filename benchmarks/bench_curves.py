@@ -3,19 +3,23 @@
 The paper's end-to-end experiment — train the vertical learner with the
 noisy-OCS channel *in the forward pass* and report accuracy as a function of
 the sensing-miss probability and the backoff depth.  Every ``p_miss`` lane
-of a ``bits`` value trains inside ONE compiled train step (``p_miss`` and
-the sensing rng are traced), and the fused ``engine="scan"`` driver runs the
-whole steps loop in ONE dispatch per ``bits`` value.  The run times BOTH
-curve engines (the fused scan engine and the legacy per-step python driver)
-and self-checks the engine contracts:
+of a ``bits`` value trains inside ONE compiled train step (each lane carries
+its own traced ``repro.protocol.Protocol`` pytree), and the fused scan
+driver runs the whole steps loop in ONE dispatch per ``bits`` value.  The
+run times the fused engine, times a ``CollisionAdaptiveBits``-scheduled run
+(the ``BitsSchedule`` policy hook switching backoff depth per round from
+observed collision telemetry, still one dispatch), and self-checks the
+engine contracts:
 
   * exactly one fused compilation AND ``<= ceil(steps/log_every) + 2``
-    dispatches per ``bits`` value on the scan engine,
-  * >= 3x fewer dispatches per ``bits`` value than the python engine,
-  * scan-vs-python bit-for-bit parity (accuracy, nll, loss history AND
-    trained parameters),
-  * the ``p_miss=0`` lane matches the ideal ``max_q{bits}`` reference run
-    bit for bit (accuracy AND trained parameters).
+    dispatches per ``bits`` value,
+  * the ``p_miss=0`` lane matches the ideal ``Protocol.ideal_max(bits)``
+    reference run bit for bit (accuracy AND trained parameters),
+  * trajectories unchanged under the Protocol API: a ``FixedBits(bits[0])``
+    scheduled run reproduces the plain run's first-bits noisy lanes bit for
+    bit (accuracy, nll, loss history AND trained parameters),
+  * the adaptive schedule runs end-to-end in ONE ``sched`` dispatch with
+    every chosen depth drawn from its candidate set.
 
 ``--bench-json PATH`` (or ``bench_json_path=``) additionally emits the
 timing/dispatch numbers as ``BENCH_curves.json`` — ``benchmarks/run.py``
@@ -27,7 +31,6 @@ writes the canonical copy at the repo root for trajectory tracking.
 
 from __future__ import annotations
 
-import dataclasses
 import json
 import math
 import sys
@@ -36,6 +39,7 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.protocol import CollisionAdaptiveBits, FixedBits
 from repro.sim import results as sim_results
 from repro.sim import train_curves as tc
 
@@ -63,21 +67,25 @@ def _run_engine(ccfg: tc.CurveConfig):
     return curves, wall, tc.trace_counts(), tc.dispatch_counts()
 
 
-def _assert_bitwise_equal(a: tc.CurveResult, b: tc.CurveResult) -> None:
+def _assert_sched_matches_lanes(sched: tc.ScheduledCurveResult,
+                                curves: tc.CurveResult, bi: int) -> None:
+    """FixedBits(bits[bi]) scheduled run == plain run's bits[bi] noisy lanes."""
     import jax
 
-    for name in ("acc", "nll", "acc_ideal", "nll_ideal", "loss_history",
-                 "ideal_loss_history"):
-        if not np.array_equal(getattr(a, name), getattr(b, name)):
+    if not np.array_equal(sched.acc, curves.acc[bi]):
+        raise RuntimeError(
+            "scheduled-engine parity broken: FixedBits accuracy diverged "
+            "from the plain fused run")
+    if not np.array_equal(sched.nll, curves.nll[bi]):
+        raise RuntimeError("scheduled-engine parity broken: nll diverged")
+    if not np.array_equal(sched.loss_history, curves.loss_history[bi]):
+        raise RuntimeError(
+            "scheduled-engine parity broken: loss history diverged")
+    for x, y in zip(jax.tree.leaves(sched.params),
+                    jax.tree.leaves(curves.noisy_params[bi])):
+        if not np.array_equal(np.asarray(x), np.asarray(y)):
             raise RuntimeError(
-                f"engine parity broken: scan vs python disagree on {name}")
-    for bi in range(len(a.config.bits)):
-        for pa, pb in ((a.noisy_params, b.noisy_params),
-                       (a.ideal_params, b.ideal_params)):
-            for x, y in zip(jax.tree.leaves(pa[bi]), jax.tree.leaves(pb[bi])):
-                if not np.array_equal(np.asarray(x), np.asarray(y)):
-                    raise RuntimeError(
-                        "engine parity broken: trained params diverged")
+                "scheduled-engine parity broken: trained params diverged")
 
 
 def run(smoke: bool = False, json_path: Optional[str] = None,
@@ -89,33 +97,17 @@ def run(smoke: bool = False, json_path: Optional[str] = None,
     curves, wall_scan, traces_s, disp_s = _run_engine(ccfg)
     if traces_s["fused"] != n_bits:
         raise RuntimeError(
-            f"scan engine recompiled per lane: {traces_s} for {n_bits} bit "
-            "depths — traced-(p_miss, rng) batching regression")
+            f"fused engine recompiled per lane: {traces_s} for {n_bits} bit "
+            "depths — traced-(rng, Protocol) batching regression")
     per_bits_scan = disp_s["fused"] / n_bits
     bound = math.ceil(ccfg.steps / ccfg.log_every) + 2
     if per_bits_scan > bound:
         raise RuntimeError(
-            f"scan engine dispatched {per_bits_scan}/bits — exceeds the "
+            f"fused engine dispatched {per_bits_scan}/bits — exceeds the "
             f"ceil(steps/log_every)+2 = {bound} fusion bound")
 
-    curves_py, wall_py, traces_p, disp_p = _run_engine(
-        dataclasses.replace(ccfg, engine="python"))
-    if traces_p["noisy_step"] != n_bits or traces_p["ideal_step"] != n_bits:
-        raise RuntimeError(
-            f"python engine recompiled per lane: {traces_p} for {n_bits} "
-            "bit depths — traced-(p_miss, rng) batching regression")
-    per_bits_python = sum(disp_p.values()) / n_bits
-    dispatch_ratio = per_bits_python / per_bits_scan
-    if dispatch_ratio < 3:
-        raise RuntimeError(
-            f"scan engine only saves {dispatch_ratio:.1f}x dispatches per "
-            "bits value (acceptance floor: 3x)")
-
-    # engine parity: the fused scan trajectory IS the per-step trajectory
-    _assert_bitwise_equal(curves, curves_py)
-
     # p_miss lane 0 is 0.0 in both configs: it must reproduce the ideal
-    # max_q{bits} run bit for bit (same trained params, same accuracy).
+    # Protocol.ideal_max(bits) run bit for bit (params and accuracy).
     assert ccfg.p_miss[0] == 0.0
     import jax
     for bi, bits in enumerate(ccfg.bits):
@@ -130,12 +122,37 @@ def run(smoke: bool = False, json_path: Optional[str] = None,
                     f"bits={bits}: p_miss=0 trained params diverged from "
                     "the ideal reference run")
 
-    # wall-clock includes the (cacheable) compile; the python engine pays
-    # dispatch + host-sync overhead per step, the scan engine does not —
-    # their gap is the host-overhead share of the per-step driver
+    # the BitsSchedule hook: a FixedBits schedule must reproduce the plain
+    # engine bit for bit (trajectory unchanged under the scheduled API) ...
+    tc.reset_dispatch_counts()
+    fixed = tc.run_scheduled_curves(ccfg, FixedBits(ccfg.bits[0]))
+    if tc.dispatch_counts()["sched"] != 1:
+        raise RuntimeError(
+            f"FixedBits scheduled run cost {tc.dispatch_counts()} dispatches "
+            "— the scheduled engine must fuse to ONE")
+    _assert_sched_matches_lanes(fixed, curves, bi=0)
+
+    # ... and the collision-adaptive policy runs end-to-end in ONE dispatch
+    schedule = CollisionAdaptiveBits(tuple(ccfg.bits))
+    tc.reset_dispatch_counts()
+    t0 = time.perf_counter()
+    adaptive = tc.run_scheduled_curves(ccfg, schedule)
+    wall_sched = time.perf_counter() - t0
+    if tc.dispatch_counts()["sched"] != 1:
+        raise RuntimeError(
+            f"adaptive scheduled run cost {tc.dispatch_counts()} dispatches "
+            "— the scheduled engine must fuse to ONE")
+    if not set(np.unique(adaptive.bits_per_step)) <= set(ccfg.bits):
+        raise RuntimeError(
+            f"schedule chose depths {np.unique(adaptive.bits_per_step)} "
+            f"outside its candidates {ccfg.bits}")
+    if not np.isfinite(adaptive.acc).all():
+        raise RuntimeError("adaptive scheduled run produced non-finite acc")
+    sched_switches = int(np.sum(np.diff(adaptive.bits_per_step) != 0))
+
+    # wall-clock includes the (cacheable) compile
     sps_scan = trained_steps / wall_scan
-    sps_python = trained_steps / wall_py
-    host_overhead = max(0.0, 1.0 - wall_scan / wall_py)
+    sps_sched = ccfg.steps / wall_sched
 
     records = sim_results.summarize_curves(curves)
     rows = sim_results.curve_rows(records)
@@ -144,16 +161,18 @@ def run(smoke: bool = False, json_path: Optional[str] = None,
         f"steps_per_sec={sps_scan:.1f};dispatches_per_bits="
         f"{per_bits_scan:g};compiles={traces_s['fused']}")
     rows.append(
-        f"curves/engine_python,{wall_py / trained_steps * 1e6:.0f},"
-        f"steps_per_sec={sps_python:.1f};dispatches_per_bits="
-        f"{per_bits_python:g}")
+        f"curves/engine_sched,{wall_sched / ccfg.steps * 1e6:.0f},"
+        f"steps_per_sec={sps_sched:.1f};dispatches=1;"
+        f"candidates={'|'.join(str(b) for b in ccfg.bits)};"
+        f"switches={sched_switches};"
+        f"final_bits={int(adaptive.bits_per_step[-1])}")
     rows.append(
-        f"curves/dispatch,0,ratio={dispatch_ratio:.0f}x;"
-        f"scan_bound={bound};host_overhead_frac={host_overhead:.2f}")
+        f"curves/dispatch,0,scan_bound={bound};"
+        f"dispatches_per_bits={per_bits_scan:g}")
     rows.append(
         f"curves/meta,0,"
         f"bits={n_bits};lanes={len(ccfg.p_miss)};steps={ccfg.steps};"
-        f"engines_bitwise_equal=1;p0_matches_ideal=1")
+        f"p0_matches_ideal=1;fixed_schedule_bitwise_equal=1")
 
     if json_path:
         with open(json_path, "w") as f:
@@ -173,14 +192,14 @@ def run(smoke: bool = False, json_path: Optional[str] = None,
                          "steps_per_sec": round(sps_scan, 2),
                          "dispatches_per_bits": per_bits_scan,
                          "traces_per_bits": traces_s["fused"] / n_bits},
-                "python": {"wall_s": round(wall_py, 3),
-                           "steps_per_sec": round(sps_python, 2),
-                           "dispatches_per_bits": per_bits_python},
+                "sched": {"wall_s": round(wall_sched, 3),
+                          "steps_per_sec": round(sps_sched, 2),
+                          "dispatches": 1,
+                          "candidates": list(ccfg.bits),
+                          "switches": sched_switches,
+                          "final_bits": int(adaptive.bits_per_step[-1])},
             },
-            "dispatch_ratio": round(dispatch_ratio, 1),
-            "speedup_scan_over_python": round(wall_py / wall_scan, 2),
-            "host_overhead_frac": round(host_overhead, 3),
-            "parity_bitwise": True,
+            "parity_bitwise": True,          # FixedBits sched == plain run
             "p0_matches_ideal": True,
         }
         with open(bench_json_path, "w") as f:

@@ -15,13 +15,17 @@ from repro.core import vertical
 from repro.core.vertical import VerticalConfig
 from repro.data.vertical_data import multiview_denoising
 from repro.optim import optimizers, schedules
+from repro.protocol import Protocol
 
 
 def main():
     views, clean = multiview_denoising(512, n_workers=4, hw=16, sigma=2.0)
+    # the fusion protocol is a first-class value: max-pool over the shared
+    # channel (paper Eq. 4); swap in Protocol.ocs(bits, p_miss) to train
+    # with the noisy contention channel in the loop
     cfg = VerticalConfig(n_workers=4, input_dim=256, encoder_dims=(128,),
                          embed_dim=32, head_dims=(128,), output_dim=256,
-                         task="reconstruction", aggregation="max")
+                         task="reconstruction", aggregation=Protocol.max())
     params = vertical.init(cfg, jax.random.PRNGKey(0))
     opt = optimizers.adamw(schedules.constant(2e-3))
     state = opt.init(params)
@@ -43,9 +47,10 @@ def main():
         if i % 50 == 0:
             print(f"step {i:4d}  mse {float(loss):.4f}")
 
-    load = vertical.comm_load(cfg)
+    load = cfg.resolve_protocol().comm_load(cfg.n_workers, cfg.embed_dim)
+    concat_load = Protocol.concat().comm_load(cfg.n_workers, cfg.embed_dim)
     print(f"\nuplink: {load.uplink_payload_msgs} msgs/sample "
-          f"(concat would need {4 * cfg.embed_dim})")
+          f"(concat would need {concat_load.uplink_payload_msgs})")
     print("done.")
 
 

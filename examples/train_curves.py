@@ -7,12 +7,20 @@ D-bit contention, miss detection, lowest-index capture), and the whole
 ``bits`` value.  An ideal ``max_q{bits}`` reference trains alongside; the
 ``p_miss=0`` lane reproduces it bit for bit.
 
+A ``CollisionAdaptiveBits`` schedule then re-trains the same lanes with the
+backoff depth re-chosen per round from the protocol's own collision
+telemetry (the ``repro.protocol.BitsSchedule`` policy hook) — the whole
+scheduled run is still ONE compiled dispatch.
+
   PYTHONPATH=src python examples/train_curves.py [out.json]
 """
 
 import json
 import sys
 
+import numpy as np
+
+from repro.protocol import CollisionAdaptiveBits
 from repro.sim import results, train_curves as tc
 
 
@@ -32,8 +40,16 @@ def main():
     traces, disp = tc.trace_counts(), tc.dispatch_counts()
     print(f"# {len(ccfg.bits)} bit depths x {len(ccfg.p_miss)} p_miss lanes, "
           f"fused scan engine: {traces['fused']} compilations, "
-          f"{disp['fused']} dispatches "
-          f"(vs {2 * ccfg.steps + 2} per bits on the python engine)")
+          f"{disp['fused']} dispatches")
+
+    # channel-aware backoff-depth scheduling: pick D per round from the
+    # observed collision fraction, all candidates fused into one dispatch
+    sched = tc.run_scheduled_curves(ccfg, CollisionAdaptiveBits(ccfg.bits))
+    switches = int((sched.bits_per_step[1:] != sched.bits_per_step[:-1]).sum())
+    print(f"# CollisionAdaptiveBits{tuple(ccfg.bits)}: "
+          f"start b{sched.bits_per_step[0]}, final b{sched.bits_per_step[-1]}, "
+          f"{switches} switches, acc {np.round(sched.acc, 4).tolist()} "
+          f"({tc.dispatch_counts()['sched']} dispatch)")
 
     if len(sys.argv) > 1:
         with open(sys.argv[1], "w") as f:

@@ -3,8 +3,11 @@
 - quantize:    Eq. 7 monotone D-bit codes (order-exact quantization)
 - ocs:         Algorithm 1 MAC-layer distributed-argmax simulator
 - fedocs:      pooled aggregation laws (max / quantized-max / mean / concat)
-               with winner-routed custom_vjp backward (Eq. 5-6)
-- channel:     wireless + ICI communication-load accounting
+               with winner-routed custom_vjp backward (Eq. 5-6); the
+               string-mode dispatcher is deprecated in favor of
+               repro.protocol.Protocol
+- channel:     wireless + ICI communication-load accounting (consumed via
+               Protocol.comm_load)
 - vertical:    the paper's split encoder/fusion-head learner (§II)
 - aggregators: Table-I method registry (§IV-B)
 """

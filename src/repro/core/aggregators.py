@@ -1,7 +1,9 @@
 """Registry of the five Table-I aggregation methods (paper §IV-B).
 
 Maps the paper's method names onto :mod:`repro.core.vertical` configurations
-so benchmarks and examples can sweep them uniformly.
+— each embedding-level method carries its fusion law as a first-class
+``repro.protocol.Protocol`` — so benchmarks and examples can sweep them
+uniformly.
 """
 
 from __future__ import annotations
@@ -22,15 +24,18 @@ TABLE1_METHODS = (
 
 def table1_config(method: str, base: VerticalConfig) -> VerticalConfig:
     """Specialize a base vertical config to one of the paper's five methods."""
+    # lazy: repro.protocol imports repro.core at import time
+    from repro.protocol import Protocol
     if method == "concat_workers_embed":
-        return dataclasses.replace(base, aggregation="concat",
+        return dataclasses.replace(base, aggregation=Protocol.concat(),
                                    prediction_level=False)
     if method == "avg_workers_embed":
-        return dataclasses.replace(base, aggregation="mean",
+        return dataclasses.replace(base, aggregation=Protocol.mean(),
                                    prediction_level=False)
     if method == "fedocs":
-        return dataclasses.replace(base, aggregation="max",
-                                   prediction_level=False)
+        return dataclasses.replace(
+            base, aggregation=Protocol.max(tie_break=base.tie_break),
+            prediction_level=False)
     if method in ("avg_workers_preds", "best_worker_pred"):
         # both train per-worker heads; they differ only at evaluation time
         return dataclasses.replace(base, prediction_level=True)

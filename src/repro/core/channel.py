@@ -5,11 +5,20 @@ tables the paper argues from: max-pooling via OCS costs O(K) payloads
 (independent of N) against O(N·K) for concat/mean collection.  Also provides
 the ICI-side accounting used to cross-check the dry-run's parsed collective
 bytes for the TP fusion modes (DESIGN.md §2).
+
+The per-method loaders (``ocs_load``/``concat_load``/``mean_load``) are the
+*primitives*; consumers should go through
+``repro.protocol.Protocol.comm_load(n_workers, k)``, which resolves the
+``ChannelConfig`` — in particular ``payload_bits`` — from the protocol
+object itself (ONE source of truth: the D-bit code payload for the
+quantized kinds, a full float otherwise) instead of re-deriving it ad hoc
+at every call site.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,7 +56,6 @@ class CommLoad:
 def ocs_load(n_workers: int, k_elems: int, bits: int,
              cfg: ChannelConfig = ChannelConfig()) -> CommLoad:
     """FedOCS: K payloads uplink (N-independent), one O(K) broadcast down."""
-    import math
     id_bits = max(1, math.ceil(math.log2(max(n_workers, 2))))
     contention = k_elems * (bits + id_bits) * cfg.contention_slot_bits
     acks = k_elems * cfg.ack_bits

@@ -38,12 +38,23 @@ cotangent to that winner only.  ``rng`` and ``p_miss`` are ordinary traced
 arguments, so one compiled train step serves a whole miss-probability axis;
 at ``p_miss=0`` the forward AND the vjp coincide bit-for-bit with
 ``maxpool_quantized(tie_break='first')`` (property-tested).
+
+The string-mode dispatcher :func:`aggregate` (plus :class:`ChannelNoise` and
+:func:`output_dim`) is DEPRECATED: the protocol is now a first-class value —
+``repro.protocol.Protocol`` — carrying the same knobs as one pytree object
+with a single ``protocol.aggregate(h, rng) -> (pooled, accounting)`` entry
+point.  The shims below construct a ``Protocol`` and delegate (bit-for-bit
+identical), warn with ``DeprecationWarning``, and will be removed after one
+release.  The pooling laws themselves (``maxpool``, ``maxpool_quantized``,
+``maxpool_noisy``, ``meanpool``, ``concat``) are NOT deprecated — they are
+the primitives ``Protocol`` dispatches to.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Optional
 
 import jax
@@ -134,25 +145,45 @@ maxpool_quantized.defvjp(_maxpool_q_fwd, _maxpool_q_bwd)
 
 @dataclasses.dataclass(frozen=True)
 class ChannelNoise:
-    """Traced channel state for ``max_noisy``: a PRNG key + miss probability.
+    """DEPRECATED shim: a PRNG key + miss probability for ``max_noisy``.
 
-    Both leaves are ordinary traced arrays, so a single compiled train step
-    (or a ``vmap`` lane axis) serves every miss probability — only the
-    quantization depth ``bits`` is static.  ``p_miss`` is a scalar or a
-    per-worker ``(N,)`` array (heterogeneous near/far users); with every
-    entry equal, the vector path is bit-for-bit the scalar path.
+    Superseded by ``repro.protocol.Protocol`` — the protocol object carries
+    ``p_miss`` as its traced leaf and the sensing key is passed to
+    ``protocol.aggregate(h, rng)`` per call.  Constructing a ``ChannelNoise``
+    emits a ``DeprecationWarning``; consumers translate it into a
+    ``Protocol`` (bit-for-bit identical).  Removed after one release.
     """
 
     rng: jax.Array       # PRNG key for the per-sub-slot sensing draws
     p_miss: jax.Array    # () or (N,) carrier-sensing miss probability
 
+    def __post_init__(self):
+        warnings.warn(
+            "repro.core.fedocs.ChannelNoise is deprecated; pass the sensing "
+            "key to repro.protocol.Protocol.ocs(bits, p_miss).aggregate(h, "
+            "rng) instead", DeprecationWarning, stacklevel=2)
 
-jax.tree_util.register_dataclass(
-    ChannelNoise, data_fields=["rng", "p_miss"], meta_fields=[])
+
+def _noise_unflatten(_aux, children):
+    # bypass __init__: pytree unflattening inside jit/vmap must not re-fire
+    # the construction-time DeprecationWarning
+    obj = object.__new__(ChannelNoise)
+    object.__setattr__(obj, "rng", children[0])
+    object.__setattr__(obj, "p_miss", children[1])
+    return obj
+
+
+jax.tree_util.register_pytree_node(
+    ChannelNoise, lambda nz: ((nz.rng, nz.p_miss), None), _noise_unflatten)
 
 
 def _maxpool_noisy_impl(h, rng, p_miss, bits, max_rounds, backend):
-    """Protocol-outcome pooling: (pooled value, winner one-hot mask)."""
+    """Protocol-outcome pooling: (pooled, winner one-hot mask, accounting).
+
+    The third element is the contention core's full ``NoisyOCSResult`` —
+    ``repro.protocol`` surfaces its collision/round counters as the
+    ``ProtocolAccounting`` of ``Protocol.aggregate``.
+    """
     n = h.shape[0]
     flat = h.reshape(n, -1)                                    # (N, M)
     id_bits = ocs.host_id_bits(n)
@@ -164,7 +195,7 @@ def _maxpool_noisy_impl(h, rng, p_miss, bits, max_rounds, backend):
     win_code = jnp.take_along_axis(codes, res.winner[None, :], axis=0)[0]
     pooled = qz.dequantize(win_code, bits, h.dtype).reshape(h.shape[1:])
     onehot = jnp.arange(n, dtype=jnp.int32)[:, None] == res.winner[None, :]
-    return pooled, onehot.reshape(h.shape).astype(h.dtype)
+    return pooled, onehot.reshape(h.shape).astype(h.dtype), res
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
@@ -189,13 +220,14 @@ def maxpool_noisy(h: jax.Array, rng: jax.Array, p_miss: jax.Array,
     At ``p_miss=0`` this is bit-for-bit ``maxpool_quantized(h, bits,
     'first')`` in both the forward and the vjp.
     """
-    pooled, _ = _maxpool_noisy_impl(h, rng, p_miss, bits, max_rounds, backend)
+    pooled, _, _ = _maxpool_noisy_impl(h, rng, p_miss, bits, max_rounds,
+                                       backend)
     return pooled
 
 
 def _maxpool_noisy_fwd(h, rng, p_miss, bits, max_rounds, backend):
-    pooled, mask = _maxpool_noisy_impl(h, rng, p_miss, bits, max_rounds,
-                                       backend)
+    pooled, mask, _ = _maxpool_noisy_impl(h, rng, p_miss, bits, max_rounds,
+                                          backend)
     return pooled, (mask, rng, p_miss)
 
 
@@ -228,33 +260,40 @@ def aggregate(h: jax.Array, mode: str, *, tie_break: str = "all",
               noise_bits: int = 16,
               noise_max_rounds: int = 3,
               noise_backend: str = "scan") -> jax.Array:
-    """Pool a worker-leading feature tensor. h: (N, ..., K).
+    """DEPRECATED string-mode dispatcher; use ``repro.protocol.Protocol``.
 
-    ``max_noisy`` additionally needs ``noise`` (a :class:`ChannelNoise`);
-    ``noise_bits``/``noise_max_rounds``/``noise_backend`` are its static
-    protocol knobs (``noise_backend``: ``"scan"`` or ``"pallas"``).
+    Constructs the equivalent ``Protocol`` and delegates — the pooled value
+    and its vjp are bit-for-bit identical to the historical dispatch for
+    every mode (property-tested); only the accounting the new entry point
+    additionally returns is dropped.  Removed after one release.
     """
-    if mode == "sum":
-        return jnp.sum(h, axis=0)
-    if mode == "max":
-        return maxpool(h, tie_break)
-    if mode == "max_q16":
-        return maxpool_quantized(h, 16, tie_break)
-    if mode == "max_q8":
-        return maxpool_quantized(h, 8, tie_break)
+    if mode not in VALID_MODES:
+        raise ValueError(
+            f"unknown aggregation mode {mode!r}; valid: {VALID_MODES}")
+    warnings.warn(
+        f"repro.core.fedocs.aggregate(mode={mode!r}) is deprecated; "
+        "construct a repro.protocol.Protocol (e.g. Protocol.from_mode) and "
+        "call protocol.aggregate(h, rng)", DeprecationWarning, stacklevel=2)
+    from repro.protocol import Protocol   # deferred: protocol imports fedocs
+    rng = None
+    proto = Protocol.from_mode(mode, tie_break=tie_break, bits=noise_bits,
+                               max_rounds=noise_max_rounds,
+                               backend=noise_backend)
     if mode == "max_noisy":
         if noise is None:
             raise ValueError(
                 "max_noisy aggregation needs noise=ChannelNoise(rng, p_miss)")
-        return maxpool_noisy(h, noise.rng, noise.p_miss, noise_bits,
-                             noise_max_rounds, noise_backend)
-    if mode == "mean":
-        return meanpool(h)
-    if mode == "concat":
-        return concat(h)
-    raise ValueError(f"unknown aggregation mode {mode!r}; valid: {VALID_MODES}")
+        proto = proto.with_p_miss(noise.p_miss)
+        rng = noise.rng
+    pooled, _acct = proto.aggregate(h, rng)
+    return pooled
 
 
 def output_dim(mode: str, n_workers: int, k: int) -> int:
-    """Feature width the fusion head sees for a given aggregation mode."""
-    return n_workers * k if mode == "concat" else k
+    """DEPRECATED: use ``Protocol.output_dim(n_workers, k)`` instead."""
+    warnings.warn(
+        "repro.core.fedocs.output_dim(mode, ...) is deprecated; use "
+        "repro.protocol.Protocol.output_dim(n_workers, k)",
+        DeprecationWarning, stacklevel=2)
+    from repro.protocol import Protocol   # deferred: protocol imports fedocs
+    return Protocol.from_mode(mode).output_dim(n_workers, k)

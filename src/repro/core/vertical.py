@@ -13,12 +13,18 @@ the ``model`` mesh axis).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import channel, fedocs
+
+# NOTE: repro.protocol imports repro.core at import time (for the
+# aggregation primitives), so the Protocol class is imported lazily inside
+# the functions below instead of at module scope.
+if TYPE_CHECKING:
+    from repro.protocol import Protocol
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,7 +36,10 @@ class VerticalConfig:
     head_dims: Sequence[int] = (128, 256, 512)
     output_dim: int = 784                # recon: global dim / cls: |C|
     task: str = "reconstruction"         # "reconstruction" | "classification"
-    aggregation: str = "max"             # fedocs.VALID_MODES
+    # the fusion protocol: a repro.protocol.Protocol, or (legacy sugar) one
+    # of the fedocs.VALID_MODES strings, resolved together with the
+    # tie_break/noise_* fields by resolve_protocol()
+    aggregation: Union[str, "Protocol"] = "max"
     tie_break: str = "all"
     noise_bits: int = 16                 # max_noisy: backoff/payload depth D
     noise_max_rounds: int = 3            # max_noisy: re-contention bound
@@ -39,10 +48,26 @@ class VerticalConfig:
                                          # "Avg. Workers Preds"/"Best Worker")
     dtype: jnp.dtype = jnp.float32
 
+    def resolve_protocol(self) -> "Protocol":
+        """The configured fusion protocol as a first-class object.
+
+        A ``Protocol`` passed in ``aggregation`` is returned as-is; a legacy
+        mode string is combined with the ``tie_break``/``noise_*`` fields
+        (``Protocol.from_mode`` — same semantics as the deprecated
+        ``fedocs.aggregate`` dispatch).
+        """
+        from repro.protocol import Protocol
+        if isinstance(self.aggregation, Protocol):
+            return self.aggregation
+        return Protocol.from_mode(
+            self.aggregation, tie_break=self.tie_break, bits=self.noise_bits,
+            max_rounds=self.noise_max_rounds, backend=self.noise_backend)
+
     def head_input_dim(self) -> int:
         if self.prediction_level:
             return self.embed_dim
-        return fedocs.output_dim(self.aggregation, self.n_workers, self.embed_dim)
+        return self.resolve_protocol().output_dim(self.n_workers,
+                                                  self.embed_dim)
 
 
 def _dense_init(rng, fan_in: int, fan_out: int, dtype) -> dict:
@@ -84,25 +109,39 @@ def embeddings(cfg: VerticalConfig, params: dict, views: jax.Array) -> jax.Array
     return jax.vmap(_mlp_apply)(params["encoders"], views)
 
 
-def forward(cfg: VerticalConfig, params: dict, views: jax.Array, *,
-            noise: Optional[fedocs.ChannelNoise] = None) -> jax.Array:
-    """Full fusion forward: views (N, B, d) -> prediction (B, output_dim).
-
-    ``noise`` is required when ``cfg.aggregation == 'max_noisy'`` — the
-    embeddings are then fused through the simulated OCS channel (traced
-    ``rng``/``p_miss``, static ``cfg.noise_bits``/``cfg.noise_max_rounds``).
-    """
+def _fuse_forward(cfg: VerticalConfig, params: dict, views: jax.Array,
+                  rng, protocol, noise):
+    """Shared forward: (prediction, accounting-or-None, protocol-or-None)."""
     h = embeddings(cfg, params, views)
     if cfg.prediction_level:
         preds = jax.vmap(_mlp_apply)(params["head"], h)       # (N, B, out)
         if cfg.task == "classification":
             preds = jax.nn.softmax(preds, axis=-1)
-        return jnp.mean(preds, axis=0)                        # Avg. Workers Preds
-    v = fedocs.aggregate(h, cfg.aggregation, tie_break=cfg.tie_break,
-                         noise=noise, noise_bits=cfg.noise_bits,
-                         noise_max_rounds=cfg.noise_max_rounds,
-                         noise_backend=cfg.noise_backend)
-    return _mlp_apply(params["head"], v)
+        return jnp.mean(preds, axis=0), None, None            # Avg. Workers Preds
+    proto = protocol if protocol is not None else cfg.resolve_protocol()
+    if noise is not None:            # deprecated ChannelNoise pass-through
+        proto = proto.with_p_miss(noise.p_miss)
+        rng = noise.rng
+    v, acct = proto.aggregate(h, rng)
+    return _mlp_apply(params["head"], v), acct, proto
+
+
+def forward(cfg: VerticalConfig, params: dict, views: jax.Array, *,
+            rng: Optional[jax.Array] = None,
+            protocol: Optional[Protocol] = None,
+            noise: Optional[fedocs.ChannelNoise] = None) -> jax.Array:
+    """Full fusion forward: views (N, B, d) -> prediction (B, output_dim).
+
+    The embeddings are fused by ``cfg.resolve_protocol()`` — or by
+    ``protocol`` when given, the traced per-call override the curve engine
+    uses to vmap a ``p_miss`` lane axis.  An OCS protocol additionally
+    needs ``rng`` (the sensing PRNG key); both are ordinary traced values.
+    ``noise`` (a deprecated :class:`fedocs.ChannelNoise`) is accepted for
+    one release and is equivalent to ``rng=noise.rng`` plus
+    ``protocol.with_p_miss(noise.p_miss)``.
+    """
+    pred, _, _ = _fuse_forward(cfg, params, views, rng, protocol, noise)
+    return pred
 
 
 def per_worker_predictions(cfg: VerticalConfig, params: dict,
@@ -115,15 +154,25 @@ def per_worker_predictions(cfg: VerticalConfig, params: dict,
 
 def loss_fn(cfg: VerticalConfig, params: dict, views: jax.Array,
             target: jax.Array, *,
+            rng: Optional[jax.Array] = None,
+            protocol: Optional[Protocol] = None,
             noise: Optional[fedocs.ChannelNoise] = None
             ) -> Tuple[jax.Array, dict]:
-    pred = forward(cfg, params, views, noise=noise)
+    """Task loss + metrics.  For an OCS fusion protocol the metrics carry
+    the measured channel telemetry of this step's aggregate call
+    (``chan_rounds``, ``chan_collision_frac``, ``chan_correct_frac``) —
+    the signal :class:`repro.protocol.BitsSchedule` policies consume.
+    ``chan_collision_frac`` is a true fraction in [0, 1]: collided
+    re-contention opportunities over the ``K * max_rounds`` available
+    (the core bills a sub-frame once per round it stays collided)."""
+    pred, acct, proto = _fuse_forward(cfg, params, views, rng, protocol,
+                                      noise)
     if cfg.task == "reconstruction":
         # Paper Eq. 2 squared error == Gaussian NLL up to constants; we report
         # per-pixel NLL with unit variance /2 convention for Fig.2 comparison.
         loss = jnp.mean((pred - target) ** 2)
-        return loss, {"mse": loss, "nll": 0.5 * loss}
-    if cfg.task == "classification":
+        metrics = {"mse": loss, "nll": 0.5 * loss}
+    elif cfg.task == "classification":
         if cfg.prediction_level:
             # pred is averaged prob already
             logp = jnp.log(jnp.clip(pred, 1e-9))
@@ -131,25 +180,34 @@ def loss_fn(cfg: VerticalConfig, params: dict, views: jax.Array,
             logp = jax.nn.log_softmax(pred, axis=-1)
         nll = -jnp.mean(jnp.take_along_axis(logp, target[:, None], axis=-1))
         acc = jnp.mean(jnp.argmax(logp, -1) == target)
-        return nll, {"nll": nll, "acc": acc}
-    raise ValueError(cfg.task)
+        loss, metrics = nll, {"nll": nll, "acc": acc}
+    else:
+        raise ValueError(cfg.task)
+    if acct is not None and proto.kind == "ocs":
+        # collisions are billed once per (sub-frame, round) a sub-frame
+        # stays collided, so the fraction normalizes over all K*max_rounds
+        # re-contention opportunities of this aggregate call
+        k_total = views.shape[1] * cfg.embed_dim      # batch * K elements
+        metrics["chan_rounds"] = acct.rounds.astype(jnp.float32)
+        metrics["chan_collision_frac"] = (
+            acct.collisions.astype(jnp.float32)
+            / (k_total * proto.max_rounds))
+        metrics["chan_correct_frac"] = acct.correct_frac
+    return loss, metrics
 
 
 def comm_load(cfg: VerticalConfig, bits: int = 16) -> channel.CommLoad:
-    """Per-sample uplink/downlink accounting for the configured aggregation."""
+    """Per-sample uplink/downlink accounting for the configured protocol.
+
+    Delegates to ``Protocol.comm_load`` — the one payload-bits source of
+    truth (D-bit code payloads for the quantized kinds, floats otherwise).
+    ``bits`` only parameterizes the contention depth of the plain-``max``
+    protocol (whose payload stays a full float), preserving the historical
+    signature.
+    """
     if cfg.prediction_level:
         return channel.avg_pred_load(cfg.n_workers, cfg.output_dim)
-    if cfg.aggregation in ("max", "max_q16", "max_q8", "max_noisy"):
-        b = {"max": bits, "max_q16": 16, "max_q8": 8,
-             "max_noisy": cfg.noise_bits}[cfg.aggregation]
-        if cfg.aggregation == "max":
-            # plain max transmits the winner's full float payload; the
-            # D bits only drive contention
-            return channel.ocs_load(cfg.n_workers, cfg.embed_dim, b)
-        # every quantized-code mode pools the dequantized D-bit code, so the
-        # winner's uplink payload is the D-bit code itself
-        ccfg = channel.ChannelConfig(payload_bits=b)
-        return channel.ocs_load(cfg.n_workers, cfg.embed_dim, b, cfg=ccfg)
-    if cfg.aggregation == "mean":
-        return channel.mean_load(cfg.n_workers, cfg.embed_dim)
-    return channel.concat_load(cfg.n_workers, cfg.embed_dim)
+    proto = cfg.resolve_protocol()
+    if proto.kind == "max" and proto.bits != bits:
+        proto = dataclasses.replace(proto, bits=bits)
+    return proto.comm_load(cfg.n_workers, cfg.embed_dim)

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.core import fedocs
 from repro.models import layers
 from repro.parallel.sharding import constrain
+from repro.protocol import Protocol
 
 
 def fusion_init(cfg, rng, k_out: int) -> dict:
@@ -42,7 +43,8 @@ def worker_reduce(cfg, p: dict, partial: jax.Array) -> jax.Array:
         gathered = fedocs.concat(partial)                  # (B, S, N*K)
         gathered = constrain(gathered, ("batch", "seq", None))  # force all-gather
         return gathered @ p["w_fuse"].astype(partial.dtype)
-    out = fedocs.aggregate(partial, mode, tie_break=cfg.tie_break)
+    proto = Protocol.from_mode(mode, tie_break=cfg.tie_break)
+    out, _acct = proto.aggregate(partial)
     return constrain(out, ("batch", "seq", "embed"))
 
 

@@ -1,0 +1,22 @@
+"""First-class Protocol API: the paper's access scheme as a pytree value.
+
+``Protocol``           — frozen, pytree-registered protocol object: one
+                         ``aggregate(h, rng) -> (pooled, accounting)`` entry
+                         point plus ``comm_load``/``output_dim``; traced
+                         ``p_miss`` leaf, static everything else.
+``ProtocolAccounting`` — measured channel counters of one aggregate call.
+``BitsSchedule``       — per-round backoff-depth policy hook
+                         (``FixedBits``, ``CollisionAdaptiveBits``) driven
+                         by the accounting telemetry; executed on device by
+                         ``repro.sim.train_curves.run_scheduled_curves``.
+"""
+
+from repro.protocol.protocol import (  # noqa: F401
+    KINDS, Protocol, ProtocolAccounting,
+)
+from repro.protocol.schedule import (  # noqa: F401
+    BitsSchedule, CollisionAdaptiveBits, FixedBits,
+)
+
+__all__ = ["KINDS", "Protocol", "ProtocolAccounting", "BitsSchedule",
+           "CollisionAdaptiveBits", "FixedBits"]

@@ -1,0 +1,128 @@
+"""Channel-aware backoff-depth scheduling across training (``BitsSchedule``).
+
+The quantization depth D (``Protocol.bits``) is *static* — it selects code
+dtypes and the contention scan length — so it cannot be a traced value
+inside one compiled step.  A :class:`BitsSchedule` instead declares a small
+set of candidate depths and a pure on-device policy that picks the next
+round's depth from the protocol telemetry the contention core already
+returns (:class:`repro.protocol.ProtocolAccounting`: collisions, rounds,
+winner-correctness).  The fused scan curve engine
+(``repro.sim.train_curves.run_scheduled_curves``) compiles one training-step
+branch per candidate and ``lax.switch``-es between them per round, so a
+whole scheduled training run still costs ONE host dispatch.
+
+Policy contract (all pure JAX, usable inside ``lax.scan``):
+
+  * ``init_state() -> state``   — pytree of arrays carried through the scan;
+  * ``update(state, telemetry) -> (state, index)`` — consume one round's
+    telemetry (a dict with float32 scalars: ``collision_frac``, the
+    fraction of the round's ``K * max_rounds`` re-contention opportunities
+    that collided, in [0, 1]; ``rounds``; ``correct_frac``) and emit the
+    *next* round's candidate index (traced int32 into ``candidates``).
+
+``FixedBits`` is the degenerate schedule (always the same depth — a
+scheduled run with it is bit-for-bit a plain ``run_curves`` lane).
+``CollisionAdaptiveBits`` tracks an EMA of the collision fraction and
+escalates to a deeper code when contention keeps colliding (deeper codes
+have fewer ties, hence fewer collision rounds), de-escalating to cheaper
+codes when the channel is quiet.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Telemetry = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class BitsSchedule:
+    """Base policy: candidate depths + a pure per-round update rule."""
+
+    candidates: Tuple[int, ...]
+    init_index: int = 0
+
+    def __post_init__(self):
+        if not self.candidates:
+            raise ValueError("BitsSchedule needs at least one candidate")
+        for b in self.candidates:
+            if not (1 <= b <= 32):
+                raise ValueError(f"candidate bits={b} outside [1, 32]")
+        if not (0 <= self.init_index < len(self.candidates)):
+            raise ValueError(
+                f"init_index {self.init_index} outside the "
+                f"{len(self.candidates)} candidates")
+
+    def init_state(self):
+        return jnp.int32(self.init_index)
+
+    def update(self, state, telemetry: Telemetry):
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedBits(BitsSchedule):
+    """Always the same depth: ``FixedBits(bits)``.
+
+    The identity schedule — ``run_scheduled_curves`` with ``FixedBits(b)``
+    trains the exact trajectory of ``run_curves`` at ``bits=(b,)``
+    (property-tested), so scheduled runs are a strict generalization of the
+    fixed-depth engine.
+    """
+
+    def __init__(self, bits: int):
+        super().__init__(candidates=(bits,), init_index=0)
+
+    def update(self, state, telemetry: Telemetry):
+        return state, jnp.int32(0)
+
+
+@dataclasses.dataclass(frozen=True)
+class CollisionAdaptiveBits(BitsSchedule):
+    """Escalate the backoff depth while collisions persist, back off when
+    the channel is quiet.
+
+    Tracks ``ema <- decay * ema + (1 - decay) * collision_frac`` (the
+    fraction of the round's re-contention opportunities that collided, from
+    the contention core's accounting) and moves one candidate step per
+    round: up when the EMA exceeds ``escalate``, down below ``deescalate``.
+    Deeper codes shrink the tie sets that collide under sensing misses, at
+    the price of more contention sub-slots — exactly the paper's Eq.-7
+    depth/overhead trade, now driven by observed channel telemetry.
+    """
+
+    escalate: float = 0.03
+    deescalate: float = 0.005
+    decay: float = 0.8
+
+    def __init__(self, candidates: Tuple[int, ...] = (8, 16),
+                 init_index: int = 0, *, escalate: float = 0.03,
+                 deescalate: float = 0.005, decay: float = 0.8):
+        if not (0.0 <= deescalate <= escalate):
+            raise ValueError(
+                f"need 0 <= deescalate ({deescalate}) <= escalate "
+                f"({escalate})")
+        if not (0.0 <= decay < 1.0):
+            raise ValueError(f"decay must be in [0, 1), got {decay}")
+        object.__setattr__(self, "escalate", float(escalate))
+        object.__setattr__(self, "deescalate", float(deescalate))
+        object.__setattr__(self, "decay", float(decay))
+        super().__init__(candidates=tuple(candidates), init_index=init_index)
+
+    def init_state(self):
+        return {"idx": jnp.int32(self.init_index),
+                "ema": jnp.float32(0.0)}
+
+    def update(self, state, telemetry: Telemetry):
+        coll = jnp.asarray(telemetry["collision_frac"], jnp.float32)
+        ema = self.decay * state["ema"] + (1.0 - self.decay) * coll
+        top = jnp.int32(len(self.candidates) - 1)
+        idx = state["idx"]
+        idx = jnp.where(ema > self.escalate, jnp.minimum(idx + 1, top),
+                        jnp.where(ema < self.deescalate,
+                                  jnp.maximum(idx - 1, 0), idx))
+        return {"idx": idx, "ema": ema}, idx

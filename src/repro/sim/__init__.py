@@ -5,7 +5,8 @@
                    batched protocol cores.
 ``train_curves`` — accuracy-vs-p_miss/bits curve runner: the fused on-device
                    scan engine (one dispatch per ``bits`` value, lane axis
-                   device-sharded) beside the legacy per-step python engine.
+                   device-sharded), plus the ``BitsSchedule``-driven
+                   scheduled engine (``run_scheduled_curves``).
 ``shard``        — the shared 1-D shard_map machinery both runners use.
 ``results``      — table/JSON emission with channel-accounting merge.
 """
@@ -17,8 +18,8 @@ from repro.sim.sweep import (  # noqa: F401
     SweepResult, run_sweep, reset_trace_counts, trace_counts,
 )
 from repro.sim.train_curves import (  # noqa: F401
-    CurveConfig, CurveResult, dispatch_counts, reset_dispatch_counts,
-    run_curves,
+    CurveConfig, CurveResult, ScheduledCurveResult, dispatch_counts,
+    reset_dispatch_counts, run_curves, run_scheduled_curves,
 )
 from repro.sim.results import (  # noqa: F401
     curve_rows, summarize, summarize_curves, to_json, to_rows, write_json,

@@ -17,7 +17,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import channel
+from repro.protocol import Protocol
 from repro.sim.sweep import SweepResult
 
 Record = Dict[str, object]
@@ -35,9 +35,11 @@ def summarize(sweep: SweepResult) -> List[Record]:
     """One merged record per scenario (measured counters + analytic loads)."""
     records: List[Record] = []
     for i, s in enumerate(sweep.scenarios):
-        cfg = channel.ChannelConfig(n_channels=s.n_channels)
-        fed = channel.ocs_load(s.n_workers, sweep.k_elems, bits=s.bits, cfg=cfg)
-        cat = channel.concat_load(s.n_workers, sweep.k_elems, cfg=cfg)
+        # analytic accounting off the scenario's Protocol object (float
+        # payloads, the paper's §IV convention — see Scenario.protocol)
+        fed = s.protocol().comm_load(s.n_workers, sweep.k_elems)
+        cat = Protocol.concat(n_channels=s.n_channels).comm_load(
+            s.n_workers, sweep.k_elems)
         rec: Record = {
             "scenario": s.name,
             "n_workers": s.n_workers,
@@ -97,10 +99,10 @@ def summarize_curves(curves) -> List[Record]:
     ccfg = curves.config
     records: List[Record] = []
     for bi, bits in enumerate(ccfg.bits):
-        cfg = channel.ChannelConfig(payload_bits=bits)
-        fed = channel.ocs_load(ccfg.n_workers, ccfg.embed_dim, bits=bits,
-                               cfg=cfg)
-        cat = channel.concat_load(ccfg.n_workers, ccfg.embed_dim)
+        # the curve protocol's winner transmits its D-bit code: payload
+        # bits come from the Protocol itself (one source of truth)
+        fed = ccfg.protocol(bits).comm_load(ccfg.n_workers, ccfg.embed_dim)
+        cat = Protocol.concat().comm_load(ccfg.n_workers, ccfg.embed_dim)
         for li in range(curves.p_miss.shape[0]):
             p = ccfg.p_miss[li]
             records.append({

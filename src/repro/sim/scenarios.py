@@ -17,7 +17,10 @@ import dataclasses
 import itertools
 from typing import Dict, List, Sequence, Tuple, Union
 
+import numpy as np
+
 from repro.core.ocs import host_id_bits
+from repro.protocol import Protocol
 
 PMiss = Union[float, Tuple[float, ...]]
 
@@ -66,6 +69,25 @@ class Scenario:
         if isinstance(self.p_miss, tuple):
             return self.p_miss
         return (float(self.p_miss),) * self.n_workers
+
+    def protocol(self, max_rounds: int = 3,
+                 backend: str = "scan") -> Protocol:
+        """This operating point as a first-class ``repro.protocol.Protocol``.
+
+        ``p_miss`` becomes the protocol's traced leaf (scalar, or the
+        per-worker vector for heterogeneous cells).  ``payload_bits`` is
+        pinned to 32: sweep cells follow the paper's §IV accounting where
+        the D-bit codes drive contention only and the winner transmits its
+        full float payload (``OCSResult.value``) — unlike the
+        channel-in-the-loop training protocol, whose winner transmits the
+        D-bit code itself.
+        """
+        p = (np.asarray(self.p_miss, np.float32)
+             if isinstance(self.p_miss, tuple)
+             else np.float32(self.p_miss))
+        return Protocol.ocs(bits=self.bits, p_miss=p,
+                            max_rounds=max_rounds, backend=backend,
+                            n_channels=self.n_channels, payload_bits=32)
 
 
 _REGISTRY: Dict[str, Scenario] = {}

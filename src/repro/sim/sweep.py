@@ -95,15 +95,18 @@ def _sweep_clean(h, mask, id_bits, n_channels, *, bits, max_id_bits,
 
 @functools.partial(jax.jit,
                    static_argnames=("bits", "max_id_bits", "max_rounds",
-                                    "n_devices"))
+                                    "backend", "n_devices"))
 def _sweep_noisy(h, mask, id_bits, rng, p_miss, n_channels, *,
-                 bits, max_id_bits, max_rounds, n_devices=1):
+                 bits, max_id_bits, max_rounds, backend="scan", n_devices=1):
     """As `_sweep_clean` plus rng: (S, R, 2) keys and p_miss: (S, N_max)
     per-worker miss probabilities, traced (homogeneous scenarios carry the
-    scalar broadcast — bit-for-bit the historical scalar path)."""
+    scalar broadcast — bit-for-bit the historical scalar path).
+    ``backend`` selects the contention engine (``Protocol.backend``:
+    ``"scan"`` or the fused ``"pallas"`` kernel, bit-for-bit identical)."""
     _TRACE_COUNTS["noisy"] += 1
     core = functools.partial(ocs.ocs_maxpool_noisy_core, bits=bits,
-                             max_id_bits=max_id_bits, max_rounds=max_rounds)
+                             max_id_bits=max_id_bits, max_rounds=max_rounds,
+                             backend=backend)
     per_round = jax.vmap(core, in_axes=(0, None, None, 0, None))
     engine = jax.vmap(per_round, in_axes=(0, 0, 0, 0, 0))
     if n_devices > 1:
@@ -173,6 +176,7 @@ def run_sweep(scenarios: Sequence[Scenario], *,
               h_by_scenario: Optional[Sequence[np.ndarray]] = None,
               rng_seed: int = 0,
               max_rounds: int = 3,
+              backend: str = "scan",
               include_clean: bool = True,
               include_noisy: bool = True,
               n_devices: Optional[int] = None) -> SweepResult:
@@ -187,6 +191,9 @@ def run_sweep(scenarios: Sequence[Scenario], *,
                      lets benchmarks replay an exact historical rng stream.
       rng_seed:      sensing-noise key seed for the noisy engine.
       max_rounds:    re-contention bound of the noisy protocol.
+      backend:       contention engine of the noisy protocol
+                     (``repro.protocol.Protocol.backend``: ``"scan"`` or
+                     ``"pallas"``; bit-for-bit interchangeable).
       include_clean / include_noisy: which engines to run.  The noisy engine
                      subsumes clean behaviour at ``p_miss=0`` but reports the
                      collision/accuracy accounting instead of the blocking-tx
@@ -264,7 +271,8 @@ def run_sweep(scenarios: Sequence[Scenario], *,
             res, lat = _sweep_noisy(*args, dev_pad(keys[sel]),
                                     dev_pad(p_miss[sel]),
                                     nch, bits=bits, max_id_bits=max_id_bits,
-                                    max_rounds=max_rounds, n_devices=n_dev)
+                                    max_rounds=max_rounds, backend=backend,
+                                    n_devices=n_dev)
             noisy_groups.append((sel, unpad((res, lat))))
 
     out = SweepResult(scenarios=scenarios, k_elems=k_elems, rounds=rounds,

@@ -4,43 +4,42 @@ This is the paper's actual end-to-end experiment, which the repo previously
 validated only in halves: ``repro.sim.sweep`` measured protocol behaviour
 while ``repro.train`` trained with ideal pooling.  Here the two meet — the
 vertical learner's forward pass fuses embeddings through the *simulated* OCS
-channel (``fedocs.maxpool_noisy``: quantized D-bit contention, per-sub-slot
-miss detection, lowest-index capture), and short training runs sweep the
-``p_miss x bits`` scenario grid into accuracy-vs-p_miss and accuracy-vs-bits
-tables (emitted by ``repro.sim.results``).
+channel (``repro.protocol.Protocol.ocs``: quantized D-bit contention,
+per-sub-slot miss detection, lowest-index capture), and short training runs
+sweep the ``p_miss x bits`` scenario grid into accuracy-vs-p_miss and
+accuracy-vs-bits tables (emitted by ``repro.sim.results``).
 
-Compilation contract (mirrors the sweep engine): ``p_miss`` and the sensing
-rng are *traced* — the whole miss-probability axis trains as ``vmap`` lanes
-of ONE compiled train step per ``bits`` value.  An ideal ``max_q{bits}``
-reference run (same init, same data stream) trains alongside; the
-``p_miss=0`` lane must match it bit for bit, which
-``benchmarks/bench_curves.py`` and ``tests/test_train_curves.py`` assert.
+Compilation contract (mirrors the sweep engine): the protocol's ``p_miss``
+leaf and the sensing rng are *traced* — the whole miss-probability axis
+trains as ``vmap`` lanes of ONE compiled train step per ``bits`` value,
+each lane carrying its own ``Protocol`` pytree (same static metadata, its
+own ``p_miss`` leaf).  An ideal ``Protocol.ideal_max(bits)`` reference run
+(same init, same data stream) trains alongside; the ``p_miss=0`` lane must
+match it bit for bit, which ``benchmarks/bench_curves.py`` and
+``tests/test_train_curves.py`` assert.
 
-Two engines drive that compiled step (``CurveConfig.engine``):
+The fused on-device engine drives everything: the whole ``steps`` loop is
+one ``lax.scan`` inside ONE jitted dispatch per ``bits`` value.  Batch
+indices are drawn on device from a threaded PRNG key, the noisy lanes, the
+ideal reference and the final channel-in-the-loop evaluation all run in
+that single dispatch, and the logged losses accumulate into an on-device
+``(lanes, n_logged)`` buffer fetched once at the end — no per-step dispatch
+or host sync.  On multi-device hosts the ``p_miss`` lane axis is sharded
+over a 1-D mesh via ``repro.sim.shard`` (vmap fallback on one device,
+bit-for-bit identical either way).  (The legacy per-step ``engine="python"``
+driver was removed after its one-release parity window — the scan engine
+had been property-tested bit-for-bit against it since it landed.)
 
-``"scan"`` (default)
-    The fused on-device engine: the whole ``steps`` loop is one ``lax.scan``
-    inside ONE jitted dispatch per ``bits`` value.  Batch indices are drawn
-    on device from a threaded PRNG key, the noisy lanes, the ideal reference
-    and the final channel-in-the-loop evaluation all run in that single
-    dispatch, and the logged losses accumulate into an on-device
-    ``(lanes, n_logged)`` buffer fetched once at the end — no per-step
-    dispatch or host sync.  On multi-device hosts the ``p_miss`` lane axis
-    is sharded over a 1-D mesh via ``repro.sim.shard`` (the same machinery
-    as ``run_sweep``'s scenario sharding; vmap fallback on one device,
-    bit-for-bit identical either way).  The scan carries the train state on
-    device, so params/opt-state never cross the host boundary mid-run.
-
-``"python"``
-    The legacy per-step driver (2 jitted dispatches per step from a Python
-    loop, train-state carries donated across dispatches).  Kept for one
-    release so scan-vs-python bit-for-bit parity is assertable; the batch
-    and noise streams are defined by the same key-derivation formulas, so
-    both engines train the exact same trajectory.
+:func:`run_scheduled_curves` additionally threads a
+``repro.protocol.BitsSchedule`` through the same fused scan: one compiled
+training-step branch per candidate depth, ``lax.switch``-ed per round by
+the schedule's pure on-device policy consuming the protocol accounting
+(collision/round telemetry) of the previous round — channel-aware backoff
+depth scheduling in ONE host dispatch for the whole run.
 
 Compilations are observable via :func:`trace_counts`, host dispatches via
-:func:`dispatch_counts` — the scan engine costs ONE dispatch per ``bits``
-value where the python engine costs ``2*steps + 2``.
+:func:`dispatch_counts` — the fused engine costs ONE dispatch per ``bits``
+value (``fused``), a scheduled run ONE dispatch total (``sched``).
 """
 
 from __future__ import annotations
@@ -53,21 +52,19 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import fedocs, vertical
+from repro.core import vertical
 from repro.core.vertical import VerticalConfig
 from repro.data.vertical_data import PatchTaskConfig, patch_classification
 from repro.optim import optimizers, schedules
+from repro.protocol import BitsSchedule, Protocol
 from repro.sim import shard as sim_shard
 from repro.train.train_step import make_train_step
-
-ENGINES = ("scan", "python")
 
 # ---------------------------------------------------------------------------
 # compilation + dispatch observability (same contract as repro.sim.sweep)
 # ---------------------------------------------------------------------------
 
-_COUNTER_KEYS = ("fused", "noisy_step", "ideal_step", "noisy_eval",
-                 "ideal_eval")
+_COUNTER_KEYS = ("fused", "sched")
 _TRACE_COUNTS: Dict[str, int] = {k: 0 for k in _COUNTER_KEYS}
 _DISPATCH_COUNTS: Dict[str, int] = {k: 0 for k in _COUNTER_KEYS}
 
@@ -80,9 +77,9 @@ def reset_trace_counts() -> None:
 
 def trace_counts() -> Dict[str, int]:
     """Times each curve engine has been traced.  One :func:`run_curves`
-    costs exactly one ``fused`` trace per ``bits`` value on the scan engine
-    (one ``*_step`` + one ``*_eval`` on the python engine), no matter how
-    many ``p_miss`` lanes the grid has."""
+    costs exactly one ``fused`` trace per ``bits`` value (one ``sched``
+    trace per :func:`run_scheduled_curves`), no matter how many ``p_miss``
+    lanes the grid has."""
     return dict(_TRACE_COUNTS)
 
 
@@ -95,13 +92,10 @@ def reset_dispatch_counts() -> None:
 def dispatch_counts() -> Dict[str, int]:
     """Jitted-engine dispatches issued from the host by each curve driver.
 
-    The scan engine issues ONE ``fused`` dispatch per ``bits`` value (train
-    loop + ideal reference + eval, all on device); the python engine issues
-    one ``noisy_step`` + one ``ideal_step`` per training step plus one
-    ``*_eval`` each per ``bits`` value (the small eager index/key ops it
-    also issues per step are not counted — this tracks the engine's own
-    call structure, it is not a profiler).  ``benchmarks/bench_curves.py``
-    asserts the ratio and the scan engine's
+    The fused engine issues ONE ``fused`` dispatch per ``bits`` value
+    (train loop + ideal reference + eval, all on device); a scheduled run
+    issues ONE ``sched`` dispatch for the whole training run, every
+    candidate depth included.  ``benchmarks/bench_curves.py`` asserts the
     ``<= ceil(steps/log_every) + 2`` per-bits bound, guarding the fused
     call structure against falling back to per-step driving.
     """
@@ -121,9 +115,8 @@ class CurveConfig:
     ``repro.sim.scenarios.near_far_p_miss``); lanes may mix both — scalars
     broadcast.  ``backend`` picks the noisy-contention engine of the
     channel-in-the-loop forward pass (``"scan"`` or the fused ``"pallas"``
-    kernel; bit-for-bit interchangeable).  ``engine`` picks the driver:
-    the fused on-device ``"scan"`` engine (default) or the legacy per-step
-    ``"python"`` loop — bit-for-bit interchangeable as well.
+    kernel; bit-for-bit interchangeable) — it becomes the static
+    ``Protocol.backend`` of every lane's protocol object.
     """
 
     bits: Sequence[int] = (8, 16)        # backoff/payload depth axis (static)
@@ -144,17 +137,13 @@ class CurveConfig:
     seed: int = 0
     log_every: int = 10
     backend: str = "scan"                # noisy-contention engine
-    engine: str = "scan"                 # curve driver: "scan" | "python"
 
     def __post_init__(self):
         for b in self.bits:
             if b not in (8, 16):
                 raise ValueError(
-                    f"bits={b}: the ideal reference run needs a max_q{{bits}} "
-                    "aggregation mode (8 or 16)")
-        if self.engine not in ENGINES:
-            raise ValueError(
-                f"engine={self.engine!r}: valid engines are {ENGINES}")
+                    f"bits={b}: the ideal reference run needs a "
+                    "Protocol.ideal_max(bits) aggregation (8 or 16)")
         if not self.p_miss:
             raise ValueError("p_miss needs at least one lane")
         for p in self.p_miss:
@@ -173,6 +162,11 @@ class CurveConfig:
     @property
     def n_workers(self) -> int:
         return self.grid * self.grid
+
+    def protocol(self, bits: int) -> Protocol:
+        """The (p_miss-unbound) OCS protocol template of one ``bits`` cell."""
+        return Protocol.ocs(bits=bits, max_rounds=self.max_rounds,
+                            backend=self.backend)
 
     def lane_p_miss(self, dtype=np.float32) -> np.ndarray:
         """Lane axis as an array: (L,) if all lanes are scalar, else the
@@ -195,10 +189,10 @@ class CurveResult:
 
     Lane axis L == ``len(config.p_miss)``; bits axis follows
     ``config.bits`` order.  ``*_ideal`` rows come from the reference run
-    with ideal ``max_q{bits}`` pooling (a single vmap lane — the ideal run
-    is deterministic and lane-independent).  ``p_miss`` is the float32 lane
-    array the engines trace (``config.lane_p_miss()``), so the reported
-    operating points are exactly the compiled ones.
+    with ideal ``Protocol.ideal_max(bits)`` pooling (a single vmap lane —
+    the ideal run is deterministic and lane-independent).  ``p_miss`` is
+    the float32 lane array the engine traces (``config.lane_p_miss()``), so
+    the reported operating points are exactly the compiled ones.
     """
 
     config: CurveConfig
@@ -214,6 +208,30 @@ class CurveResult:
     ideal_params: List                  # per-bits lane-stacked trained params
 
 
+@dataclasses.dataclass
+class ScheduledCurveResult:
+    """Outcome of one ``BitsSchedule``-driven curve run.
+
+    The schedule picks one candidate depth per training round from the
+    previous round's protocol accounting; ``bits_per_step`` records the
+    depth every step actually trained with (``bits_per_step[0]`` is always
+    ``schedule.candidates[schedule.init_index]``).  ``collision_frac`` is
+    the lane-mean collision fraction at the logged steps — the telemetry
+    the policy consumed.
+    """
+
+    config: CurveConfig
+    schedule: BitsSchedule
+    p_miss: np.ndarray                  # (L,) or (L, N)
+    acc: np.ndarray                     # (L,) channel-in-the-loop eval
+    nll: np.ndarray                     # (L,)
+    loss_history: np.ndarray            # (n_logged, L)
+    collision_frac: np.ndarray          # (n_logged,)
+    bits_per_step: np.ndarray           # (steps,) chosen depth per round
+    logged_steps: np.ndarray            # (n_logged,)
+    params: object                      # lane-stacked trained params
+
+
 # ---------------------------------------------------------------------------
 # shared engine pieces: data/key streams, losses, per-bits train steps
 # ---------------------------------------------------------------------------
@@ -227,27 +245,27 @@ def _lane_stack(tree, lanes: int):
 def _vertical_config(ccfg: CurveConfig, bits: int, noisy: bool
                      ) -> VerticalConfig:
     patch_dim = (ccfg.hw // ccfg.grid) ** 2
+    # the OCS winner is the lowest-indexed max-code holder, so the ideal
+    # reference must route gradients the same way (tie_break="first")
+    proto = (ccfg.protocol(bits) if noisy
+             else Protocol.ideal_max(bits, tie_break="first"))
     return VerticalConfig(
         n_workers=ccfg.n_workers, input_dim=patch_dim,
         encoder_dims=tuple(ccfg.encoder_dims), embed_dim=ccfg.embed_dim,
         head_dims=tuple(ccfg.head_dims), output_dim=ccfg.n_classes,
-        task="classification",
-        aggregation="max_noisy" if noisy else f"max_q{bits}",
-        # the OCS winner is the lowest-indexed max-code holder, so the ideal
-        # reference must route gradients the same way
-        tie_break="first",
-        noise_bits=bits, noise_max_rounds=ccfg.max_rounds,
-        noise_backend=ccfg.backend)
+        task="classification", aggregation=proto)
 
 
 def _stream_keys(ccfg: CurveConfig, bits: int):
-    """Root keys of the (engine-independent) batch and sensing streams.
+    """Root keys of the batch and sensing streams of one ``bits`` cell.
 
-    Both engines derive every stochastic input from these by the same
-    formulas — ``_batch_indices(k_data, step)`` for the shared batch stream,
+    Every stochastic input derives from these by fixed formulas —
+    ``_batch_indices(k_data, step)`` for the shared batch stream,
     ``fold_in(lane_keys[l], step)`` for lane ``l``'s per-step sensing key
-    (``step == steps`` is the held-out evaluation key) — so the scan and
-    python engines train bit-for-bit identical trajectories.
+    (``step == steps`` is the held-out evaluation key) — so runs are
+    reproducible and a scheduled run whose schedule never switches away
+    from depth ``bits`` trains bit-for-bit the plain ``run_curves``
+    trajectory of that depth.
     """
     base = jax.random.PRNGKey(ccfg.seed + 7919 * bits)
     k_data, k_noise = jax.random.split(base)
@@ -277,13 +295,20 @@ def _make_data(ccfg: CurveConfig):
 
 
 def _make_steps(ccfg: CurveConfig, bits: int):
-    """Per-bits vertical configs, optimizer, and train-step closures."""
+    """Per-bits vertical configs, optimizer, and train-step closures.
+
+    The noisy loss takes the channel state as ``chan = (rng, protocol)`` —
+    the per-lane sensing key plus the lane's ``Protocol`` pytree (its
+    ``p_miss`` leaf is the only traced difference between lanes).
+    """
     vcfg_n = _vertical_config(ccfg, bits, noisy=True)
     vcfg_i = _vertical_config(ccfg, bits, noisy=False)
 
-    def noisy_loss(values, batch, noise, _cfg=vcfg_n):
+    def noisy_loss(values, batch, chan, _cfg=vcfg_n):
         bviews, blabels = batch
-        return vertical.loss_fn(_cfg, values, bviews, blabels, noise=noise)
+        rng, proto = chan
+        return vertical.loss_fn(_cfg, values, bviews, blabels, rng=rng,
+                                protocol=proto)
 
     def ideal_loss(values, batch, _cfg=vcfg_i):
         bviews, blabels = batch
@@ -316,16 +341,18 @@ def _make_fused(ccfg: CurveConfig, per_bits, n_logged: int, n_dev: int):
 
     ``per_bits`` is that value's ``_make_steps`` tuple (shared with the
     caller, which needs its optimizer for the init).  One dispatch runs:
-    the ``lax.scan`` over all training steps (noisy lanes vmapped over
-    traced ``(rng, p_miss)``, batch indices drawn on device), the
-    single-lane ideal reference scan, and both channel-in-the-loop
-    evaluations.  Logged losses accumulate in carried on-device buffers
-    (scattered by the precomputed step->slot map), so nothing syncs to the
-    host until the caller fetches the results.  With ``n_dev > 1`` the lane
-    axis runs under ``shard_map`` (lane-leading args sharded, data/keys
-    replicated) — bit-for-bit the vmap path, as with ``run_sweep``.
+    the ``lax.scan`` over all training steps (noisy lanes vmapped over the
+    traced ``(rng, Protocol)`` channel state, batch indices drawn on
+    device), the single-lane ideal reference scan, and both
+    channel-in-the-loop evaluations.  Logged losses accumulate in carried
+    on-device buffers (scattered by the precomputed step->slot map), so
+    nothing syncs to the host until the caller fetches the results.  With
+    ``n_dev > 1`` the lane axis runs under ``shard_map`` (lane-leading args
+    sharded, data/keys replicated) — bit-for-bit the vmap path, as with
+    ``run_sweep``.
     """
     vcfg_n, vcfg_i, _opt, step_n, step_i = per_bits
+    proto_tmpl = vcfg_n.resolve_protocol()
     steps, batch, n_train = ccfg.steps, ccfg.batch, ccfg.n_train
 
     def scan_lanes(step_fn, vals, opts, hist, k_data, views, labels, slots):
@@ -351,19 +378,17 @@ def _make_fused(ccfg: CurveConfig, per_bits, n_logged: int, n_dev: int):
         hist = jnp.zeros((lanes, n_logged), jnp.float32)
 
         def step_fn(vals, opts, b, step):
-            noise = fedocs.ChannelNoise(rng=_fold_lanes(lane_keys, step),
-                                        p_miss=p)
-            return jax.vmap(step_n, in_axes=(0, 0, None, 0))(
-                vals, opts, b, noise)
+            chan = (_fold_lanes(lane_keys, step), proto_tmpl.with_p_miss(p))
+            return jax.vmap(step_n, in_axes=(0, 0, None, (0, 0)))(
+                vals, opts, b, chan)
 
         vals, _opts, hist = scan_lanes(step_fn, vals, opts, hist,
                                        k_data, views, labels, slots)
-        eval_noise = fedocs.ChannelNoise(rng=_fold_lanes(lane_keys, steps),
-                                         p_miss=p)
+        eval_chan = (_fold_lanes(lane_keys, steps), proto_tmpl.with_p_miss(p))
         met = jax.vmap(
-            lambda v, nz: vertical.loss_fn(vcfg_n, v, vviews, vlabels,
-                                           noise=nz)[1],
-            in_axes=(0, 0))(vals, eval_noise)
+            lambda v, ch: vertical.loss_fn(vcfg_n, v, vviews, vlabels,
+                                           rng=ch[0], protocol=ch[1])[1],
+            in_axes=(0, (0, 0)))(vals, eval_chan)
         return vals, hist, met["acc"], met["nll"]
 
     def ideal_lanes(params0, opt0, k_data, views, labels, vviews, vlabels,
@@ -458,106 +483,7 @@ def _run_curves_scan(ccfg: CurveConfig, n_devices) -> CurveResult:
 
 
 # ---------------------------------------------------------------------------
-# the legacy per-step python engine (kept one release for parity assertions)
-# ---------------------------------------------------------------------------
-
-def _run_curves_python(ccfg: CurveConfig) -> CurveResult:
-    lanes = len(ccfg.p_miss)
-    p_vec = jnp.asarray(ccfg.lane_p_miss())      # (L,) or (L, N)
-
-    views_j, labels_j, vv_j, vl_j = _make_data(ccfg)
-    logged = ccfg.logged_steps()
-    slot_of = {step: i for i, step in enumerate(logged)}
-
-    acc = np.zeros((len(ccfg.bits), lanes), np.float64)
-    nll = np.zeros_like(acc)
-    acc_ideal = np.zeros((len(ccfg.bits),), np.float64)
-    nll_ideal = np.zeros_like(acc_ideal)
-    hist = np.zeros((len(ccfg.bits), len(logged), lanes), np.float64)
-    hist_ideal = np.zeros((len(ccfg.bits), len(logged)), np.float64)
-    noisy_params_out, ideal_params_out = [], []
-
-    for bi, bits in enumerate(ccfg.bits):
-        vcfg_n, vcfg_i, opt, step_n, step_i = _make_steps(ccfg, bits)
-
-        def jit_noisy(values, opt_state, batch, noise):
-            _TRACE_COUNTS["noisy_step"] += 1
-            return jax.vmap(step_n, in_axes=(0, 0, None, 0))(
-                values, opt_state, batch, noise)
-
-        def jit_ideal(values, opt_state, batch):
-            _TRACE_COUNTS["ideal_step"] += 1
-            return jax.vmap(step_i, in_axes=(0, 0, None))(
-                values, opt_state, batch)
-
-        def eval_noisy(values, noise, _cfg=vcfg_n):
-            _TRACE_COUNTS["noisy_eval"] += 1
-            return jax.vmap(
-                lambda v, nz: vertical.loss_fn(_cfg, v, vv_j, vl_j,
-                                               noise=nz)[1],
-                in_axes=(0, 0))(values, noise)
-
-        def eval_ideal(values, _cfg=vcfg_i):
-            _TRACE_COUNTS["ideal_eval"] += 1
-            return jax.vmap(
-                lambda v: vertical.loss_fn(_cfg, v, vv_j, vl_j)[1])(values)
-
-        # the train-state carries are donated: params/opt-state update in
-        # place across the per-step dispatches instead of double-buffering
-        jit_noisy = jax.jit(jit_noisy, donate_argnums=(0, 1))
-        jit_ideal = jax.jit(jit_ideal, donate_argnums=(0, 1))
-        eval_noisy = jax.jit(eval_noisy)
-        eval_ideal = jax.jit(eval_ideal)
-
-        # identical init + identical batch stream for noisy lanes and the
-        # ideal reference: any divergence is the channel's doing.  The ideal
-        # run is deterministic and lane-independent, so a single vmap lane
-        # suffices (it keeps the batched program structure at 1/lanes cost).
-        params0 = vertical.init(vcfg_n, jax.random.PRNGKey(ccfg.seed))
-        vals_n = _lane_stack(params0, lanes)
-        vals_i = _lane_stack(params0, 1)
-        opt0 = opt.init(params0)
-        opt_n = _lane_stack(opt0, lanes)
-        opt_i = _lane_stack(opt0, 1)
-
-        k_data, lane_keys = _stream_keys(ccfg, bits)
-        for step in range(ccfg.steps):
-            idx = _batch_indices(k_data, step, ccfg.batch, ccfg.n_train)
-            batch = (views_j[:, idx], labels_j[idx])
-            noise = fedocs.ChannelNoise(rng=_fold_lanes(lane_keys, step),
-                                        p_miss=p_vec)
-            _DISPATCH_COUNTS["noisy_step"] += 1
-            vals_n, opt_n, met_n = jit_noisy(vals_n, opt_n, batch, noise)
-            _DISPATCH_COUNTS["ideal_step"] += 1
-            vals_i, opt_i, met_i = jit_ideal(vals_i, opt_i, batch)
-            if step in slot_of:
-                li = slot_of[step]
-                hist[bi, li] = np.asarray(met_n["loss_mean"])
-                hist_ideal[bi, li] = float(np.asarray(met_i["loss_mean"])[0])
-
-        eval_noise = fedocs.ChannelNoise(
-            rng=_fold_lanes(lane_keys, ccfg.steps), p_miss=p_vec)
-        _DISPATCH_COUNTS["noisy_eval"] += 1
-        m_n = eval_noisy(vals_n, eval_noise)
-        _DISPATCH_COUNTS["ideal_eval"] += 1
-        m_i = eval_ideal(vals_i)
-        acc[bi] = np.asarray(m_n["acc"])
-        nll[bi] = np.asarray(m_n["nll"])
-        acc_ideal[bi] = float(np.asarray(m_i["acc"])[0])
-        nll_ideal[bi] = float(np.asarray(m_i["nll"])[0])
-        noisy_params_out.append(vals_n)
-        ideal_params_out.append(vals_i)
-
-    return CurveResult(
-        config=ccfg, p_miss=ccfg.lane_p_miss(),
-        acc=acc, nll=nll, acc_ideal=acc_ideal, nll_ideal=nll_ideal,
-        loss_history=hist, ideal_loss_history=hist_ideal,
-        logged_steps=np.asarray(logged), noisy_params=noisy_params_out,
-        ideal_params=ideal_params_out)
-
-
-# ---------------------------------------------------------------------------
-# the public runner
+# the public runners
 # ---------------------------------------------------------------------------
 
 def run_curves(ccfg: CurveConfig = CurveConfig(), *,
@@ -565,25 +491,158 @@ def run_curves(ccfg: CurveConfig = CurveConfig(), *,
     """Train the p_miss lane axis through the simulated channel, per bits.
 
     For every ``bits`` value: ONE compiled train step (lane-vmapped over
-    traced ``(rng, p_miss)``) trains all miss-probability lanes
-    simultaneously from identical inits on an identical batch stream, and
-    one ideal ``max_q{bits}`` reference trains beside it.  Evaluation runs
-    channel-in-the-loop as well (fresh sensing keys, same ``p_miss`` lanes).
+    the traced ``(rng, Protocol)`` channel state) trains all
+    miss-probability lanes simultaneously from identical inits on an
+    identical batch stream, and one ideal ``Protocol.ideal_max(bits)``
+    reference trains beside it.  Evaluation runs channel-in-the-loop as
+    well (fresh sensing keys, same ``p_miss`` lanes).  The whole run is
+    ONE host dispatch per ``bits`` value.
 
-    ``ccfg.engine`` picks the driver: the fused on-device ``"scan"`` engine
-    (one dispatch per ``bits`` value; default) or the legacy per-step
-    ``"python"`` loop — bit-for-bit identical trajectories either way.
-
-    ``n_devices`` (scan engine only) shards the ``p_miss`` lane axis over
-    local devices.  ``None`` (the default) uses every local device; ``1``
-    forces the single-device vmap path.  Results are identical either way —
-    sharding only changes placement (lanes are padded up to a device-count
-    multiple and the padding is dropped before results are returned).
+    ``n_devices`` shards the ``p_miss`` lane axis over local devices.
+    ``None`` (the default) uses every local device; ``1`` forces the
+    single-device vmap path.  Results are identical either way — sharding
+    only changes placement (lanes are padded up to a device-count multiple
+    and the padding is dropped before results are returned).
     """
-    if ccfg.engine == "python":
-        if n_devices not in (None, 1):
-            raise ValueError(
-                "engine='python' is the legacy single-device driver; use "
-                "the scan engine for sharded lanes")
-        return _run_curves_python(ccfg)
     return _run_curves_scan(ccfg, n_devices)
+
+
+# ---------------------------------------------------------------------------
+# the scheduled engine: BitsSchedule inside the fused scan, one dispatch
+# ---------------------------------------------------------------------------
+
+def _make_sched_fused(ccfg: CurveConfig, schedule: BitsSchedule, per_cand,
+                      n_logged: int):
+    """Build the jitted scheduled engine (all candidate depths, one jit).
+
+    One training-step branch is compiled per candidate ``bits`` (the depth
+    is static inside each branch — it fixes code dtypes and the contention
+    scan length) and ``lax.switch`` picks the branch per round from the
+    schedule's carried index.  The schedule's ``update`` consumes the
+    round's protocol accounting (lane-mean collision fraction / rounds /
+    correctness from the train-step metrics) and emits the next round's
+    index — policy and training both stay on device.
+    """
+    steps, batch, n_train = ccfg.steps, ccfg.batch, ccfg.n_train
+    cand_bits = jnp.asarray(schedule.candidates, jnp.int32)
+
+    def make_branch(ci):
+        vcfg_n, _vi, _opt, step_n, _si = per_cand[ci]
+        proto_tmpl = vcfg_n.resolve_protocol()
+
+        def branch(vals, opts, b, rngs, p):
+            chan = (rngs, proto_tmpl.with_p_miss(p))
+            return jax.vmap(step_n, in_axes=(0, 0, None, (0, 0)))(
+                vals, opts, b, chan)
+        return branch
+
+    def make_eval_branch(ci, vviews, vlabels):
+        vcfg_n = per_cand[ci][0]
+        proto_tmpl = vcfg_n.resolve_protocol()
+
+        def branch(vals, rngs, p):
+            chan = (rngs, proto_tmpl.with_p_miss(p))
+            return jax.vmap(
+                lambda v, ch: vertical.loss_fn(vcfg_n, v, vviews, vlabels,
+                                               rng=ch[0],
+                                               protocol=ch[1])[1],
+                in_axes=(0, (0, 0)))(vals, chan)
+        return branch
+
+    branches = [make_branch(ci) for ci in range(len(schedule.candidates))]
+
+    def fused(params0, opt0, lane_keys, p, k_data, views, labels, vviews,
+              vlabels, slots):
+        _TRACE_COUNTS["sched"] += 1
+        eval_branches = [make_eval_branch(ci, vviews, vlabels)
+                         for ci in range(len(schedule.candidates))]
+        lanes = lane_keys.shape[0]
+        vals, opts = _lane_stack(params0, lanes), _lane_stack(opt0, lanes)
+        hist = jnp.zeros((lanes, n_logged), jnp.float32)
+        coll_hist = jnp.zeros((n_logged,), jnp.float32)
+        st0 = schedule.init_state()
+        idx0 = jnp.int32(schedule.init_index)
+
+        def body(carry, x):
+            vals, opts, hist, coll_hist, st, idx = carry
+            step, slot = x
+            bidx = _batch_indices(k_data, step, batch, n_train)
+            b = (views[:, bidx], labels[bidx])
+            rngs = _fold_lanes(lane_keys, step)
+            vals, opts, met = jax.lax.switch(idx, branches, vals, opts, b,
+                                             rngs, p)
+            telemetry = {
+                "collision_frac": jnp.mean(met["chan_collision_frac"]),
+                "rounds": jnp.mean(met["chan_rounds"]),
+                "correct_frac": jnp.mean(met["chan_correct_frac"]),
+            }
+            st, next_idx = schedule.update(st, telemetry)
+            hist = hist.at[:, slot].set(met["loss_mean"], mode="drop")
+            coll_hist = coll_hist.at[slot].set(
+                telemetry["collision_frac"], mode="drop")
+            return ((vals, opts, hist, coll_hist, st, next_idx),
+                    (cand_bits[idx], idx))
+
+        carry0 = (vals, opts, hist, coll_hist, st0, idx0)
+        (vals, _opts, hist, coll_hist, _st, _idx), (bits_seq, idx_seq) = \
+            jax.lax.scan(
+                body, carry0, (jnp.arange(steps, dtype=jnp.int32), slots))
+
+        # evaluate at the depth the final round actually trained with, so
+        # the reported accuracy and bits_per_step[-1] name the same
+        # operating point (the post-final-update index is never trained)
+        rngs = _fold_lanes(lane_keys, steps)
+        met = jax.lax.switch(idx_seq[-1], eval_branches, vals, rngs, p)
+        return vals, hist, coll_hist, bits_seq, met["acc"], met["nll"]
+
+    return jax.jit(fused)
+
+
+def run_scheduled_curves(ccfg: CurveConfig, schedule: BitsSchedule
+                         ) -> ScheduledCurveResult:
+    """Train the ``p_miss`` lanes with a channel-aware ``BitsSchedule``.
+
+    The backoff depth is re-chosen every round by ``schedule.update`` from
+    the previous round's protocol accounting; all candidate depths compile
+    into ONE jitted program (one ``lax.switch`` branch each) and the whole
+    run — training scan, per-round policy, final channel-in-the-loop
+    evaluation — is ONE host dispatch (``dispatch_counts()["sched"]``).
+
+    The stochastic streams derive from
+    ``_stream_keys(ccfg, candidates[init_index])``, so a schedule that
+    never leaves its initial depth ``b`` (e.g. ``FixedBits(b)``) trains
+    bit-for-bit the ``run_curves(bits=(b,))`` noisy lanes (property-tested
+    in ``tests/test_protocol.py``).  Runs single-device (vmap lanes).
+    """
+    lanes = len(ccfg.p_miss)
+    p_lanes = jnp.asarray(ccfg.lane_p_miss())
+
+    views_j, labels_j, vv_j, vl_j = _make_data(ccfg)
+    logged = ccfg.logged_steps()
+    slots = jnp.asarray(_log_slots(ccfg, logged))
+
+    per_cand = [_make_steps(ccfg, b) for b in schedule.candidates]
+    init_bits = schedule.candidates[schedule.init_index]
+    k_data, lane_keys = _stream_keys(ccfg, init_bits)
+
+    # identical init for every candidate branch: the model is depth-
+    # independent (bits only changes the fused forward), so one train state
+    # serves the whole switch
+    vcfg0, opt = per_cand[0][0], per_cand[0][2]
+    params0 = vertical.init(vcfg0, jax.random.PRNGKey(ccfg.seed))
+    opt0 = opt.init(params0)
+
+    fused = _make_sched_fused(ccfg, schedule, per_cand, len(logged))
+    _DISPATCH_COUNTS["sched"] += 1
+    vals, hist, coll_hist, bits_seq, acc, nll = fused(
+        params0, opt0, jnp.asarray(lane_keys), p_lanes, k_data, views_j,
+        labels_j, vv_j, vl_j, slots)
+
+    return ScheduledCurveResult(
+        config=ccfg, schedule=schedule, p_miss=ccfg.lane_p_miss(),
+        acc=np.asarray(acc, np.float64)[:lanes],
+        nll=np.asarray(nll, np.float64)[:lanes],
+        loss_history=np.asarray(hist, np.float64)[:lanes].T,
+        collision_frac=np.asarray(coll_hist, np.float64),
+        bits_per_step=np.asarray(bits_seq, np.int64),
+        logged_steps=np.asarray(logged), params=vals)

@@ -29,11 +29,13 @@ def make_train_step(loss_fn: Callable, optimizer, microbatches: int = 1,
     pass jnp.zeros(()) sentinel-free via the same pytree each call).
 
     ``with_rng=True`` switches the contract to a stochastic forward (e.g. the
-    channel-in-the-loop ``max_noisy`` aggregation): ``loss_fn(values, batch,
-    rng)`` and ``train_step(values, opt_state, batch, rng[, err])``.  ``rng``
-    is any pytree of traced arrays (a PRNG key, or a ``fedocs.ChannelNoise``)
-    — under microbatching each microbatch receives ``fold_in``-style
-    decorrelated keys via the scan index.
+    channel-in-the-loop OCS aggregation): ``loss_fn(values, batch, rng)``
+    and ``train_step(values, opt_state, batch, rng[, err])``.  ``rng`` is
+    any pytree of traced arrays — a PRNG key, or a ``(key,
+    repro.protocol.Protocol)`` channel-state tuple as the curve engine
+    passes — under microbatching each microbatch receives ``fold_in``-style
+    decorrelated keys via the scan index (key-typed leaves are folded;
+    float leaves like the protocol's ``p_miss`` pass through untouched).
 
     ``donate=True`` returns the step pre-jitted with the train-state carries
     (``values``, ``opt_state``) donated, so params/optimizer moments are

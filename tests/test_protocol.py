@@ -1,0 +1,399 @@
+"""First-class Protocol API (ISSUE 5 tentpole).
+
+Contracts under test:
+  * the pytree contract: flatten/unflatten round-trip for every constructor
+    (``p_miss`` is the ONLY leaf; everything else is static metadata), jit
+    with ZERO recompiles across a ``p_miss`` lane axis, vmap over
+    lane-stacked Protocol pytrees;
+  * shim-vs-Protocol bit-for-bit parity — forward, vjp AND accounting —
+    for every legacy string mode on both contention backends, plus
+    ``DeprecationWarning`` emission from the ``fedocs.aggregate`` /
+    ``ChannelNoise`` / ``fedocs.output_dim`` shims;
+  * ``Protocol.comm_load`` as the one payload-bits source of truth
+    (consolidating the ``channel.py`` loaders) and ``Protocol.output_dim``;
+  * the ``BitsSchedule`` policy hook: pure-policy unit behaviour, and the
+    fused scheduled curve engine — ``FixedBits(b)`` reproduces
+    ``run_curves(bits=(b,))`` bit for bit in ONE dispatch, and a
+    ``CollisionAdaptiveBits`` schedule runs end-to-end with its depth
+    choices confined to the candidate set.
+"""
+
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import random_floats, seeds, sweep
+from repro.core import channel, fedocs, ocs, vertical
+from repro.protocol import (BitsSchedule, CollisionAdaptiveBits, FixedBits,
+                            Protocol)
+from repro.sim import train_curves as tc
+
+ALL_PROTOCOLS = (
+    Protocol.sum(),
+    Protocol.max(bits=16, tie_break="first"),
+    Protocol.ideal_max(8),
+    Protocol.ocs(8, p_miss=0.1),
+    Protocol.mean(),
+    Protocol.concat(),
+)
+
+
+# ---------------------------------------------------------------------------
+# pytree contract
+# ---------------------------------------------------------------------------
+
+def test_flatten_unflatten_round_trip():
+    for proto in ALL_PROTOCOLS:
+        leaves, treedef = jax.tree_util.tree_flatten(proto)
+        back = jax.tree_util.tree_unflatten(treedef, leaves)
+        for f in ("kind", "bits", "tie_break", "max_rounds", "backend",
+                  "n_channels", "payload_bits"):
+            assert getattr(back, f) == getattr(proto, f), (proto.kind, f)
+        if proto.kind == "ocs":
+            # p_miss is the one traced leaf
+            assert len(leaves) == 1
+            assert np.asarray(back.p_miss) == np.asarray(proto.p_miss)
+        else:
+            assert leaves == []
+
+
+def test_p_miss_is_the_only_leaf_and_metadata_is_static():
+    lanes = Protocol.ocs(8, p_miss=jnp.asarray([0.0, 0.1, 0.3], jnp.float32))
+    leaves = jax.tree.leaves(lanes)
+    assert len(leaves) == 1 and leaves[0].shape == (3,)
+    # static fields survive tree_map untouched
+    mapped = jax.tree.map(lambda x: x * 0, lanes)
+    assert mapped.bits == 8 and mapped.backend == "scan"
+    assert np.all(np.asarray(mapped.p_miss) == 0)
+
+
+def test_jit_zero_recompiles_across_p_miss_lane_axis():
+    h = jnp.asarray(random_floats(0, (4, 8, 8), specials=False))
+    key = jax.random.PRNGKey(0)
+    traces = []
+
+    @jax.jit
+    def f(proto, x, k):
+        traces.append(1)
+        pooled, acct = proto.aggregate(x, k)
+        return pooled, acct.collisions
+
+    base = Protocol.ocs(8)
+    outs = [np.asarray(f(base.with_p_miss(jnp.float32(p)), h, key)[0])
+            for p in (0.0, 0.05, 0.3, 0.9)]
+    assert len(traces) == 1
+    # the p=0 lane of the SAME compiled function pins to the ideal pool
+    assert np.array_equal(outs[0],
+                          np.asarray(fedocs.maxpool_quantized(h, 8, "first")))
+    # a static-field change (backend) IS a new program
+    f(dataclasses.replace(base, backend="pallas",
+                          p_miss=jnp.float32(0.1)), h, key)
+    assert len(traces) == 2
+
+
+def test_vmap_over_lane_stacked_protocols():
+    h = jnp.asarray(random_floats(1, (4, 6, 5), specials=False))
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    lanes = Protocol.ocs(8, p_miss=jnp.asarray([0.0, 0.1, 0.4], jnp.float32))
+    pooled, acct = jax.vmap(lambda pr, k: pr.aggregate(h, k))(lanes, keys)
+    assert pooled.shape == (3, 6, 5)
+    assert acct.collisions.shape == (3,)
+    # lane 0 (p=0) == ideal quantized pool, inside the same vmapped program
+    assert np.array_equal(np.asarray(pooled[0]),
+                          np.asarray(fedocs.maxpool_quantized(h, 8, "first")))
+
+
+def test_protocol_validation():
+    with pytest.raises(ValueError):
+        Protocol(kind="median")
+    with pytest.raises(ValueError):
+        Protocol.ideal_max(0)
+    with pytest.raises(ValueError):
+        Protocol.ocs(8, backend="triton")
+    with pytest.raises(ValueError):
+        Protocol.ocs(8, max_rounds=0)
+    with pytest.raises(ValueError):
+        Protocol.mean(n_channels=0)
+    with pytest.raises(ValueError):
+        Protocol.from_mode("median")
+    with pytest.raises(ValueError):      # rng is mandatory for ocs
+        Protocol.ocs(8, p_miss=0.1).aggregate(jnp.zeros((2, 4)))
+    with pytest.raises(ValueError):      # p_miss must be bound
+        Protocol.ocs(8).aggregate(jnp.zeros((2, 4)), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# shim-vs-Protocol parity + deprecation
+# ---------------------------------------------------------------------------
+
+def test_shims_emit_deprecation_warnings():
+    h = jnp.zeros((2, 4))
+    with pytest.warns(DeprecationWarning, match=r"^repro\.core\.fedocs"):
+        fedocs.aggregate(h, "mean")
+    with pytest.warns(DeprecationWarning, match=r"^repro\.core\.fedocs"):
+        fedocs.ChannelNoise(rng=jax.random.PRNGKey(0),
+                            p_miss=jnp.float32(0.1))
+    with pytest.warns(DeprecationWarning, match=r"^repro\.core\.fedocs"):
+        fedocs.output_dim("concat", 4, 8)
+
+
+def test_shim_parity_every_mode_forward_and_vjp():
+    """fedocs.aggregate(mode) == Protocol.from_mode(mode).aggregate, bit for
+    bit in forward AND gradient, for every legacy mode."""
+    def prop(seed):
+        h = jnp.asarray(random_floats(seed, (5, 6, 7), specials=False))
+        key = jax.random.PRNGKey(seed)
+        p = jnp.float32(0.25)
+        for mode in fedocs.VALID_MODES:
+            proto = Protocol.from_mode(mode, bits=8)
+            rng = None
+            if mode == "max_noisy":
+                proto = proto.with_p_miss(p)
+                rng = key
+
+            def new_fn(x):
+                return jnp.sum(proto.aggregate(x, rng)[0])
+
+            def old_fn(x):
+                if mode == "max_noisy":
+                    with warnings.catch_warnings():
+                        warnings.simplefilter("ignore", DeprecationWarning)
+                        noise = fedocs.ChannelNoise(rng=key, p_miss=p)
+                    return jnp.sum(fedocs.aggregate(x, mode, noise=noise,
+                                                    noise_bits=8))
+                return jnp.sum(fedocs.aggregate(x, mode, noise_bits=8))
+
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", DeprecationWarning)
+                old_out, old_grad = jax.value_and_grad(old_fn)(h)
+            new_out, new_grad = jax.value_and_grad(new_fn)(h)
+            assert np.array_equal(np.asarray(old_out),
+                                  np.asarray(new_out)), mode
+            assert np.array_equal(np.asarray(old_grad),
+                                  np.asarray(new_grad)), mode
+    sweep(prop, list(seeds(4)), "seed")
+
+
+@pytest.mark.parametrize("backend", ocs.NOISY_BACKENDS)
+def test_ocs_accounting_matches_contention_core(backend):
+    """Protocol.aggregate's accounting == the NoisyOCSResult counters of the
+    very contention core run the string-mode path executes (both backends)."""
+    h = jnp.asarray(random_floats(3, (4, 9, 3), specials=False))
+    key = jax.random.PRNGKey(7)
+    p = jnp.float32(0.3)
+    proto = Protocol.ocs(8, p_miss=p, backend=backend)
+    pooled, acct = proto.aggregate(h, key)
+
+    flat = h.reshape(4, -1)
+    id_bits = ocs.host_id_bits(4)
+    res = ocs.ocs_maxpool_noisy_core(
+        flat, jnp.ones((4,), bool), id_bits, key, p, bits=8,
+        max_id_bits=id_bits, max_rounds=3, backend=backend)
+    assert int(acct.rounds) == int(res.rounds)
+    assert int(acct.collisions) == int(res.collisions)
+    assert int(acct.contention_slots) == int(res.contention_slots)
+    assert float(acct.correct_frac) == pytest.approx(
+        float(jnp.mean(res.correct.astype(jnp.float32))))
+    # and the pooled value equals the non-accounting aggregation law
+    assert np.array_equal(
+        np.asarray(pooled),
+        np.asarray(fedocs.maxpool_noisy(h, key, p, 8, 3, backend)))
+
+
+def test_ocs_backends_bitwise_interchangeable_through_protocol():
+    h = jnp.asarray(random_floats(5, (4, 8, 4), specials=False))
+    key = jax.random.PRNGKey(2)
+    outs = {}
+    for backend in ocs.NOISY_BACKENDS:
+        proto = Protocol.ocs(8, p_miss=jnp.float32(0.2), backend=backend)
+        pooled, acct = proto.aggregate(h, key)
+        grad = jax.grad(lambda x: jnp.sum(proto.aggregate(x, key)[0]))(h)
+        outs[backend] = (np.asarray(pooled), np.asarray(grad),
+                         jax.tree.map(np.asarray, acct))
+    a, b = outs["scan"], outs["pallas"]
+    assert np.array_equal(a[0], b[0])
+    assert np.array_equal(a[1], b[1])
+    for x, y in zip(jax.tree.leaves(a[2]), jax.tree.leaves(b[2])):
+        assert np.array_equal(x, y)
+
+
+def test_accounting_zero_for_ideal_kinds():
+    h = jnp.asarray(random_floats(0, (3, 5), specials=False))
+    for proto in (Protocol.sum(), Protocol.max(), Protocol.ideal_max(8),
+                  Protocol.mean(), Protocol.concat()):
+        _, acct = proto.aggregate(h)
+        assert int(acct.rounds) == 0 and int(acct.collisions) == 0
+        assert int(acct.contention_slots) == 0
+        assert float(acct.correct_frac) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# comm_load consolidation + output_dim
+# ---------------------------------------------------------------------------
+
+def test_comm_load_payload_bits_single_source_of_truth():
+    # quantized kinds: the winner transmits its D-bit code
+    for bits in (8, 16):
+        got = Protocol.ideal_max(bits).comm_load(16, 64)
+        ref = channel.ocs_load(
+            16, 64, bits=bits, cfg=channel.ChannelConfig(payload_bits=bits))
+        assert got == ref
+        assert Protocol.ocs(bits, p_miss=0.0).comm_load(16, 64) == ref
+    # plain max: D bits drive contention only, payload is a full float
+    assert Protocol.max(bits=16).comm_load(16, 64) == channel.ocs_load(
+        16, 64, bits=16)
+    # explicit override wins (the sweep's §IV float-payload convention)
+    assert Protocol.ocs(8, p_miss=0.0, payload_bits=32).comm_load(
+        16, 64) == channel.ocs_load(
+            16, 64, bits=8, cfg=channel.ChannelConfig(payload_bits=32))
+    # baselines
+    assert Protocol.mean().comm_load(16, 64) == channel.mean_load(16, 64)
+    assert Protocol.sum().comm_load(16, 64) == channel.mean_load(16, 64)
+    assert Protocol.concat().comm_load(16, 64) == channel.concat_load(16, 64)
+    # n_channels rides the protocol into the latency divider
+    ofdma = Protocol.ideal_max(8, n_channels=4).comm_load(16, 64)
+    assert ofdma.latency_slots == channel.ocs_load(
+        16, 64, bits=8,
+        cfg=channel.ChannelConfig(payload_bits=8, n_channels=4)).latency_slots
+
+
+def test_vertical_comm_load_dispatches_off_protocol():
+    base = vertical.VerticalConfig(
+        n_workers=4, input_dim=32, encoder_dims=(16,), embed_dim=8,
+        head_dims=(16,), output_dim=10, task="classification")
+    for agg, ref in (
+            ("max", channel.ocs_load(4, 8, bits=16)),
+            ("max_q8", channel.ocs_load(
+                4, 8, bits=8, cfg=channel.ChannelConfig(payload_bits=8))),
+            ("mean", channel.mean_load(4, 8)),
+            ("concat", channel.concat_load(4, 8)),
+            (Protocol.ocs(8, p_miss=0.0), channel.ocs_load(
+                4, 8, bits=8, cfg=channel.ChannelConfig(payload_bits=8))),
+    ):
+        cfg = dataclasses.replace(base, aggregation=agg)
+        assert vertical.comm_load(cfg) == ref, agg
+
+
+def test_scenario_protocol_round_trip():
+    from repro.sim.scenarios import Scenario
+    s = Scenario("t/het", n_workers=4, bits=8, p_miss=(0.0, 0.1, 0.1, 0.3),
+                 n_channels=2)
+    proto = s.protocol(max_rounds=5, backend="scan")
+    assert proto.kind == "ocs" and proto.bits == 8
+    assert proto.max_rounds == 5 and proto.n_channels == 2
+    assert np.array_equal(np.asarray(proto.p_miss),
+                          np.asarray(s.p_miss_per_worker(), np.float32))
+    # sweep cells keep the paper's float-payload accounting
+    assert proto.resolved_payload_bits() == 32
+    assert proto.comm_load(4, 64) == channel.ocs_load(
+        4, 64, bits=8, cfg=channel.ChannelConfig(n_channels=2))
+
+
+def test_output_dim():
+    assert Protocol.concat().output_dim(4, 8) == 32
+    assert Protocol.max().output_dim(4, 8) == 8
+    assert Protocol.ocs(8).output_dim(4, 8) == 8
+    with pytest.warns(DeprecationWarning):
+        assert fedocs.output_dim("concat", 4, 8) == 32
+
+
+# ---------------------------------------------------------------------------
+# BitsSchedule policies
+# ---------------------------------------------------------------------------
+
+def test_fixed_bits_policy_is_constant():
+    s = FixedBits(8)
+    assert s.candidates == (8,)
+    st = s.init_state()
+    for _ in range(3):
+        st, idx = s.update(st, {"collision_frac": jnp.float32(0.9)})
+        assert int(idx) == 0
+
+
+def test_collision_adaptive_policy_escalates_and_deescalates():
+    s = CollisionAdaptiveBits((8, 12, 16), escalate=0.2, deescalate=0.05,
+                              decay=0.0)     # decay 0: EMA == last reading
+    st = s.init_state()
+    st, idx = s.update(st, {"collision_frac": jnp.float32(0.5)})
+    assert int(idx) == 1                     # hot channel: escalate
+    st, idx = s.update(st, {"collision_frac": jnp.float32(0.5)})
+    assert int(idx) == 2
+    st, idx = s.update(st, {"collision_frac": jnp.float32(0.5)})
+    assert int(idx) == 2                     # clamped at the deepest code
+    st, idx = s.update(st, {"collision_frac": jnp.float32(0.0)})
+    assert int(idx) == 1                     # quiet channel: back off
+    st, idx = s.update(st, {"collision_frac": jnp.float32(0.1)})
+    assert int(idx) == 1                     # hysteresis band: hold
+
+
+def test_schedule_validation():
+    with pytest.raises(ValueError):
+        BitsSchedule(candidates=())
+    with pytest.raises(ValueError):
+        BitsSchedule(candidates=(8,), init_index=1)
+    with pytest.raises(ValueError):
+        CollisionAdaptiveBits((8, 64))
+    with pytest.raises(ValueError):
+        CollisionAdaptiveBits((8, 16), escalate=0.1, deescalate=0.2)
+    with pytest.raises(ValueError):
+        CollisionAdaptiveBits((8, 16), decay=1.0)
+
+
+# ---------------------------------------------------------------------------
+# the scheduled fused engine
+# ---------------------------------------------------------------------------
+
+SCHED_TINY = tc.CurveConfig(bits=(8,), p_miss=(0.0, 0.3), steps=8, batch=16,
+                            n_train=128, n_val=64, hw=8, encoder_dims=(8,),
+                            embed_dim=8, head_dims=(8,), log_every=4)
+
+
+def test_fixed_schedule_reproduces_run_curves_bit_for_bit():
+    """The scheduled engine is a strict generalization: FixedBits(8) trains
+    the exact run_curves(bits=(8,)) noisy-lane trajectory in ONE dispatch."""
+    plain = tc.run_curves(SCHED_TINY)
+    tc.reset_trace_counts()
+    tc.reset_dispatch_counts()
+    sched = tc.run_scheduled_curves(SCHED_TINY, FixedBits(8))
+    assert tc.trace_counts()["sched"] == 1
+    assert tc.dispatch_counts() == {"fused": 0, "sched": 1}
+    assert np.array_equal(sched.acc, plain.acc[0])
+    assert np.array_equal(sched.nll, plain.nll[0])
+    assert np.array_equal(sched.loss_history, plain.loss_history[0])
+    assert np.array_equal(sched.bits_per_step, np.full(8, 8))
+    for x, y in zip(jax.tree.leaves(sched.params),
+                    jax.tree.leaves(plain.noisy_params[0])):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_collision_adaptive_schedule_end_to_end_one_dispatch():
+    """Acceptance: CollisionAdaptiveBits runs inside the fused scan engine,
+    ONE dispatch for the whole run, every chosen depth a candidate."""
+    cfg = dataclasses.replace(SCHED_TINY, bits=(8, 16),
+                              p_miss=(0.1, (0.0, 0.1, 0.1, 0.3), 0.4))
+    schedule = CollisionAdaptiveBits((8, 16), escalate=0.01, deescalate=0.0,
+                                     decay=0.0)
+    tc.reset_dispatch_counts()
+    out = tc.run_scheduled_curves(cfg, schedule)
+    assert tc.dispatch_counts()["sched"] == 1
+    assert out.bits_per_step.shape == (cfg.steps,)
+    assert set(np.unique(out.bits_per_step)) <= {8, 16}
+    assert out.bits_per_step[0] == 8          # starts at the init candidate
+    # lossy lanes collide, so the hair-trigger policy must escalate
+    assert (out.bits_per_step == 16).any()
+    assert np.isfinite(out.acc).all() and np.isfinite(out.nll).all()
+    assert out.acc.shape == (3,)
+    assert np.isfinite(out.collision_frac).all()
+    assert out.loss_history.shape == (len(cfg.logged_steps()), 3)
+
+
+def test_scheduled_run_is_deterministic():
+    s = CollisionAdaptiveBits((8, 16), escalate=0.05, decay=0.5)
+    a = tc.run_scheduled_curves(SCHED_TINY, s)
+    b = tc.run_scheduled_curves(SCHED_TINY, s)
+    assert np.array_equal(a.acc, b.acc)
+    assert np.array_equal(a.bits_per_step, b.bits_per_step)

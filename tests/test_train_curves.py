@@ -1,18 +1,22 @@
-"""Channel-in-the-loop training curves (ISSUE 2 + ISSUE 4 tentpoles).
+"""Channel-in-the-loop training curves (ISSUE 2 + ISSUE 4 + ISSUE 5).
 
 Contracts under test:
   * the fused scan engine trains a whole curve grid in ONE compiled dispatch
     per ``bits`` value (trace + dispatch counters, ``<= ceil(steps/
-    log_every) + 2`` per-bits bound) and matches the legacy per-step
-    ``engine="python"`` driver bit for bit — accuracy, nll, loss history and
-    trained parameters, including per-worker ``p_miss`` lanes;
+    log_every) + 2`` per-bits bound), each lane carrying its own traced
+    ``repro.protocol.Protocol`` pytree, and is deterministic run-to-run
+    (the legacy per-step python driver is gone; its parity contract lives
+    on as the FixedBits-schedule bitwise equivalence in
+    ``tests/test_protocol.py``);
   * the ``p_miss`` lane axis shards over local devices bit-for-bit
     (forced-host-device subprocess, mirroring the sweep-engine property);
-  * the ``p_miss=0`` lane is bit-for-bit the ideal ``max_q{bits}`` run —
-    trained parameters and evaluated accuracy;
+  * the ``p_miss=0`` lane is bit-for-bit the ideal
+    ``Protocol.ideal_max(bits)`` run — trained parameters and evaluated
+    accuracy;
   * record/row emission through ``repro.sim.results``;
-  * the rng-threaded train step, donated train-state carries, and the
-    trainer hook behind the curve runner.
+  * the rng-threaded train step (its channel state now the ``(key,
+    Protocol)`` tuple), donated train-state carries, and the trainer hook
+    behind the curve runner.
 """
 
 import dataclasses
@@ -23,9 +27,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import fedocs, vertical
+from repro.core import vertical
 from repro.core.vertical import VerticalConfig
 from repro.optim import optimizers, schedules
+from repro.protocol import Protocol
 from repro.sim import results as sim_results
 from repro.sim import train_curves as tc
 from repro.train.train_step import make_train_step
@@ -51,36 +56,22 @@ def test_scan_engine_one_dispatch_per_bits_value():
     traces, disp = tc.trace_counts(), tc.dispatch_counts()
     assert traces["fused"] == 2, traces
     assert disp["fused"] == 2, disp
-    # nothing fell back to the per-step driver
+    # nothing fell back to another driver
     assert all(v == 0 for k, v in disp.items() if k != "fused"), disp
     # the ISSUE bound: <= ceil(steps/log_every) + 2 dispatches per bits
     bound = math.ceil(cfg.steps / cfg.log_every) + 2
     assert disp["fused"] / len(cfg.bits) <= bound
 
 
-def test_python_engine_dispatch_accounting_and_ratio():
-    """The legacy driver costs 2*steps + 2 dispatches per bits value; the
-    scan engine beats it by far more than the 3x acceptance floor."""
-    cfg = dataclasses.replace(TINY, engine="python")
-    tc.reset_trace_counts()
-    tc.reset_dispatch_counts()
-    tc.run_curves(cfg)
-    traces, disp = tc.trace_counts(), tc.dispatch_counts()
-    assert traces["noisy_step"] == 1 and traces["ideal_step"] == 1, traces
-    assert traces["noisy_eval"] == 1 and traces["ideal_eval"] == 1, traces
-    per_bits_python = sum(disp.values()) / len(cfg.bits)
-    assert per_bits_python == 2 * cfg.steps + 2, disp
-    assert per_bits_python / 1 >= 3          # scan engine: 1 per bits
-
-
-def test_scan_engine_matches_python_engine_bit_for_bit():
-    """Tentpole acceptance: same batch stream, same sensing streams, same
-    compiled math — the fused engine IS the python engine, including a
-    heterogeneous per-worker near/far lane."""
+def test_heterogeneous_lane_grid_trains_deterministically():
+    """Scan-engine invariant (absorbed from the removed python-engine
+    parity suite): a grid mixing scalar and per-worker near/far lanes
+    trains to identical results on repeat runs — the whole trajectory is a
+    pure function of the config's key streams."""
     grid = dataclasses.replace(TINY,
                                p_miss=(0.0, (0.0, 0.1, 0.1, 0.3), 0.3))
-    a = tc.run_curves(grid)                                       # scan
-    b = tc.run_curves(dataclasses.replace(grid, engine="python"))
+    a = tc.run_curves(grid)
+    b = tc.run_curves(grid)
     assert np.array_equal(a.acc, b.acc)
     assert np.array_equal(a.nll, b.nll)
     assert np.array_equal(a.acc_ideal, b.acc_ideal)
@@ -92,6 +83,9 @@ def test_scan_engine_matches_python_engine_bit_for_bit():
                    (a.ideal_params, b.ideal_params)):
         for x, y in zip(jax.tree.leaves(pa[0]), jax.tree.leaves(pb[0])):
             assert np.array_equal(np.asarray(x), np.asarray(y))
+    # the noisy lanes really did see different channels (lane 0 vs lane 2)
+    assert not np.array_equal(a.loss_history[0, :, 0],
+                              a.loss_history[0, :, 2])
 
 
 def test_sharded_curve_lanes_match_vmap_path():
@@ -193,11 +187,16 @@ def test_curve_config_validation():
         tc.CurveConfig(p_miss=(0.0, (0.1, 0.2, 0.3, 1.5)))
     with pytest.raises(ValueError):
         tc.CurveConfig(backend="scan", p_miss=())
-    with pytest.raises(ValueError):
-        tc.CurveConfig(engine="per_step")     # unknown curve driver
-    with pytest.raises(ValueError):           # legacy driver has no lanes
-        tc.run_curves(dataclasses.replace(TINY, engine="python"),
-                      n_devices=2)
+    with pytest.raises(TypeError):            # the legacy python driver
+        tc.CurveConfig(engine="python")       # is gone (one release passed)
+
+
+def test_curve_config_protocol_template():
+    proto = TINY.protocol(8)
+    assert proto.kind == "ocs" and proto.bits == 8
+    assert proto.max_rounds == TINY.max_rounds
+    assert proto.backend == TINY.backend
+    assert proto.p_miss is None               # lanes bind it per call
 
 
 def test_curve_per_worker_lanes_broadcast():
@@ -232,34 +231,36 @@ def test_curve_pallas_backend_matches_scan_bit_for_bit():
 def _tiny_step_fixture():
     vcfg = VerticalConfig(n_workers=2, input_dim=4, encoder_dims=(4,),
                           embed_dim=4, head_dims=(4,), output_dim=2,
-                          task="classification", aggregation="max_noisy",
-                          noise_bits=8, tie_break="first")
+                          task="classification",
+                          aggregation=Protocol.ocs(bits=8))
     params = vertical.init(vcfg, jax.random.PRNGKey(0))
     opt = optimizers.adamw(schedules.linear_warmup_cosine(1e-3, 1, 4))
     views = jnp.asarray(np.random.default_rng(0)
                         .standard_normal((2, 8, 4)).astype(np.float32))
     labels = jnp.zeros((8,), jnp.int32)
 
-    def loss(values, batch, noise):
+    def loss(values, batch, chan):
         v, y = batch                 # batch-leading for microbatch splitting
+        rng, proto = chan
         return vertical.loss_fn(vcfg, values, jnp.swapaxes(v, 0, 1), y,
-                                noise=noise)
+                                rng=rng, protocol=proto)
 
     batch = (jnp.swapaxes(views, 0, 1), labels)      # (B, N, d)
-    noise = fedocs.ChannelNoise(rng=jax.random.PRNGKey(3),
-                                p_miss=jnp.float32(0.2))
-    return params, opt, loss, batch, noise
+    chan = (jax.random.PRNGKey(3),
+            Protocol.ocs(bits=8, p_miss=jnp.float32(0.2)))
+    return params, opt, loss, batch, chan
 
 
 def test_train_step_with_rng_microbatches():
-    """with_rng threading: microbatches receive decorrelated keys and the
-    accumulated path stays consistent with the single-batch contract."""
-    params, opt, loss, batch, noise = _tiny_step_fixture()
+    """with_rng threading: microbatches receive decorrelated keys (the
+    Protocol's p_miss leaf passes through untouched) and the accumulated
+    path stays consistent with the single-batch contract."""
+    params, opt, loss, batch, chan = _tiny_step_fixture()
     step1 = make_train_step(loss, opt, with_rng=True)
     step2 = make_train_step(loss, opt, microbatches=2, with_rng=True)
     state = opt.init(params)
-    v1, _, m1 = jax.jit(step1)(params, state, batch, noise)
-    v2, _, m2 = jax.jit(step2)(params, state, batch, noise)
+    v1, _, m1 = jax.jit(step1)(params, state, batch, chan)
+    v2, _, m2 = jax.jit(step2)(params, state, batch, chan)
     for m in (m1, m2):
         assert np.isfinite(float(m["loss_mean"]))
     # both produce finite updated params of identical structure
@@ -271,15 +272,15 @@ def test_train_step_with_rng_microbatches():
 def test_train_step_donated_carries():
     """donate=True: same math, but the params/opt-state input buffers are
     consumed by the dispatch (updated in place, no double-buffering)."""
-    params, opt, loss, batch, noise = _tiny_step_fixture()
+    params, opt, loss, batch, chan = _tiny_step_fixture()
     plain = make_train_step(loss, opt, with_rng=True)
-    v0, s0, _ = jax.jit(plain)(params, opt.init(params), batch, noise)
+    v0, s0, _ = jax.jit(plain)(params, opt.init(params), batch, chan)
 
     donated = make_train_step(loss, opt, with_rng=True, donate=True)
     p_in = jax.tree.map(lambda x: jnp.array(x, copy=True), params)
     s_in = opt.init(p_in)
     in_leaves = jax.tree.leaves((p_in, s_in))
-    v1, s1, _ = donated(p_in, s_in, batch, noise)
+    v1, s1, _ = donated(p_in, s_in, batch, chan)
     for x, y in zip(jax.tree.leaves((v0, s0)), jax.tree.leaves((v1, s1))):
         assert np.array_equal(np.asarray(x), np.asarray(y))
     assert all(x.is_deleted() for x in in_leaves)
@@ -289,10 +290,10 @@ def test_trainer_channel_rng_hook():
     """trainer.train drives a stochastic (max_noisy) loss via
     channel_rng_seed; the run is reproducible step-for-step (and the donated
     carries never consume the caller's init across repeat runs)."""
+    proto = Protocol.ocs(bits=8, p_miss=jnp.float32(0.1))
     vcfg = VerticalConfig(n_workers=2, input_dim=4, encoder_dims=(4,),
                           embed_dim=4, head_dims=(4,), output_dim=2,
-                          task="classification", aggregation="max_noisy",
-                          noise_bits=8, tie_break="first")
+                          task="classification", aggregation=proto)
     init = vertical.init(vcfg, jax.random.PRNGKey(0))
     opt = optimizers.adamw(schedules.linear_warmup_cosine(1e-3, 1, 4))
     rng = np.random.default_rng(0)
@@ -300,9 +301,8 @@ def test_trainer_channel_rng_hook():
     labels = jnp.asarray(rng.integers(0, 2, (8,)), jnp.int32)
 
     def loss(values, batch, key):
-        noise = fedocs.ChannelNoise(rng=key, p_miss=jnp.float32(0.1))
         v, y = batch
-        return vertical.loss_fn(vcfg, values, v, y, noise=noise)
+        return vertical.loss_fn(vcfg, values, v, y, rng=key)
 
     tcfg = TrainerConfig(steps=4, log_every=2, channel_rng_seed=11)
     runs = [train(loss, init, opt, lambda step: (views, labels), tcfg)

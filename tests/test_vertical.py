@@ -7,6 +7,7 @@ import pytest
 
 from repro.core import aggregators, vertical
 from repro.core.vertical import VerticalConfig
+from repro.protocol import Protocol
 
 
 def _cfg(**kw):
@@ -24,8 +25,11 @@ def _data(cfg, b=6, seed=0):
     return views, labels
 
 
-@pytest.mark.parametrize("agg", ["max", "mean", "concat", "sum", "max_q8"])
+@pytest.mark.parametrize("agg", ["max", "mean", "concat", "sum", "max_q8",
+                                 Protocol.max(), Protocol.ideal_max(16),
+                                 Protocol.concat()])
 def test_forward_shapes_all_aggregations(agg):
+    """String sugar and first-class Protocol values are interchangeable."""
     cfg = _cfg(aggregation=agg)
     params = vertical.init(cfg, jax.random.PRNGKey(0))
     views, labels = _data(cfg)
@@ -35,6 +39,35 @@ def test_forward_shapes_all_aggregations(agg):
     assert np.isfinite(float(loss))
     g = jax.grad(lambda p: vertical.loss_fn(cfg, p, views, labels)[0])(params)
     assert all(np.isfinite(np.asarray(t)).all() for t in jax.tree.leaves(g))
+
+
+def test_forward_ocs_protocol_channel_in_the_loop():
+    """An OCS protocol config trains through the simulated channel: rng is
+    threaded per call, metrics surface the channel telemetry, and the
+    string-sugar config ("max_noisy" + noise_* fields) resolves to the
+    identical computation."""
+    proto = Protocol.ocs(bits=8, p_miss=jnp.float32(0.2))
+    cfg = _cfg(aggregation=proto)
+    params = vertical.init(cfg, jax.random.PRNGKey(0))
+    views, labels = _data(cfg)
+    key = jax.random.PRNGKey(5)
+    loss, m = vertical.loss_fn(cfg, params, views, labels, rng=key)
+    assert np.isfinite(float(loss))
+    assert {"chan_rounds", "chan_collision_frac",
+            "chan_correct_frac"} <= set(m)
+    # legacy string sugar resolves to the same protocol semantics
+    sugar = _cfg(aggregation="max_noisy", noise_bits=8)
+    loss2, _ = vertical.loss_fn(
+        sugar, params, views, labels, rng=key,
+        protocol=sugar.resolve_protocol().with_p_miss(jnp.float32(0.2)))
+    assert float(loss) == float(loss2)
+    # per-call protocol override: the p_miss=0 lane is the ideal pool
+    l0, _ = vertical.loss_fn(cfg, params, views, labels, rng=key,
+                             protocol=proto.with_p_miss(jnp.float32(0.0)))
+    li, _ = vertical.loss_fn(
+        _cfg(aggregation=Protocol.ideal_max(8, tie_break="first")),
+        params, views, labels)
+    assert float(l0) == float(li)
 
 
 def test_prediction_level_baselines():
@@ -60,8 +93,9 @@ def test_table1_registry_complete():
     base = _cfg()
     cfgs = aggregators.all_configs(base)
     assert set(cfgs) == set(aggregators.TABLE1_METHODS)
-    assert cfgs["fedocs"].aggregation == "max"
-    assert cfgs["concat_workers_embed"].aggregation == "concat"
+    # embedding-level methods carry their fusion law as a Protocol value
+    assert cfgs["fedocs"].aggregation.kind == "max"
+    assert cfgs["concat_workers_embed"].aggregation.kind == "concat"
     assert cfgs["concat_workers_embed"].head_input_dim() == 4 * 8
     assert cfgs["fedocs"].head_input_dim() == 8
     assert cfgs["avg_workers_preds"].prediction_level
