@@ -7,14 +7,16 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_comm      paper §I claim (O(K) vs O(N*K) comm; ICI fusion bytes)
   bench_sweep     batched scenario sweep (repro.sim) over N x bits x p_miss
   bench_curves    channel-in-the-loop training: accuracy vs p_miss x bits
+  bench_serve     channel-in-the-loop serving: tokens/sec + latency vs p_miss
   bench_contention  noisy-contention backends: lax.scan vs fused Pallas
   bench_kernels   Pallas kernel micro-timings (interpret mode)
   bench_roofline  roofline terms per (arch x shape) from dry-run artifacts
 
 Full (non ``--fast``) runs additionally persist their numbers as canonical
 ``BENCH_*.json`` files at the repo root (``BENCH_curves.json``,
-``BENCH_contention.json``), so the perf trajectory is diffable across PRs;
-``--fast`` leaves the committed full-scale numbers untouched.
+``BENCH_serve.json``, ``BENCH_contention.json``), so the perf trajectory
+is diffable across PRs; ``--fast`` leaves the committed full-scale numbers
+untouched.
 """
 
 from __future__ import annotations
@@ -30,7 +32,7 @@ def main() -> None:
     fast = "--fast" in sys.argv
     from benchmarks import (bench_comm, bench_contention, bench_curves,
                             bench_fig2, bench_kernels, bench_roofline,
-                            bench_sweep, bench_table1)
+                            bench_serve, bench_sweep, bench_table1)
     print("name,us_per_call,derived")
     t0 = time.time()
     for row in bench_comm.run():
@@ -43,6 +45,11 @@ def main() -> None:
             smoke=fast,
             bench_json_path=None if fast
             else str(REPO_ROOT / "BENCH_curves.json")):
+        print(row)
+    for row in bench_serve.run(
+            smoke=fast,
+            bench_json_path=None if fast
+            else str(REPO_ROOT / "BENCH_serve.json")):
         print(row)
     for row in bench_contention.run(
             smoke=fast,

@@ -1,6 +1,9 @@
 """Batched serving demo: train a tiny LM briefly, then serve a stream of
 requests through the slot-based continuous-batching engine
-(prefill -> decode ticks -> retire/refill).
+(prefill -> decode ticks -> retire/refill) — first channel-free, then with
+the simulated OCS wireless channel inside every decode tick (same engine,
+same compiled tick per structure; the channel run reports the airtime and
+uplink bill each completion carries).
 
   PYTHONPATH=src python examples/serve_demo.py --requests 8 --slots 4
 """
@@ -15,7 +18,8 @@ from repro.data import pipeline
 from repro.models import model as M
 from repro.optim import optimizers, schedules
 from repro.parallel.sharding import split_tree
-from repro.serve.engine import Request, ServeEngine
+from repro.protocol import Protocol
+from repro.serve.engine import Request, ServeConfig, ServeEngine
 from repro.train import trainer
 from repro.train.trainer import TrainerConfig
 
@@ -26,6 +30,8 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--train-steps", type=int, default=60)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--p-miss", type=float, default=0.1,
+                    help="sensing-miss probability for the channel run")
     args = ap.parse_args()
 
     cfg = get_reduced("qwen1.5-0.5b", n_layers=2, d_model=128, n_heads=4,
@@ -42,8 +48,8 @@ def main():
     print(f"trained {args.train_steps} steps, "
           f"nll {res.history[0]['nll']:.3f} -> {res.history[-1]['nll']:.3f}")
 
-    engine = ServeEngine(m, res.values, batch_slots=args.slots, max_seq=128,
-                         eos_id=-1)
+    config = ServeConfig(batch_slots=args.slots, max_seq=128, eos_id=-1)
+    engine = ServeEngine(m, res.values, config)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, 512, 8).astype(np.int32),
@@ -55,6 +61,18 @@ def main():
         print(f"request {rid}: prompt_len={c.prompt_len} "
               f"generated={c.tokens}")
     print(f"served {len(outs)} requests on {args.slots} slots.")
+
+    # same engine, channel in the loop: every mlp-FFN fusion aggregates
+    # over the simulated OCS channel, and completions bill the airtime
+    proto = Protocol.ocs(bits=8, p_miss=np.full(
+        (cfg.n_workers,), args.p_miss, np.float32))
+    chan_outs = engine.run(reqs, protocol=proto)
+    for rid in sorted(chan_outs):
+        c = chan_outs[rid]
+        print(f"request {rid} under p_miss={args.p_miss}: "
+              f"latency={c.latency_us(config.clock):.0f}us "
+              f"({c.latency_ticks} ticks + {c.channel_slots} slots), "
+              f"uplink={c.uplink_bits} bits")
 
 
 if __name__ == "__main__":

@@ -39,23 +39,20 @@ arguments, so one compiled train step serves a whole miss-probability axis;
 at ``p_miss=0`` the forward AND the vjp coincide bit-for-bit with
 ``maxpool_quantized(tie_break='first')`` (property-tested).
 
-The string-mode dispatcher :func:`aggregate` (plus :class:`ChannelNoise` and
-:func:`output_dim`) is DEPRECATED: the protocol is now a first-class value —
-``repro.protocol.Protocol`` — carrying the same knobs as one pytree object
-with a single ``protocol.aggregate(h, rng) -> (pooled, accounting)`` entry
-point.  The shims below construct a ``Protocol`` and delegate (bit-for-bit
-identical), warn with ``DeprecationWarning``, and will be removed after one
-release.  The pooling laws themselves (``maxpool``, ``maxpool_quantized``,
-``maxpool_noisy``, ``meanpool``, ``concat``) are NOT deprecated — they are
-the primitives ``Protocol`` dispatches to.
+These pooling laws (``maxpool``, ``maxpool_quantized``, ``maxpool_noisy``,
+``meanpool``, ``concat``) are the *primitives*; the protocol itself is a
+first-class value — ``repro.protocol.Protocol`` — carrying every
+protocol-side knob as one pytree object with a single
+``protocol.aggregate(h, rng) -> (pooled, accounting)`` entry point that
+dispatches to them.  (The legacy string-mode ``aggregate``/``output_dim``
+dispatchers and the ``ChannelNoise`` carrier lived here through their
+one-release deprecation window and are now removed; ``VALID_MODES`` stays
+as the legacy mode-name vocabulary ``Protocol.from_mode`` accepts.)
 """
 
 from __future__ import annotations
 
-import dataclasses
 import functools
-import warnings
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -143,40 +140,6 @@ maxpool_quantized.defvjp(_maxpool_q_fwd, _maxpool_q_bwd)
 # channel-in-the-loop max-pool: noisy-OCS winner selection in the forward
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass(frozen=True)
-class ChannelNoise:
-    """DEPRECATED shim: a PRNG key + miss probability for ``max_noisy``.
-
-    Superseded by ``repro.protocol.Protocol`` — the protocol object carries
-    ``p_miss`` as its traced leaf and the sensing key is passed to
-    ``protocol.aggregate(h, rng)`` per call.  Constructing a ``ChannelNoise``
-    emits a ``DeprecationWarning``; consumers translate it into a
-    ``Protocol`` (bit-for-bit identical).  Removed after one release.
-    """
-
-    rng: jax.Array       # PRNG key for the per-sub-slot sensing draws
-    p_miss: jax.Array    # () or (N,) carrier-sensing miss probability
-
-    def __post_init__(self):
-        warnings.warn(
-            "repro.core.fedocs.ChannelNoise is deprecated; pass the sensing "
-            "key to repro.protocol.Protocol.ocs(bits, p_miss).aggregate(h, "
-            "rng) instead", DeprecationWarning, stacklevel=2)
-
-
-def _noise_unflatten(_aux, children):
-    # bypass __init__: pytree unflattening inside jit/vmap must not re-fire
-    # the construction-time DeprecationWarning
-    obj = object.__new__(ChannelNoise)
-    object.__setattr__(obj, "rng", children[0])
-    object.__setattr__(obj, "p_miss", children[1])
-    return obj
-
-
-jax.tree_util.register_pytree_node(
-    ChannelNoise, lambda nz: ((nz.rng, nz.p_miss), None), _noise_unflatten)
-
-
 def _maxpool_noisy_impl(h, rng, p_miss, bits, max_rounds, backend):
     """Protocol-outcome pooling: (pooled, winner one-hot mask, accounting).
 
@@ -242,7 +205,7 @@ maxpool_noisy.defvjp(_maxpool_noisy_fwd, _maxpool_noisy_bwd)
 
 
 # ---------------------------------------------------------------------------
-# baselines + dispatcher
+# baselines
 # ---------------------------------------------------------------------------
 
 def meanpool(h: jax.Array) -> jax.Array:
@@ -253,47 +216,3 @@ def concat(h: jax.Array) -> jax.Array:
     """(N, ..., K) -> (..., N*K): all-gather + feature concat (paper baseline)."""
     moved = jnp.moveaxis(h, 0, -2)                 # (..., N, K)
     return moved.reshape(h.shape[1:-1] + (h.shape[0] * h.shape[-1],))
-
-
-def aggregate(h: jax.Array, mode: str, *, tie_break: str = "all",
-              noise: Optional[ChannelNoise] = None,
-              noise_bits: int = 16,
-              noise_max_rounds: int = 3,
-              noise_backend: str = "scan") -> jax.Array:
-    """DEPRECATED string-mode dispatcher; use ``repro.protocol.Protocol``.
-
-    Constructs the equivalent ``Protocol`` and delegates — the pooled value
-    and its vjp are bit-for-bit identical to the historical dispatch for
-    every mode (property-tested); only the accounting the new entry point
-    additionally returns is dropped.  Removed after one release.
-    """
-    if mode not in VALID_MODES:
-        raise ValueError(
-            f"unknown aggregation mode {mode!r}; valid: {VALID_MODES}")
-    warnings.warn(
-        f"repro.core.fedocs.aggregate(mode={mode!r}) is deprecated; "
-        "construct a repro.protocol.Protocol (e.g. Protocol.from_mode) and "
-        "call protocol.aggregate(h, rng)", DeprecationWarning, stacklevel=2)
-    from repro.protocol import Protocol   # deferred: protocol imports fedocs
-    rng = None
-    proto = Protocol.from_mode(mode, tie_break=tie_break, bits=noise_bits,
-                               max_rounds=noise_max_rounds,
-                               backend=noise_backend)
-    if mode == "max_noisy":
-        if noise is None:
-            raise ValueError(
-                "max_noisy aggregation needs noise=ChannelNoise(rng, p_miss)")
-        proto = proto.with_p_miss(noise.p_miss)
-        rng = noise.rng
-    pooled, _acct = proto.aggregate(h, rng)
-    return pooled
-
-
-def output_dim(mode: str, n_workers: int, k: int) -> int:
-    """DEPRECATED: use ``Protocol.output_dim(n_workers, k)`` instead."""
-    warnings.warn(
-        "repro.core.fedocs.output_dim(mode, ...) is deprecated; use "
-        "repro.protocol.Protocol.output_dim(n_workers, k)",
-        DeprecationWarning, stacklevel=2)
-    from repro.protocol import Protocol   # deferred: protocol imports fedocs
-    return Protocol.from_mode(mode).output_dim(n_workers, k)

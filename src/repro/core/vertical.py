@@ -18,7 +18,7 @@ from typing import TYPE_CHECKING, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core import channel, fedocs
+from repro.core import channel
 
 # NOTE: repro.protocol imports repro.core at import time (for the
 # aggregation primitives), so the Protocol class is imported lazily inside
@@ -53,8 +53,8 @@ class VerticalConfig:
 
         A ``Protocol`` passed in ``aggregation`` is returned as-is; a legacy
         mode string is combined with the ``tie_break``/``noise_*`` fields
-        (``Protocol.from_mode`` — same semantics as the deprecated
-        ``fedocs.aggregate`` dispatch).
+        (``Protocol.from_mode`` — same semantics as the retired
+        string-mode dispatch).
         """
         from repro.protocol import Protocol
         if isinstance(self.aggregation, Protocol):
@@ -110,7 +110,7 @@ def embeddings(cfg: VerticalConfig, params: dict, views: jax.Array) -> jax.Array
 
 
 def _fuse_forward(cfg: VerticalConfig, params: dict, views: jax.Array,
-                  rng, protocol, noise):
+                  rng, protocol):
     """Shared forward: (prediction, accounting-or-None, protocol-or-None)."""
     h = embeddings(cfg, params, views)
     if cfg.prediction_level:
@@ -119,28 +119,21 @@ def _fuse_forward(cfg: VerticalConfig, params: dict, views: jax.Array,
             preds = jax.nn.softmax(preds, axis=-1)
         return jnp.mean(preds, axis=0), None, None            # Avg. Workers Preds
     proto = protocol if protocol is not None else cfg.resolve_protocol()
-    if noise is not None:            # deprecated ChannelNoise pass-through
-        proto = proto.with_p_miss(noise.p_miss)
-        rng = noise.rng
     v, acct = proto.aggregate(h, rng)
     return _mlp_apply(params["head"], v), acct, proto
 
 
 def forward(cfg: VerticalConfig, params: dict, views: jax.Array, *,
             rng: Optional[jax.Array] = None,
-            protocol: Optional[Protocol] = None,
-            noise: Optional[fedocs.ChannelNoise] = None) -> jax.Array:
+            protocol: Optional[Protocol] = None) -> jax.Array:
     """Full fusion forward: views (N, B, d) -> prediction (B, output_dim).
 
     The embeddings are fused by ``cfg.resolve_protocol()`` — or by
     ``protocol`` when given, the traced per-call override the curve engine
     uses to vmap a ``p_miss`` lane axis.  An OCS protocol additionally
     needs ``rng`` (the sensing PRNG key); both are ordinary traced values.
-    ``noise`` (a deprecated :class:`fedocs.ChannelNoise`) is accepted for
-    one release and is equivalent to ``rng=noise.rng`` plus
-    ``protocol.with_p_miss(noise.p_miss)``.
     """
-    pred, _, _ = _fuse_forward(cfg, params, views, rng, protocol, noise)
+    pred, _, _ = _fuse_forward(cfg, params, views, rng, protocol)
     return pred
 
 
@@ -155,8 +148,7 @@ def per_worker_predictions(cfg: VerticalConfig, params: dict,
 def loss_fn(cfg: VerticalConfig, params: dict, views: jax.Array,
             target: jax.Array, *,
             rng: Optional[jax.Array] = None,
-            protocol: Optional[Protocol] = None,
-            noise: Optional[fedocs.ChannelNoise] = None
+            protocol: Optional[Protocol] = None
             ) -> Tuple[jax.Array, dict]:
     """Task loss + metrics.  For an OCS fusion protocol the metrics carry
     the measured channel telemetry of this step's aggregate call
@@ -165,8 +157,7 @@ def loss_fn(cfg: VerticalConfig, params: dict, views: jax.Array,
     ``chan_collision_frac`` is a true fraction in [0, 1]: collided
     re-contention opportunities over the ``K * max_rounds`` available
     (the core bills a sub-frame once per round it stays collided)."""
-    pred, acct, proto = _fuse_forward(cfg, params, views, rng, protocol,
-                                      noise)
+    pred, acct, proto = _fuse_forward(cfg, params, views, rng, protocol)
     if cfg.task == "reconstruction":
         # Paper Eq. 2 squared error == Gaussian NLL up to constants; we report
         # per-pixel NLL with unit variance /2 convention for Fig.2 comparison.

@@ -48,6 +48,48 @@ def worker_reduce(cfg, p: dict, partial: jax.Array) -> jax.Array:
     return constrain(out, ("batch", "seq", "embed"))
 
 
+def worker_reduce_channel(cfg, p: dict, partial: jax.Array,
+                          protocol: Protocol, rng: Optional[jax.Array]):
+    """Fuse worker partials *through the simulated wireless channel*.
+
+    Instead of the config's static ``tp_fusion`` collective, the per-worker
+    partials — the paper's per-worker embeddings h_n — are pooled by an
+    explicit :class:`repro.protocol.Protocol` (a traced pytree, so rebinding
+    ``p_miss`` never recompiles).  Returns ``(fused (B,S,K), accounting)``;
+    the measured :class:`ProtocolAccounting` is what the serving engine
+    converts to per-tick airtime.  ``concat`` protocols are rejected: they
+    change the residual width and cannot stand in for an in-block fusion.
+    """
+    if protocol.kind == "concat":
+        raise ValueError(
+            "worker_reduce_channel cannot use a concat protocol: the fused "
+            "width N*K does not match the block's residual width K")
+    out, acct = protocol.aggregate(partial, rng)
+    return constrain(out, ("batch", "seq", "embed")), acct
+
+
+# -- per-tick channel-accounting accumulator (plain dict of scalars so it
+#    threads through lax.scan carries without touching ProtocolAccounting) --
+
+def chan_zeros() -> dict:
+    """Zeroed channel-accounting accumulator for one decode tick."""
+    return {"rounds": jnp.int32(0), "collisions": jnp.int32(0),
+            "contention_slots": jnp.int32(0),
+            "correct_frac_sum": jnp.float32(0.0), "calls": jnp.int32(0)}
+
+
+def chan_from_acct(acct) -> dict:
+    """One ``ProtocolAccounting`` as an accumulator entry (calls=1)."""
+    return {"rounds": acct.rounds, "collisions": acct.collisions,
+            "contention_slots": acct.contention_slots,
+            "correct_frac_sum": acct.correct_frac, "calls": jnp.int32(1)}
+
+
+def chan_merge(a: dict, b: dict) -> dict:
+    """Elementwise sum of two accumulators (same keys, same dtypes)."""
+    return {k: a[k] + b[k] for k in a}
+
+
 def worker_partial(x_grouped: jax.Array, w: jax.Array,
                    spec: str = "nbsf,nfk->nbsk") -> jax.Array:
     """Per-worker private projection: einsum batched over the worker axis."""

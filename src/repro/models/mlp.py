@@ -40,8 +40,15 @@ def mlp_init(cfg, rng, d_ff: int | None = None) -> dict:
     return p
 
 
-def mlp_apply(cfg, p: dict, x: jax.Array) -> jax.Array:
-    """x: (B, S, d) -> (B, S, d)."""
+def mlp_apply(cfg, p: dict, x: jax.Array, protocol=None, rng=None):
+    """x: (B, S, d) -> (B, S, d).
+
+    With ``protocol=None`` (default) the worker partials fuse via the
+    config's static ``tp_fusion`` collective — the historical path,
+    unchanged op for op.  With a ``repro.protocol.Protocol`` the partials
+    — the paper's per-worker embeddings h_n — instead pool *through the
+    simulated channel* and the call returns ``(out, ProtocolAccounting)``.
+    """
     d = cfg.dtype
     up = jnp.einsum("bsd,ndf->nbsf", x, p["w_up"].astype(d))
     if "w_gate" in p:
@@ -52,4 +59,6 @@ def mlp_apply(cfg, p: dict, x: jax.Array) -> jax.Array:
     hidden = constrain(hidden, ("worker", "batch", "seq", "ff_local"))
     partial = jnp.einsum("nbsf,nfe->nbse", hidden, p["w_down"].astype(d))
     partial = constrain(partial, ("worker", "batch", "seq", "embed"))
-    return fusion.worker_reduce(cfg, p, partial)
+    if protocol is None:
+        return fusion.worker_reduce(cfg, p, partial)
+    return fusion.worker_reduce_channel(cfg, p, partial, protocol, rng)

@@ -183,6 +183,39 @@ def decode_step(cfg, v, token: jax.Array, positions: jax.Array, cache: dict
     return logits, new_cache
 
 
+def decode_step_channel(cfg, v, token: jax.Array, positions: jax.Array,
+                        cache: dict, protocol, rng: jax.Array
+                        ) -> Tuple[jax.Array, dict, dict]:
+    """:func:`decode_step` with the wireless channel in the loop.
+
+    Every mlp-FFN worker fusion in the stack aggregates the per-worker
+    partials through ``protocol`` (a traced ``repro.protocol.Protocol``
+    pytree — rebinding ``p_miss`` never recompiles) under the sensing key
+    ``rng``; mixer fusions stay on the ideal ``tp_fusion`` collective.
+    Returns ``(logits, new_cache, chan)`` where ``chan`` is the summed
+    channel-accounting dict (``fusion.chan_zeros()`` layout) over the
+    tick's :func:`channel_sites` aggregate calls.
+    """
+    x = layers.embed_tokens(cfg, v["embed"], token)
+    if cfg.use_abs_pos:
+        pe = layers.sinusoidal_positions(
+            int(_max_pos(cfg, cache)), cfg.d_model).astype(x.dtype)
+        x = x + pe[positions][:, None]
+    x, new_cache, _, chan = transformer.stack_step(
+        cfg, v["blocks"], x, positions, cache, cfg.layer_plan(),
+        protocol=protocol, rng=rng)
+    x = layers.norm_apply(cfg, v["final_norm"], x)
+    logits = layers.unembed_apply(cfg, {k: v[k] for k in ("head",) if k in v},
+                                  v["embed"], x)[:, 0]
+    return logits, new_cache, chan
+
+
+def channel_sites(cfg) -> int:
+    """Channel aggregate calls per decode tick: one per mlp-FFN layer."""
+    return cfg.n_periods * sum(1 for _, ffn in cfg.layer_plan()
+                               if ffn == "mlp")
+
+
 def _max_pos(cfg, cache) -> int:
     # self-attention KV cache: (layers, B, S_max, n_kv_heads, head_dim)
     for leaf in jax.tree.leaves(cache):
@@ -267,6 +300,8 @@ def build(cfg: ModelConfig) -> types.SimpleNamespace:
         forward=functools.partial(forward, cfg),
         prefill=functools.partial(prefill, cfg),
         decode_step=functools.partial(decode_step, cfg),
+        decode_step_channel=functools.partial(decode_step_channel, cfg),
+        channel_sites=functools.partial(channel_sites, cfg),
         cache_init=functools.partial(cache_init, cfg),
         cache_axes=functools.partial(cache_axes, cfg),
         input_specs=functools.partial(input_specs, cfg),

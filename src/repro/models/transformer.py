@@ -17,7 +17,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models import attention, layers, mamba, mlp, moe, ssm
+from repro.models import attention, fusion, layers, mamba, mlp, moe, ssm
 from repro.parallel.sharding import Tagged, retag_stacked, constrain
 
 
@@ -118,9 +118,17 @@ def block_cache_axes(cfg, mixer: str, has_cross: bool) -> dict:
 
 
 def block_step(cfg, p: dict, x: jax.Array, positions: jax.Array,
-               cache: dict, mixer: str, ffn: str
-               ) -> Tuple[jax.Array, dict, jax.Array]:
-    """Decode step. x: (B,1,d). Returns (x, cache, aux)."""
+               cache: dict, mixer: str, ffn: str,
+               protocol=None, rng=None):
+    """Decode step. x: (B,1,d). Returns (x, cache, aux).
+
+    With a ``protocol`` the FFN's worker-partial fusion routes through the
+    simulated channel (``mlp_apply(protocol=, rng=)``) and the return grows
+    a fourth element — the channel-accounting dict of this block's fusion
+    site (``fusion.chan_zeros()`` for non-mlp FFNs; mixer fusions stay on
+    the ideal ``tp_fusion`` collective).  With ``protocol=None`` the ops
+    and the 3-tuple return are the historical path, unchanged.
+    """
     h = layers.norm_apply(cfg, p["norm1"], x)
     new_cache = dict(cache)
     if mixer in ("attn", "attn_nocausal"):
@@ -144,14 +152,23 @@ def block_step(cfg, p: dict, x: jax.Array, positions: jax.Array,
                                      cache["cross"], cross=True)
         x = x + out
     aux = jnp.zeros((), jnp.float32)
+    chan = None if protocol is None else fusion.chan_zeros()
     if ffn == "mlp":
         h = layers.norm_apply(cfg, p["norm2"], x)
-        x = x + mlp.mlp_apply(cfg, p["ffn"], h)
+        if protocol is None:
+            x = x + mlp.mlp_apply(cfg, p["ffn"], h)
+        else:
+            y, acct = mlp.mlp_apply(cfg, p["ffn"], h, protocol=protocol,
+                                    rng=rng)
+            x = x + y
+            chan = fusion.chan_from_acct(acct)
     elif ffn == "moe":
         h = layers.norm_apply(cfg, p["norm2"], x)
         y, aux = moe.moe_apply(cfg, p["ffn"], h)
         x = x + y
-    return x, new_cache, aux
+    if protocol is None:
+        return x, new_cache, aux
+    return x, new_cache, aux, chan
 
 
 def block_prefill(cfg, p: dict, x: jax.Array, positions: jax.Array,
@@ -245,34 +262,63 @@ def stack_full(cfg, values: dict, x: jax.Array, positions: jax.Array,
 
 
 def stack_step(cfg, values: dict, x: jax.Array, positions: jax.Array,
-               cache: dict, plan) -> Tuple[jax.Array, dict, jax.Array]:
-    """Decode step through the whole stack; cache is scanned alongside."""
+               cache: dict, plan, protocol=None, rng=None):
+    """Decode step through the whole stack; cache is scanned alongside.
+
+    With a ``protocol`` (+ ``rng``, the tick's sensing key) every mlp-FFN
+    fusion site aggregates through the simulated channel: one sensing key
+    per period rides the scan as an xs leaf (``jax.random.split`` — a
+    fold-in inside the traced body would reuse the key across periods) and
+    the per-site accounting dicts accumulate in the carry.  The return then
+    grows a fourth element, the summed channel-accounting dict of the whole
+    stack; with ``protocol=None`` the scan structure and the 3-tuple return
+    are the historical path, unchanged op for op.
+    """
+    chan_mode = protocol is not None
 
     def body(carry, xs):
-        x, aux = carry
-        period_params, period_cache = xs
+        if chan_mode:
+            x, aux, chan = carry
+            period_params, period_cache, k = xs
+        else:
+            x, aux = carry
+            period_params, period_cache = xs
         new_cache = {}
         for i, (mixer, ffn) in enumerate(plan):
             key = f"pos{i}"
-            x, c, a = block_step(cfg, period_params[key], x, positions,
-                                 period_cache[key], mixer, ffn)
+            if chan_mode:
+                x, c, a, ch = block_step(
+                    cfg, period_params[key], x, positions, period_cache[key],
+                    mixer, ffn, protocol=protocol,
+                    rng=jax.random.fold_in(k, i))
+                chan = fusion.chan_merge(chan, ch)
+            else:
+                x, c, a = block_step(cfg, period_params[key], x, positions,
+                                     period_cache[key], mixer, ffn)
             new_cache[key] = c
             aux = aux + a
-        return (x, aux), new_cache
+        carry = (x, aux, chan) if chan_mode else (x, aux)
+        return carry, new_cache
 
+    n = jax.tree.leaves(values)[0].shape[0]
+    init = (x, jnp.zeros((), jnp.float32))
+    xs = (values, cache)
+    if chan_mode:
+        init = init + (fusion.chan_zeros(),)
+        xs = xs + (jax.random.split(rng, n),)
     if cfg.scan_layers:
-        (x, aux), new_cache = jax.lax.scan(
-            body, (x, jnp.zeros((), jnp.float32)), (values, cache))
+        carry, new_cache = jax.lax.scan(body, init, xs)
     else:
-        n = jax.tree.leaves(values)[0].shape[0]
-        carry = (x, jnp.zeros((), jnp.float32))
+        carry = init
         outs = []
         for i in range(n):
-            carry, c = body(carry, (jax.tree.map(lambda v: v[i], values),
-                                    jax.tree.map(lambda v: v[i], cache)))
+            carry, c = body(carry, jax.tree.map(lambda v: v[i], xs))
             outs.append(c)
         new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
-        x, aux = carry
+    if chan_mode:
+        x, aux, chan = carry
+        return x, new_cache, aux, chan
+    x, aux = carry
     return x, new_cache, aux
 
 

@@ -1,37 +1,19 @@
 """In-model aggregation laws: values, gradients, tie handling.
 
 The pooling primitives (``maxpool``/``maxpool_quantized``/``maxpool_noisy``)
-are first-class and tested directly; the string-mode ``aggregate`` /
-``output_dim`` / ``ChannelNoise`` shims are deprecated (DeprecationWarning,
-delegating to ``repro.protocol.Protocol``) and exercised here only under
-``pytest.warns`` — full shim-vs-Protocol parity lives in
-``tests/test_protocol.py``.
+are first-class and tested directly; the dispatching surface over them is
+``repro.protocol.Protocol`` (the string-mode shims finished their
+deprecation window and are gone — ``tests/test_protocol.py`` covers the
+Protocol entry points).
 """
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from proptest import random_floats, seeds, sweep
 from repro.core import fedocs, quantize as qz
 from repro.protocol import Protocol
-
-
-def test_aggregate_shim_modes_shapes():
-    h = jnp.asarray(random_floats(0, (4, 3, 8)))
-    with pytest.warns(DeprecationWarning, match=r"^repro\.core\.fedocs"):
-        assert fedocs.aggregate(h, "max").shape == (3, 8)
-    with pytest.warns(DeprecationWarning):
-        assert fedocs.aggregate(h, "mean").shape == (3, 8)
-    with pytest.warns(DeprecationWarning):
-        assert fedocs.aggregate(h, "sum").shape == (3, 8)
-    with pytest.warns(DeprecationWarning):
-        assert fedocs.aggregate(h, "concat").shape == (3, 32)
-    with pytest.warns(DeprecationWarning):
-        assert fedocs.output_dim("concat", 4, 8) == 32
-    with pytest.warns(DeprecationWarning):
-        assert fedocs.output_dim("max", 4, 8) == 8
 
 
 def test_maxpool_matches_jnp():
@@ -147,21 +129,6 @@ def test_maxpool_noisy_traced_p_miss_single_compilation():
                           np.asarray(fedocs.maxpool_quantized(h, 8, "first")))
 
 
-def test_aggregate_max_noisy_shim_dispatch():
-    h = jnp.asarray(random_floats(1, (4, 3, 8), specials=False))
-    with pytest.warns(DeprecationWarning):
-        noise = fedocs.ChannelNoise(rng=jax.random.PRNGKey(1),
-                                    p_miss=jnp.float32(0.1))
-    with pytest.warns(DeprecationWarning):
-        out = fedocs.aggregate(h, "max_noisy", noise=noise, noise_bits=8)
-    assert out.shape == (3, 8)
-    with pytest.warns(DeprecationWarning):
-        assert fedocs.output_dim("max_noisy", 4, 8) == 8
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(ValueError):
-            fedocs.aggregate(h, "max_noisy")  # noise is mandatory
-
-
 def test_mean_and_sum_grads():
     h = jnp.asarray(random_floats(2, (4, 8)))
     gm = np.asarray(jax.grad(lambda x: jnp.sum(fedocs.meanpool(x)))(h))
@@ -170,8 +137,3 @@ def test_mean_and_sum_grads():
         lambda x: jnp.sum(Protocol.sum().aggregate(x)[0]))(h))
     assert np.allclose(gs, 1.0)
 
-
-def test_unknown_mode_raises():
-    # validation precedes the deprecation warning: no warns wrapper needed
-    with pytest.raises(ValueError):
-        fedocs.aggregate(jnp.zeros((2, 2)), "median")

@@ -5,10 +5,8 @@ Contracts under test:
     (``p_miss`` is the ONLY leaf; everything else is static metadata), jit
     with ZERO recompiles across a ``p_miss`` lane axis, vmap over
     lane-stacked Protocol pytrees;
-  * shim-vs-Protocol bit-for-bit parity — forward, vjp AND accounting —
-    for every legacy string mode on both contention backends, plus
-    ``DeprecationWarning`` emission from the ``fedocs.aggregate`` /
-    ``ChannelNoise`` / ``fedocs.output_dim`` shims;
+  * accounting parity with the contention core for every legacy string
+    mode (via ``Protocol.from_mode``) on both contention backends;
   * ``Protocol.comm_load`` as the one payload-bits source of truth
     (consolidating the ``channel.py`` loaders) and ``Protocol.output_dim``;
   * the ``BitsSchedule`` policy hook: pure-policy unit behaviour, and the
@@ -19,7 +17,6 @@ Contracts under test:
 """
 
 import dataclasses
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -127,61 +124,13 @@ def test_protocol_validation():
 
 
 # ---------------------------------------------------------------------------
-# shim-vs-Protocol parity + deprecation
+# accounting parity with the contention core
 # ---------------------------------------------------------------------------
-
-def test_shims_emit_deprecation_warnings():
-    h = jnp.zeros((2, 4))
-    with pytest.warns(DeprecationWarning, match=r"^repro\.core\.fedocs"):
-        fedocs.aggregate(h, "mean")
-    with pytest.warns(DeprecationWarning, match=r"^repro\.core\.fedocs"):
-        fedocs.ChannelNoise(rng=jax.random.PRNGKey(0),
-                            p_miss=jnp.float32(0.1))
-    with pytest.warns(DeprecationWarning, match=r"^repro\.core\.fedocs"):
-        fedocs.output_dim("concat", 4, 8)
-
-
-def test_shim_parity_every_mode_forward_and_vjp():
-    """fedocs.aggregate(mode) == Protocol.from_mode(mode).aggregate, bit for
-    bit in forward AND gradient, for every legacy mode."""
-    def prop(seed):
-        h = jnp.asarray(random_floats(seed, (5, 6, 7), specials=False))
-        key = jax.random.PRNGKey(seed)
-        p = jnp.float32(0.25)
-        for mode in fedocs.VALID_MODES:
-            proto = Protocol.from_mode(mode, bits=8)
-            rng = None
-            if mode == "max_noisy":
-                proto = proto.with_p_miss(p)
-                rng = key
-
-            def new_fn(x):
-                return jnp.sum(proto.aggregate(x, rng)[0])
-
-            def old_fn(x):
-                if mode == "max_noisy":
-                    with warnings.catch_warnings():
-                        warnings.simplefilter("ignore", DeprecationWarning)
-                        noise = fedocs.ChannelNoise(rng=key, p_miss=p)
-                    return jnp.sum(fedocs.aggregate(x, mode, noise=noise,
-                                                    noise_bits=8))
-                return jnp.sum(fedocs.aggregate(x, mode, noise_bits=8))
-
-            with warnings.catch_warnings():
-                warnings.simplefilter("ignore", DeprecationWarning)
-                old_out, old_grad = jax.value_and_grad(old_fn)(h)
-            new_out, new_grad = jax.value_and_grad(new_fn)(h)
-            assert np.array_equal(np.asarray(old_out),
-                                  np.asarray(new_out)), mode
-            assert np.array_equal(np.asarray(old_grad),
-                                  np.asarray(new_grad)), mode
-    sweep(prop, list(seeds(4)), "seed")
-
 
 @pytest.mark.parametrize("backend", ocs.NOISY_BACKENDS)
 def test_ocs_accounting_matches_contention_core(backend):
-    """Protocol.aggregate's accounting == the NoisyOCSResult counters of the
-    very contention core run the string-mode path executes (both backends)."""
+    """Protocol.aggregate's accounting == the NoisyOCSResult counters of
+    the very contention core run it executes (both backends)."""
     h = jnp.asarray(random_floats(3, (4, 9, 3), specials=False))
     key = jax.random.PRNGKey(7)
     p = jnp.float32(0.3)
@@ -297,8 +246,6 @@ def test_output_dim():
     assert Protocol.concat().output_dim(4, 8) == 32
     assert Protocol.max().output_dim(4, 8) == 8
     assert Protocol.ocs(8).output_dim(4, 8) == 8
-    with pytest.warns(DeprecationWarning):
-        assert fedocs.output_dim("concat", 4, 8) == 32
 
 
 # ---------------------------------------------------------------------------

@@ -1,28 +1,84 @@
-"""Serving engine: slot lifecycle, budgets, decode consistency."""
+"""Serving engine: slot lifecycle, budgets, decode consistency, and the
+channel-in-the-loop path (Protocol aggregation inside the fused tick,
+airtime accounting, Poisson load generation).
+
+The redesign contracts pinned here:
+
+  * channel-free serving is bit-for-bit the plain prefill+decode loop
+    (the fused tick and continuous batching change nothing numerically),
+  * refill/retire semantics: slots are reused after EOS, the length cap
+    retires at ``max_seq``, a one-slot engine drains the queue FIFO,
+  * ``Completion`` latency decomposition: ``latency_ticks`` spans arrival
+    to retirement, ``channel_slots`` bills the measured shared-channel
+    airtime, ``uplink_bits`` is the analytic per-request uplink — all
+    three zero for channel-free serving,
+  * sweeping channel quality rebinds only the protocol's traced ``p_miss``
+    leaf: ONE compilation serves every point.
+"""
+
+import dataclasses
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_reduced
 from repro.models import model as M
 from repro.parallel.sharding import split_tree
-from repro.serve.engine import Request, ServeEngine
+from repro.protocol import Protocol
+from repro.serve import engine as se
+from repro.serve.engine import (ChannelClock, Completion, Request,
+                                ServeConfig, ServeEngine)
+from repro.serve.load import near_far_protocol, poisson_requests
+
+N_WORKERS = 2
+VOCAB = 64
 
 
 @pytest.fixture(scope="module")
 def model_and_values():
     cfg = get_reduced("qwen1.5-0.5b", n_layers=2, d_model=32, n_heads=2,
-                      n_kv_heads=2, d_ff=64, vocab_size=64, n_workers=2)
+                      n_kv_heads=2, d_ff=64, vocab_size=VOCAB,
+                      n_workers=N_WORKERS)
     m = M.build(cfg)
     values, _ = split_tree(m.init(jax.random.PRNGKey(0)))
     return m, values
 
 
+def _engine(m, values, **kw):
+    return ServeEngine(m, values, ServeConfig(**kw))
+
+
+def _ocs(p):
+    return Protocol.ocs(bits=8,
+                        p_miss=np.full((N_WORKERS,), p, np.float32))
+
+
+def _manual_decode(m, values, prompt, max_new, max_seq, eos=-1):
+    logits, cache = m.prefill(values, {"tokens": jnp.asarray(prompt)[None]},
+                              max_seq=max_seq)
+    tok = int(jnp.argmax(logits, -1)[0])
+    toks = [tok]
+    pos = len(prompt)
+    budget = max_new - 1
+    while tok != eos and budget > 0 and pos < max_seq - 1:
+        logits, cache = m.decode_step(
+            values, jnp.asarray([[tok]], jnp.int32),
+            jnp.asarray([pos], jnp.int32), cache)
+        tok = int(jnp.argmax(logits, -1)[0])
+        toks.append(tok)
+        pos += 1
+        budget -= 1
+    return toks
+
+
+# -- refill / retire semantics ---------------------------------------------
+
 def test_all_requests_complete(model_and_values):
     m, values = model_and_values
-    eng = ServeEngine(m, values, batch_slots=2, max_seq=40, eos_id=-1)
-    reqs = [Request(rid=i, prompt=np.arange(3 + i, dtype=np.int32) % 64,
+    eng = _engine(m, values, batch_slots=2, max_seq=40, eos_id=-1)
+    reqs = [Request(rid=i, prompt=np.arange(3 + i, dtype=np.int32) % VOCAB,
                     max_new_tokens=6) for i in range(5)]
     outs = eng.run(reqs)
     assert set(outs) == set(range(5))
@@ -32,29 +88,222 @@ def test_all_requests_complete(model_and_values):
 
 def test_more_requests_than_slots_reuses_slots(model_and_values):
     m, values = model_and_values
-    eng = ServeEngine(m, values, batch_slots=1, max_seq=40, eos_id=-1)
+    eng = _engine(m, values, batch_slots=1, max_seq=40, eos_id=-1)
     reqs = [Request(rid=i, prompt=np.arange(4, dtype=np.int32),
                     max_new_tokens=3) for i in range(3)]
     outs = eng.run(reqs)
     assert len(outs) == 3
 
 
-def test_greedy_serving_matches_manual_decode(model_and_values):
-    """Engine output == direct prefill+argmax-decode for one request."""
+def test_eos_retires_early_and_slot_is_reused(model_and_values):
+    """Pick an actually-generated token as EOS: the request retires at its
+    first occurrence and the freed slot still serves the queue behind it."""
     m, values = model_and_values
     prompt = np.arange(5, dtype=np.int32)
-    eng = ServeEngine(m, values, batch_slots=1, max_seq=32, eos_id=-1)
-    out = eng.run([Request(rid=0, prompt=prompt, max_new_tokens=4)])[0]
+    ref = _manual_decode(m, values, prompt, 8, 40)
+    eos = ref[2]                      # a token the decode provably emits
+    # the first *decoded* occurrence retires the slot (the prefill token,
+    # index 0, is produced by prefill and is not EOS-checked)
+    stop_at = next(i for i in range(1, len(ref)) if ref[i] == eos) + 1
+    assert stop_at < 8
+    eng = _engine(m, values, batch_slots=1, max_seq=40, eos_id=eos)
+    reqs = [Request(rid=i, prompt=prompt, max_new_tokens=8)
+            for i in range(3)]
+    outs = eng.run(reqs)
+    assert set(outs) == {0, 1, 2}     # queue drained through the one slot
+    for c in outs.values():
+        assert c.tokens[-1] == eos
+        assert len(c.tokens) == stop_at   # retired at EOS, not at budget
 
-    import jax.numpy as jnp
-    logits, cache = m.prefill(values, {"tokens": jnp.asarray(prompt)[None]},
-                              max_seq=32)
-    toks = [int(jnp.argmax(logits, -1)[0])]
-    pos = jnp.asarray([len(prompt)], jnp.int32)
-    cur = jnp.asarray([[toks[-1]]], jnp.int32)
-    for _ in range(3):
-        logits, cache = m.decode_step(values, cur, pos, cache)
-        toks.append(int(jnp.argmax(logits, -1)[0]))
-        cur = jnp.asarray([[toks[-1]]], jnp.int32)
-        pos = pos + 1
-    assert out.tokens == toks
+
+def test_length_cap_retires_at_max_seq(model_and_values):
+    m, values = model_and_values
+    prompt = np.arange(5, dtype=np.int32)
+    eng = _engine(m, values, batch_slots=1, max_seq=8, eos_id=-1)
+    out = eng.run([Request(rid=0, prompt=prompt, max_new_tokens=100)])[0]
+    # positions hits max_seq-1 after decoding max_seq - prompt_len tokens
+    assert len(out.tokens) == 8 - len(prompt)
+
+
+def test_one_slot_queue_drains_fifo(model_and_values):
+    """With one slot, requests finish strictly in arrival order."""
+    m, values = model_and_values
+    eng = _engine(m, values, batch_slots=1, max_seq=40, eos_id=-1)
+    reqs = [Request(rid=i, prompt=np.arange(4, dtype=np.int32),
+                    max_new_tokens=4, arrival_tick=0) for i in range(4)]
+    outs = eng.run(reqs)
+    finish = [reqs[i].arrival_tick + outs[i].latency_ticks
+              for i in range(4)]
+    assert finish == sorted(finish)
+    assert len(set(finish)) == 4      # strictly one-after-another
+
+
+# -- channel-free parity ----------------------------------------------------
+
+def test_greedy_serving_matches_manual_decode(model_and_values):
+    """Engine output == direct prefill+argmax-decode, request by request,
+    even when slots are shared (continuous batching is invisible)."""
+    m, values = model_and_values
+    eng = _engine(m, values, batch_slots=2, max_seq=32, eos_id=-1)
+    prompts = [np.arange(5, dtype=np.int32),
+               (np.arange(7, dtype=np.int32) * 3) % VOCAB,
+               np.arange(4, dtype=np.int32) + 9]
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=4)
+            for i, p in enumerate(prompts)]
+    outs = eng.run(reqs)
+    for i, p in enumerate(prompts):
+        assert outs[i].tokens == _manual_decode(m, values, p, 4, 32)
+
+
+def test_channel_free_completion_has_zero_channel_fields(model_and_values):
+    m, values = model_and_values
+    eng = _engine(m, values, batch_slots=2, max_seq=32, eos_id=-1)
+    outs = eng.run([Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                            max_new_tokens=4)])
+    c = outs[0]
+    assert c.latency_ticks > 0
+    assert c.channel_slots == 0 and c.uplink_bits == 0
+    clock = ChannelClock(tick_us=50.0, slot_us=1.0)
+    assert c.latency_us(clock) == c.latency_ticks * 50.0
+
+
+# -- channel-in-the-loop ----------------------------------------------------
+
+def test_channel_serving_bills_airtime_and_uplink(model_and_values):
+    m, values = model_and_values
+    eng = _engine(m, values, batch_slots=2, max_seq=32, eos_id=-1,
+                  protocol=_ocs(0.05))
+    reqs = [Request(rid=i, prompt=np.arange(4, dtype=np.int32),
+                    max_new_tokens=4) for i in range(2)]
+    outs = eng.run(reqs)
+    sites = m.channel_sites()
+    per_tok = _ocs(0.05).comm_load(N_WORKERS, 32).uplink_bits * sites
+    for c in outs.values():
+        assert c.channel_slots > 0            # measured airtime
+        # analytic uplink: only decode tokens cross the channel (the
+        # prefill token comes from the channel-free prefill path)
+        assert c.uplink_bits == (len(c.tokens) - 1) * per_tok
+
+
+def test_error_free_channel_matches_ideal_max(model_and_values):
+    """OCS at p_miss=0 serves the same tokens as Protocol.ideal_max."""
+    m, values = model_and_values
+    eng = _engine(m, values, batch_slots=2, max_seq=32, eos_id=-1)
+    reqs = [Request(rid=i, prompt=np.arange(4 + i, dtype=np.int32),
+                    max_new_tokens=4) for i in range(2)]
+    under_ocs = eng.run(reqs, protocol=_ocs(0.0))
+    ideal = eng.run(reqs, protocol=Protocol.ideal_max(8, tie_break="first"))
+    for i in under_ocs:
+        assert under_ocs[i].tokens == ideal[i].tokens
+
+
+def test_p_miss_sweep_never_recompiles(model_and_values):
+    """Rebinding the traced p_miss leaf reuses the compiled tick."""
+    m, values = model_and_values
+    eng = _engine(m, values, batch_slots=2, max_seq=32, eos_id=-1)
+    reqs = [Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                    max_new_tokens=4)]
+    se.reset_trace_counts()
+    eng.run(reqs, protocol=_ocs(0.0))
+    eng.run(reqs, protocol=_ocs(0.3))
+    eng.run(reqs, protocol=near_far_protocol(N_WORKERS, p_far=0.4))
+    assert se.trace_counts()["tick"] == 1
+
+
+def test_channel_serving_deterministic(model_and_values):
+    m, values = model_and_values
+    eng = _engine(m, values, batch_slots=2, max_seq=32, eos_id=-1,
+                  protocol=_ocs(0.2))
+    reqs = [Request(rid=i, prompt=np.arange(5, dtype=np.int32),
+                    max_new_tokens=5) for i in range(2)]
+    a = eng.run(reqs)
+    b = eng.run(reqs)
+    for i in a:
+        assert a[i].tokens == b[i].tokens
+        assert a[i].channel_slots == b[i].channel_slots
+
+
+def test_one_dispatch_per_decode_tick(model_and_values):
+    """Every decoded token row is covered by exactly the counted fused
+    dispatches: dispatches in [ceil(tokens/B), tokens]."""
+    m, values = model_and_values
+    eng = _engine(m, values, batch_slots=2, max_seq=32, eos_id=-1)
+    reqs = [Request(rid=i, prompt=np.arange(4, dtype=np.int32),
+                    max_new_tokens=5) for i in range(3)]
+    se.reset_dispatch_counts()
+    outs = eng.run(reqs)
+    ticks = se.dispatch_counts()["tick"]
+    decode_tokens = sum(len(c.tokens) - 1 for c in outs.values())
+    assert -(-decode_tokens // 2) <= ticks <= decode_tokens
+
+
+# -- load generation --------------------------------------------------------
+
+def test_poisson_requests_shape_and_determinism():
+    reqs = poisson_requests(16, 0.5, VOCAB, prompt_len=6,
+                            max_new_tokens=4, seed=3)
+    assert len(reqs) == 16
+    arr = [r.arrival_tick for r in reqs]
+    assert arr == sorted(arr) and arr[0] >= 0
+    assert all(len(r.prompt) == 6 and r.prompt.dtype == np.int32
+               and r.prompt.min() >= 0 and r.prompt.max() < VOCAB
+               for r in reqs)
+    again = poisson_requests(16, 0.5, VOCAB, prompt_len=6,
+                             max_new_tokens=4, seed=3)
+    assert [r.arrival_tick for r in again] == arr
+    assert all(np.array_equal(a.prompt, b.prompt)
+               for a, b in zip(reqs, again))
+
+
+def test_poisson_requests_validation():
+    with pytest.raises(ValueError):
+        poisson_requests(0, 1.0, VOCAB)
+    with pytest.raises(ValueError):
+        poisson_requests(4, 0.0, VOCAB)
+
+
+def test_late_arrivals_wait_for_their_tick(model_and_values):
+    """A request arriving at tick T cannot retire before T."""
+    m, values = model_and_values
+    eng = _engine(m, values, batch_slots=2, max_seq=32, eos_id=-1)
+    reqs = [Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                    max_new_tokens=3, arrival_tick=0),
+            Request(rid=1, prompt=np.arange(4, dtype=np.int32),
+                    max_new_tokens=3, arrival_tick=10)]
+    outs = eng.run(reqs)
+    # rid 1 decoded 2 tokens after arriving at tick 10
+    assert outs[1].latency_ticks >= 2
+    # and its tokens match the solo decode (queueing changes nothing)
+    assert outs[1].tokens == _manual_decode(m, values, reqs[1].prompt, 3, 32)
+
+
+def test_near_far_protocol_p_miss_profile():
+    p = near_far_protocol(4, p_near=0.0, p_far=0.25)
+    pm = np.asarray(p.p_miss)
+    assert pm.shape == (4,) and pm.dtype == np.float32
+    assert (pm[:2] == 0.0).all() and (pm[2:] == np.float32(0.25)).all()
+
+
+# -- config surfaces --------------------------------------------------------
+
+def test_serve_config_validation():
+    with pytest.raises(ValueError):
+        ServeConfig(batch_slots=0)
+    with pytest.raises(ValueError):
+        ServeConfig(max_seq=1)
+    with pytest.raises(ValueError):
+        ServeConfig(protocol=Protocol.concat())
+    with pytest.raises(ValueError):
+        ChannelClock(tick_us=0.0)
+    with pytest.raises(ValueError):
+        ChannelClock(slot_us=-1.0)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg = ServeConfig()
+        cfg.batch_slots = 8
+
+
+def test_completion_latency_decomposition():
+    c = Completion(rid=0, tokens=[1, 2], prompt_len=3,
+                   latency_ticks=7, channel_slots=120, uplink_bits=640)
+    clock = ChannelClock(tick_us=10.0, slot_us=0.5)
+    assert c.latency_us(clock) == 7 * 10.0 + 120 * 0.5
