@@ -32,13 +32,13 @@ writes the canonical copy at the repo root for trajectory tracking.
 from __future__ import annotations
 
 import json
-import math
 import sys
 import time
 from typing import List, Optional
 
 import numpy as np
 
+from repro import analysis
 from repro.protocol import CollisionAdaptiveBits, FixedBits
 from repro.sim import results as sim_results
 from repro.sim import train_curves as tc
@@ -94,17 +94,14 @@ def run(smoke: bool = False, json_path: Optional[str] = None,
     n_bits = len(ccfg.bits)
     trained_steps = ccfg.steps * n_bits          # total steps per engine
 
+    # the engine contracts are the shared repro.analysis assertions (the
+    # same bounds the contract registry documents)
     curves, wall_scan, traces_s, disp_s = _run_engine(ccfg)
-    if traces_s["fused"] != n_bits:
-        raise RuntimeError(
-            f"fused engine recompiled per lane: {traces_s} for {n_bits} bit "
-            "depths — traced-(rng, Protocol) batching regression")
+    analysis.assert_trace_count(traces_s["fused"], n_bits, "fused engine")
     per_bits_scan = disp_s["fused"] / n_bits
-    bound = math.ceil(ccfg.steps / ccfg.log_every) + 2
-    if per_bits_scan > bound:
-        raise RuntimeError(
-            f"fused engine dispatched {per_bits_scan}/bits — exceeds the "
-            f"ceil(steps/log_every)+2 = {bound} fusion bound")
+    bound = analysis.fused_dispatch_bound(ccfg.steps, ccfg.log_every)
+    analysis.assert_fused_dispatches(per_bits_scan, ccfg.steps,
+                                     ccfg.log_every)
 
     # p_miss lane 0 is 0.0 in both configs: it must reproduce the ideal
     # Protocol.ideal_max(bits) run bit for bit (params and accuracy).
@@ -126,10 +123,8 @@ def run(smoke: bool = False, json_path: Optional[str] = None,
     # engine bit for bit (trajectory unchanged under the scheduled API) ...
     tc.reset_dispatch_counts()
     fixed = tc.run_scheduled_curves(ccfg, FixedBits(ccfg.bits[0]))
-    if tc.dispatch_counts()["sched"] != 1:
-        raise RuntimeError(
-            f"FixedBits scheduled run cost {tc.dispatch_counts()} dispatches "
-            "— the scheduled engine must fuse to ONE")
+    analysis.assert_single_dispatch(tc.dispatch_counts(), "sched",
+                                    "FixedBits scheduled run")
     _assert_sched_matches_lanes(fixed, curves, bi=0)
 
     # ... and the collision-adaptive policy runs end-to-end in ONE dispatch
@@ -138,10 +133,8 @@ def run(smoke: bool = False, json_path: Optional[str] = None,
     t0 = time.perf_counter()
     adaptive = tc.run_scheduled_curves(ccfg, schedule)
     wall_sched = time.perf_counter() - t0
-    if tc.dispatch_counts()["sched"] != 1:
-        raise RuntimeError(
-            f"adaptive scheduled run cost {tc.dispatch_counts()} dispatches "
-            "— the scheduled engine must fuse to ONE")
+    analysis.assert_single_dispatch(tc.dispatch_counts(), "sched",
+                                    "adaptive scheduled run")
     if not set(np.unique(adaptive.bits_per_step)) <= set(ccfg.bits):
         raise RuntimeError(
             f"schedule chose depths {np.unique(adaptive.bits_per_step)} "

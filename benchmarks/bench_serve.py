@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import analysis
 from repro.configs import get_reduced
 from repro.models import model as M
 from repro.parallel import sharding as sh
@@ -142,21 +143,12 @@ def _serve_point(engine: ServeEngine, requests, protocol, clock):
 
 
 def _check_dispatch(name: str, outs, stats: dict, batch_slots: int) -> None:
-    """One fused dispatch per decode tick.
-
-    Every dispatch decodes >=1 active slot (the engine never dispatches an
-    empty batch) and <= batch_slots tokens, so the counted dispatches must
-    bracket the total decoded-token count: extra per-tick host->device hops
-    push the count above the token total, skipped fusions below tokens/B.
-    """
+    """One fused dispatch per decode tick — the shared ``repro.analysis``
+    bracket: every dispatch decodes >=1 active slot (the engine never
+    dispatches an empty batch) and <= batch_slots tokens."""
     decode_tokens = sum(len(c.tokens) - 1 for c in outs.values())
-    ticks = stats["ticks"]
-    lo = -(-decode_tokens // batch_slots)            # ceil division
-    if not lo <= ticks <= decode_tokens:
-        raise RuntimeError(
-            f"{name}: {ticks} decode dispatches for {decode_tokens} decoded "
-            f"tokens over {batch_slots} slots — not one fused dispatch per "
-            f"tick (expected in [{lo}, {decode_tokens}])")
+    analysis.assert_tick_dispatch_bracket(name, decode_tokens,
+                                          stats["ticks"], batch_slots)
 
 
 def run(smoke: bool = False,

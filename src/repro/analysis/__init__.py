@@ -1,0 +1,37 @@
+"""Static analysis: machine-enforced performance contracts + repo lint.
+
+Three layers (see ``python -m repro.analysis --help`` for the CLI):
+
+* :mod:`repro.analysis.contracts` — trace-level checks on registered
+  jitted entry points (jaxpr-hash recompile stability over ``p_miss``
+  rebinds, f64 hygiene under ``JAX_ENABLE_X64``, host-sync freedom,
+  donation), plus the shared dispatch-count assertions the benchmark
+  self-checks call;
+* :mod:`repro.analysis.hlo_checks` — compiled-module checks (donated
+  buffers alias outputs, no collective/copy insertions);
+* :mod:`repro.analysis.lint` — repo-specific AST rules (no hardcoded
+  Pallas interpret mode, no concretization inside jit scopes, no eager
+  jnp loops in jitted code, kernel parity coverage, engine determinism).
+
+The registry (:data:`repro.analysis.registry.CONTRACTS`) is the single
+declaration point: tier-1 tests parametrize over it and CI runs the CLI
+against the committed (empty) ``analysis_baseline.json``.
+"""
+
+from repro.analysis.contracts import (  # noqa: F401
+    assert_fused_dispatches, assert_single_dispatch,
+    assert_tick_dispatch_bracket, assert_trace_count, fused_dispatch_bound,
+)
+from repro.analysis.registry import (  # noqa: F401
+    CONTRACTS, check_all, check_contract, contract_names, get_contract,
+)
+from repro.analysis.report import (  # noqa: F401
+    Finding, Report, load_baseline,
+)
+
+__all__ = [
+    "CONTRACTS", "Finding", "Report", "assert_fused_dispatches",
+    "assert_single_dispatch", "assert_tick_dispatch_bracket",
+    "assert_trace_count", "check_all", "check_contract", "contract_names",
+    "fused_dispatch_bound", "get_contract", "load_baseline",
+]

@@ -1,0 +1,79 @@
+"""``python -m repro.analysis``: run the whole static-analysis pass.
+
+Layers (each can be skipped independently):
+
+* trace-level contracts (``repro.analysis.registry``): jaxpr-hash
+  recompile stability, f64 hygiene, host-sync freedom, donation;
+* HLO-level checks: compiled donation aliasing, collective freedom,
+  copy pressure;
+* AST lint over ``src/repro``, ``benchmarks`` and ``examples``.
+
+Exit status is 0 iff every finding is waived by the baseline
+(``analysis_baseline.json`` at the repo root by default — committed empty,
+so CI is strict).  ``--json`` writes the full machine-readable report.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis import lint, registry
+from repro.analysis.report import Report, load_baseline
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr/HLO contract checker + repo AST lint")
+    ap.add_argument("--root", default=".",
+                    help="repo root to scan (default: cwd)")
+    ap.add_argument("--baseline", default=None,
+                    help="waiver baseline JSON (default: "
+                         "<root>/analysis_baseline.json if present)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the machine-readable report here")
+    ap.add_argument("--skip-contracts", action="store_true",
+                    help="skip the trace/HLO contract checks")
+    ap.add_argument("--skip-hlo", action="store_true",
+                    help="run contracts but skip lowering/compiling "
+                         "(no HLO-level checks)")
+    ap.add_argument("--skip-lint", action="store_true",
+                    help="skip the AST lint")
+    args = ap.parse_args(argv)
+
+    root = Path(args.root).resolve()
+    baseline = args.baseline
+    if baseline is None:
+        cand = root / "analysis_baseline.json"
+        baseline = str(cand) if cand.exists() else None
+
+    report = Report(waivers=load_baseline(baseline))
+    if not args.skip_lint:
+        report.extend(lint.lint_repo(root))
+    if not args.skip_contracts:
+        report.extend(registry.check_all(skip_hlo=args.skip_hlo))
+
+    if args.json:
+        report.write_json(args.json)
+
+    unwaived = report.unwaived()
+    n_waived = len(report.findings) - len(unwaived)
+    for f in sorted(unwaived, key=lambda f: f.key):
+        print(f.render())
+    if n_waived:
+        print(f"({n_waived} finding(s) waived by {baseline})")
+    for w in report.stale_waivers():
+        print(f"note: stale waiver (no matching finding): {w}")
+    if unwaived:
+        print(f"FAIL: {len(unwaived)} unwaived finding(s)")
+        return 1
+    print(f"OK: {len(report.findings)} finding(s), all waived"
+          if report.findings else
+          "OK: no findings")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

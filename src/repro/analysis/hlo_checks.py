@@ -1,0 +1,84 @@
+"""HLO-level checks: lower/compile registered entry points and inspect the
+compiled module text — the layer below the jaxpr checks, generalizing what
+``repro.launch.hlo_analysis`` does for the roofline.
+
+Three inspections, all driven by the contract's declared flags:
+
+``donation-alias``
+    A contract with donated buffers must compile with an
+    ``input_output_alias`` table — the runtime-level proof that donation
+    survived compilation (the lowering-level attribute check lives in
+    :func:`repro.analysis.contracts.check_donation`).
+
+``unexpected-collective``
+    Contracts flagged ``forbid_collectives`` (single-cell entry points:
+    the protocol aggregation law, the serve tick) must compile with ZERO
+    cross-device collectives; any all-reduce/all-gather/... insertion means
+    a sharding annotation leaked into a single-device program.  Counting is
+    delegated to :func:`repro.launch.hlo_analysis.parse_collectives` — the
+    same parser the roofline uses.
+
+``excess-copies``
+    Reported (never a hard failure on its own) when a compiled entry point
+    carries an unusually copy-heavy module; the count rides in the JSON
+    report so copy regressions are visible over time.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import List
+
+from repro.analysis import report as R
+from repro.analysis.report import Finding
+from repro.launch.hlo_analysis import parse_collectives
+
+# a compiled tiny entry point has no business exceeding this many explicit
+# copy ops; the bound sits well above the measured baselines (the serve
+# tick's vmapped KV-cache scatter compiles to ~126 on CPU) so only an
+# order-of-magnitude double-buffering regression trips it
+DEFAULT_MAX_COPIES = 512
+
+_COPY_RE = re.compile(r"=\s*\w+\[[^\]]*\][^=]*\bcopy\(")
+
+
+def count_copies(hlo_text: str) -> int:
+    return sum(1 for line in hlo_text.splitlines() if _COPY_RE.search(line))
+
+
+def check_entry_hlo(contract, entry) -> List[Finding]:
+    """Compile the entry point once and run its declared HLO inspections."""
+    where = f"contract:{contract.name}"
+    try:
+        compiled_text = entry.lower().compile().as_text()
+    except Exception as e:
+        return [Finding(
+            R.CHECK_ERROR, where, "hlo",
+            f"HLO check could not lower/compile the entry point: "
+            f"{type(e).__name__}: {e}")]
+    findings: List[Finding] = []
+
+    if contract.check_donation and entry.donated:
+        if "input_output_alias" not in compiled_text:
+            findings.append(Finding(
+                R.DONATION_ALIAS, where, "compiled",
+                f"contract declares {entry.donated} donated buffers but the "
+                f"compiled module has no input_output_alias table — XLA "
+                f"double-buffers the train state"))
+
+    if contract.forbid_collectives:
+        stats = parse_collectives(compiled_text, strict=False)
+        if stats.counts:
+            findings.append(Finding(
+                R.UNEXPECTED_COLLECTIVE, where, "collectives",
+                f"single-cell entry point compiles with cross-device "
+                f"collectives {stats.counts} — a sharding annotation "
+                f"leaked into a single-device program"))
+
+    n_copies = count_copies(compiled_text)
+    if n_copies > DEFAULT_MAX_COPIES:
+        findings.append(Finding(
+            R.EXCESS_COPIES, where, "copies",
+            f"compiled module carries {n_copies} copy ops "
+            f"(> {DEFAULT_MAX_COPIES}) — something is double-buffering"))
+    return findings

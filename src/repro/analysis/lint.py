@@ -1,0 +1,317 @@
+"""Repo-specific AST lint: the rules ruff can't express.
+
+Five rules, all syntactic (no imports of the scanned code, so a broken
+module parses and lints like any other):
+
+``interpret-hardcode``
+    No ``interpret=True`` literal (or ``INTERPRET = True`` constant)
+    anywhere outside ``repro/kernels/__init__.py`` — Pallas interpret mode
+    is resolved exactly once, by ``repro.kernels.interpret_default()``
+    (env-driven), so CI can flip the whole repo between compiled and
+    interpreter kernels.
+
+``host-sync-in-jit``
+    Inside a jitted scope: no ``.item()``, no ``float(x)``/``int(x)`` on a
+    non-literal, no ``np.asarray``/``np.array`` — each one concretizes a
+    traced value, which either fails to trace or (worse) silently bakes a
+    host value into the compiled program and breaks the zero-recompile
+    contract.
+
+``eager-loop-in-jit``
+    Inside a jitted scope: no ``jnp.*`` calls in a Python ``for``/``while``
+    body — the loop unrolls into the trace (compile time and program size
+    scale with the trip count); use ``lax.scan``/``fori_loop``.  Building
+    *branch closures* in a loop is fine — the rule only fires on direct
+    ``jnp`` array ops.
+
+``missing-kernel-ref``
+    Every ``src/repro/kernels/<pkg>/`` package must ship a ``ref.py``
+    reference implementation and appear in a ``ParityOp`` grid
+    registration under ``tests/`` — the kernel parity harness is the
+    standing guardrail; a kernel without it is unverifiable.
+
+``nondeterminism``
+    Engine code (sim/serve/protocol/core/train/optim/models) must not call
+    wall clocks (``time.*``, ``datetime.now``) or global-state RNGs
+    (stdlib ``random.*``, legacy ``np.random.*``); seeded
+    ``np.random.default_rng`` stays legal.  Benchmarks time things — they
+    are exempt from this rule, not from the jit rules.
+
+Jitted scopes are detected syntactically: functions decorated with
+``@jax.jit``/``@jit``/``@functools.partial(jax.jit, ...)``, functions
+wrapped as ``jax.jit(name)`` anywhere in the module, lambdas passed
+directly to ``jax.jit``, and every ``def`` nested inside one of those
+(nested defs trace with their parent).
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Iterable, List, Optional, Set, Tuple
+
+from repro.analysis import report as R
+from repro.analysis.report import Finding
+
+# rules `host-sync-in-jit` and `eager-loop-in-jit` apply to jitted scopes
+# in any scanned file; `nondeterminism` only to these engine subtrees
+ENGINE_DIRS = ("src/repro/sim", "src/repro/serve", "src/repro/protocol",
+               "src/repro/core", "src/repro/train", "src/repro/optim",
+               "src/repro/models")
+
+# the one module allowed to spell `interpret=` resolution
+INTERPRET_HOME = "src/repro/kernels/__init__.py"
+
+_NP_RANDOM_OK = {"default_rng", "Generator", "SeedSequence", "PCG64",
+                 "Philox", "bit_generator"}
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    """``jit`` / ``jax.jit`` (as a decorator or a called function)."""
+    if isinstance(node, ast.Name):
+        return node.id == "jit"
+    if isinstance(node, ast.Attribute):
+        return (node.attr == "jit" and isinstance(node.value, ast.Name)
+                and node.value.id == "jax")
+    return False
+
+
+def _jit_decorated(fn: ast.AST) -> bool:
+    for dec in getattr(fn, "decorator_list", []):
+        if _is_jax_jit(dec):
+            return True
+        # @functools.partial(jax.jit, ...) / @partial(jax.jit, ...)
+        if isinstance(dec, ast.Call):
+            f = dec.func
+            is_partial = (
+                (isinstance(f, ast.Name) and f.id == "partial")
+                or (isinstance(f, ast.Attribute) and f.attr == "partial"))
+            if is_partial and dec.args and _is_jax_jit(dec.args[0]):
+                return True
+            if _is_jax_jit(f):
+                return True
+    return False
+
+
+def _jit_scopes(tree: ast.Module) -> List[ast.AST]:
+    """Function/lambda nodes whose bodies trace under jit."""
+    scopes: List[ast.AST] = []
+    wrapped_names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if _jit_decorated(node):
+                scopes.append(node)
+        elif isinstance(node, ast.Call) and _is_jax_jit(node.func):
+            if node.args and isinstance(node.args[0], ast.Name):
+                wrapped_names.add(node.args[0].id)
+            elif node.args and isinstance(node.args[0], ast.Lambda):
+                scopes.append(node.args[0])
+    if wrapped_names:
+        for node in ast.walk(tree):
+            if (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and node.name in wrapped_names):
+                scopes.append(node)
+    return scopes
+
+
+def _scope_name(scope: ast.AST) -> str:
+    return getattr(scope, "name", "<lambda>")
+
+
+def _call_symbol(call: ast.Call) -> Optional[str]:
+    """Short printable symbol of a concretizing call, or None if benign."""
+    f = call.func
+    if isinstance(f, ast.Attribute) and f.attr == "item":
+        return ".item()"
+    if (isinstance(f, ast.Name) and f.id in ("float", "int")
+            and len(call.args) == 1
+            and not isinstance(call.args[0], ast.Constant)):
+        return f"{f.id}()"
+    if (isinstance(f, ast.Attribute) and f.attr in ("asarray", "array")
+            and isinstance(f.value, ast.Name)
+            and f.value.id in ("np", "numpy", "onp")):
+        return f"{f.value.id}.{f.attr}()"
+    return None
+
+
+def _is_jnp_call(node: ast.AST) -> bool:
+    if not (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)):
+        return False
+    v = node.func.value
+    if isinstance(v, ast.Name) and v.id == "jnp":
+        return True
+    # jax.numpy.<op>(...)
+    return (isinstance(v, ast.Attribute) and v.attr == "numpy"
+            and isinstance(v.value, ast.Name) and v.value.id == "jax")
+
+
+def _module_imports(tree: ast.Module) -> Set[str]:
+    """Top-level module names bound by plain ``import`` statements."""
+    mods: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                mods.add(alias.asname or alias.name.split(".")[0])
+    return mods
+
+
+# ---------------------------------------------------------------------------
+# per-file rules
+# ---------------------------------------------------------------------------
+
+def _check_interpret(tree: ast.Module, rel: str) -> List[Finding]:
+    findings = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if (kw.arg == "interpret"
+                        and isinstance(kw.value, ast.Constant)
+                        and kw.value.value is True):
+                    findings.append(Finding(
+                        R.INTERPRET_HARDCODE, rel, "interpret=True",
+                        "hardcoded interpret=True — route through "
+                        "repro.kernels.interpret_default() so CI controls "
+                        "interpret mode", line=node.lineno))
+        elif isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if (isinstance(tgt, ast.Name) and tgt.id == "INTERPRET"
+                        and isinstance(node.value, ast.Constant)
+                        and node.value.value is True):
+                    findings.append(Finding(
+                        R.INTERPRET_HARDCODE, rel, "INTERPRET=True",
+                        "hardcoded INTERPRET constant — route through "
+                        "repro.kernels.interpret_default()",
+                        line=node.lineno))
+    return findings
+
+
+def _check_jit_scopes(tree: ast.Module, rel: str) -> List[Finding]:
+    findings = []
+    for scope in _jit_scopes(tree):
+        sname = _scope_name(scope)
+        for node in ast.walk(scope):
+            sym = _call_symbol(node) if isinstance(node, ast.Call) else None
+            if sym is not None:
+                findings.append(Finding(
+                    R.HOST_SYNC_IN_JIT, rel, f"{sname}:{sym}",
+                    f"`{sym}` inside jitted `{sname}` concretizes a traced "
+                    f"value (host sync / bakes a constant into the trace)",
+                    line=node.lineno))
+            if isinstance(node, (ast.For, ast.While)):
+                jnp_call = next((c for c in ast.walk(node)
+                                 if _is_jnp_call(c)), None)
+                if jnp_call is not None:
+                    findings.append(Finding(
+                        R.EAGER_LOOP_IN_JIT, rel, f"{sname}:loop",
+                        f"Python loop with jnp ops inside jitted "
+                        f"`{sname}` unrolls into the trace — use "
+                        f"lax.scan/fori_loop", line=node.lineno))
+    return findings
+
+
+def _check_nondeterminism(tree: ast.Module, rel: str) -> List[Finding]:
+    imports = _module_imports(tree)
+    findings = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)):
+            continue
+        f = node.func
+        sym = None
+        if isinstance(f.value, ast.Name):
+            base = f.value.id
+            if base == "time" and "time" in imports:
+                sym = f"time.{f.attr}"
+            elif base == "random" and "random" in imports:
+                sym = f"random.{f.attr}"
+            elif base == "datetime" and f.attr in ("now", "utcnow", "today"):
+                sym = f"datetime.{f.attr}"
+        elif (isinstance(f.value, ast.Attribute)
+              and f.value.attr == "random"
+              and isinstance(f.value.value, ast.Name)
+              and f.value.value.id in ("np", "numpy")
+              and f.attr not in _NP_RANDOM_OK):
+            sym = f"np.random.{f.attr}"
+        if sym is not None:
+            findings.append(Finding(
+                R.NONDETERMINISM, rel, sym,
+                f"`{sym}()` in engine code — engines must be "
+                f"seed-deterministic (thread a PRNG key or a seeded "
+                f"default_rng)", line=node.lineno))
+    return findings
+
+
+def lint_file(path: Path, rel: str, *, engine: bool) -> List[Finding]:
+    """All per-file rules on one source file (``rel`` is the repo-relative
+    path used in findings; ``engine`` enables the nondeterminism rule)."""
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError as e:
+        return [Finding(R.CHECK_ERROR, rel, "syntax",
+                        f"could not parse: {e}", line=e.lineno)]
+    findings: List[Finding] = []
+    if rel != INTERPRET_HOME:
+        findings += _check_interpret(tree, rel)
+    findings += _check_jit_scopes(tree, rel)
+    if engine:
+        findings += _check_nondeterminism(tree, rel)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# repo-level rules + the scan driver
+# ---------------------------------------------------------------------------
+
+def check_kernel_refs(root: Path) -> List[Finding]:
+    """Every kernels/<pkg>/ ships ref.py and a ParityOp registration."""
+    kdir = root / "src/repro/kernels"
+    if not kdir.is_dir():
+        return []
+    registrations = []
+    tests = root / "tests"
+    if tests.is_dir():
+        for t in sorted(tests.glob("*.py")):
+            text = t.read_text()
+            if "ParityOp(" in text:
+                registrations.append(text)
+    findings = []
+    for pkg in sorted(p for p in kdir.iterdir()
+                      if p.is_dir() and (p / "ops.py").exists()):
+        rel = f"src/repro/kernels/{pkg.name}"
+        if not (pkg / "ref.py").exists():
+            findings.append(Finding(
+                R.MISSING_KERNEL_REF, rel, "ref.py",
+                f"kernel package `{pkg.name}` has no ref.py reference "
+                f"implementation — the parity harness has nothing to "
+                f"check against"))
+        if not any(pkg.name in text for text in registrations):
+            findings.append(Finding(
+                R.MISSING_KERNEL_REF, rel, "parity-op",
+                f"kernel package `{pkg.name}` has no ParityOp grid "
+                f"registration under tests/ — register it with the "
+                f"kernel parity harness"))
+    return findings
+
+
+def _iter_files(root: Path) -> Iterable[Tuple[Path, str, bool]]:
+    """(path, relpath, engine?) of every scannable source file."""
+    for top in ("src/repro", "benchmarks", "examples"):
+        base = root / top
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            rel = path.relative_to(root).as_posix()
+            engine = any(rel == d or rel.startswith(d + "/")
+                         for d in ENGINE_DIRS)
+            yield path, rel, engine
+
+
+def lint_repo(root) -> List[Finding]:
+    """All AST-lint findings of the repo at ``root``."""
+    root = Path(root)
+    findings: List[Finding] = []
+    for path, rel, engine in _iter_files(root):
+        findings += lint_file(path, rel, engine=engine)
+    findings += check_kernel_refs(root)
+    return findings

@@ -1,0 +1,121 @@
+"""Findings, reports and waiver baselines for the static-analysis pass.
+
+Every check in ``repro.analysis`` — trace-level contracts, HLO checks and
+the AST lint — reports violations as :class:`Finding` values.  A finding's
+:attr:`~Finding.key` is stable across unrelated edits (it names the rule,
+the file/contract and a detail token, but never a line number), so a
+committed waiver baseline keeps CI green across line drift while still
+failing on any *new* violation.
+
+The baseline file is JSON::
+
+    {"waivers": ["rule::where::detail", ...]}
+
+and lives at the repo root as ``analysis_baseline.json`` (committed empty —
+CI starts strict; add a key only with a comment-worthy reason in the PR).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Sequence
+
+# rule identifiers (one per invariant; tests assert fixtures are flagged by
+# exactly the intended rule)
+RECOMPILE_HAZARD = "recompile-hazard"
+F64_PROMOTION = "f64-promotion"
+HOST_SYNC = "host-sync"
+DONATION_ALIAS = "donation-alias"
+UNEXPECTED_COLLECTIVE = "unexpected-collective"
+EXCESS_COPIES = "excess-copies"
+INTERPRET_HARDCODE = "interpret-hardcode"
+HOST_SYNC_IN_JIT = "host-sync-in-jit"
+EAGER_LOOP_IN_JIT = "eager-loop-in-jit"
+MISSING_KERNEL_REF = "missing-kernel-ref"
+NONDETERMINISM = "nondeterminism"
+UNKNOWN_DTYPE = "unknown-dtype"
+CHECK_ERROR = "check-error"
+
+ALL_RULES = (
+    RECOMPILE_HAZARD, F64_PROMOTION, HOST_SYNC, DONATION_ALIAS,
+    UNEXPECTED_COLLECTIVE, EXCESS_COPIES, INTERPRET_HARDCODE,
+    HOST_SYNC_IN_JIT, EAGER_LOOP_IN_JIT, MISSING_KERNEL_REF, NONDETERMINISM,
+    UNKNOWN_DTYPE, CHECK_ERROR,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation.
+
+    ``where`` names the contract (``contract:protocol.aggregate``) or the
+    file (repo-relative path); ``detail`` is a short stable token (symbol,
+    primitive, dtype) distinguishing findings within one ``where``;
+    ``line`` is display-only and excluded from the waiver key.
+    """
+
+    rule: str
+    where: str
+    detail: str
+    message: str
+    line: Optional[int] = None
+
+    @property
+    def key(self) -> str:
+        return f"{self.rule}::{self.where}::{self.detail}"
+
+    def render(self) -> str:
+        loc = f"{self.where}:{self.line}" if self.line else self.where
+        return f"[{self.rule}] {loc}: {self.message}"
+
+    def to_dict(self) -> Dict:
+        return {"rule": self.rule, "where": self.where,
+                "detail": self.detail, "message": self.message,
+                "line": self.line, "key": self.key}
+
+
+@dataclasses.dataclass
+class Report:
+    """All findings of one analysis run, plus the applied baseline."""
+
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+    waivers: Sequence[str] = ()
+
+    def extend(self, findings: Sequence[Finding]) -> None:
+        self.findings.extend(findings)
+
+    def unwaived(self) -> List[Finding]:
+        waived = set(self.waivers)
+        return [f for f in self.findings if f.key not in waived]
+
+    def stale_waivers(self) -> List[str]:
+        live = {f.key for f in self.findings}
+        return [w for w in self.waivers if w not in live]
+
+    def to_dict(self) -> Dict:
+        return {
+            "findings": [f.to_dict() for f in self.findings],
+            "waived": sorted({f.key for f in self.findings}
+                             & set(self.waivers)),
+            "stale_waivers": self.stale_waivers(),
+            "ok": not self.unwaived(),
+        }
+
+    def write_json(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=2, sort_keys=True)
+            f.write("\n")
+
+
+def load_baseline(path: Optional[str]) -> List[str]:
+    """Waiver keys from a baseline file (``None``/missing -> strict)."""
+    if path is None:
+        return []
+    with open(path) as f:
+        data = json.load(f)
+    waivers = data.get("waivers", [])
+    if not isinstance(waivers, list) or any(
+            not isinstance(w, str) for w in waivers):
+        raise ValueError(f"{path}: 'waivers' must be a list of finding keys")
+    return waivers

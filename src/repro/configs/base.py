@@ -1,7 +1,7 @@
 """Model / shape / run configuration dataclasses.
 
 One :class:`ModelConfig` covers all ten assigned architectures via a cyclic
-``block_pattern`` (mixer kind per layer position) × ``ffn_pattern`` (ffn kind
+``block_pattern`` (mixer kind per layer position) x ``ffn_pattern`` (ffn kind
 per layer position).  The FedOCS technique enters through ``tp_fusion``
 (DESIGN.md §2.1), selectable per config / CLI.
 """

@@ -29,6 +29,11 @@ class ChannelConfig:
     n_channels: int = 1             # OFDMA parallel channels
 
 
+# frozen, so one shared instance is a safe signature default (a call in a
+# default expression would allocate per-import and trips flake8-bugbear B008)
+_DEFAULT_CFG = ChannelConfig()
+
+
 @dataclasses.dataclass(frozen=True)
 class CommLoad:
     """Uplink/downlink load for one aggregation round (forward + backward)."""
@@ -54,7 +59,7 @@ class CommLoad:
 
 
 def ocs_load(n_workers: int, k_elems: int, bits: int,
-             cfg: ChannelConfig = ChannelConfig()) -> CommLoad:
+             cfg: ChannelConfig = _DEFAULT_CFG) -> CommLoad:
     """FedOCS: K payloads uplink (N-independent), one O(K) broadcast down."""
     id_bits = max(1, math.ceil(math.log2(max(n_workers, 2))))
     contention = k_elems * (bits + id_bits) * cfg.contention_slot_bits
@@ -73,7 +78,7 @@ def ocs_load(n_workers: int, k_elems: int, bits: int,
 
 
 def concat_load(n_workers: int, k_elems: int,
-                cfg: ChannelConfig = ChannelConfig()) -> CommLoad:
+                cfg: ChannelConfig = _DEFAULT_CFG) -> CommLoad:
     """Concat baseline: every worker sends all K elements; grads return per worker."""
     msgs = n_workers * k_elems
     return CommLoad(
@@ -89,7 +94,7 @@ def concat_load(n_workers: int, k_elems: int,
 
 
 def mean_load(n_workers: int, k_elems: int,
-              cfg: ChannelConfig = ChannelConfig()) -> CommLoad:
+              cfg: ChannelConfig = _DEFAULT_CFG) -> CommLoad:
     """Mean-pool baseline: every worker still transmits every element."""
     msgs = n_workers * k_elems
     return CommLoad(
@@ -105,7 +110,7 @@ def mean_load(n_workers: int, k_elems: int,
 
 
 def avg_pred_load(n_workers: int, n_classes: int,
-                  cfg: ChannelConfig = ChannelConfig()) -> CommLoad:
+                  cfg: ChannelConfig = _DEFAULT_CFG) -> CommLoad:
     """Prediction-averaging baseline: each worker uploads a class distribution."""
     msgs = n_workers * n_classes
     return CommLoad(

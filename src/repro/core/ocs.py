@@ -335,9 +335,12 @@ def ocs_maxpool_noisy_core(h: jax.Array, mask: jax.Array, id_bits: jax.Array,
         winner, contending, collided = contention_ops.noisy_contention(
             word, mask, total_bits, rng, p_keep,
             n_slots=n_slots, max_rounds=max_rounds)
-        slots = total_bits.astype(jnp.int32) * jnp.sum(contending)
-        rounds = jnp.sum((contending > 0).astype(jnp.int32))
-        collisions = jnp.sum(collided)
+        # pin the accumulators: jnp.sum promotes int/bool to the platform
+        # int, which becomes int64 under JAX_ENABLE_X64
+        slots = (total_bits.astype(jnp.int32)
+                 * jnp.sum(contending, dtype=jnp.int32))
+        rounds = jnp.sum(contending > 0, dtype=jnp.int32)
+        collisions = jnp.sum(collided, dtype=jnp.int32)
     else:
         def contention_round(alive, key):
             def slot(alive, d):
@@ -381,7 +384,7 @@ def ocs_maxpool_noisy_core(h: jax.Array, mask: jax.Array, id_bits: jax.Array,
             round_body, (alive0, jnp.int32(0), jnp.int32(0), done0),
             jnp.arange(max_rounds))
         winner = jnp.argmax(alive, axis=0).astype(jnp.int32)  # lowest-idx cap
-        collisions = jnp.sum(coll_rounds)
+        collisions = jnp.sum(coll_rounds, dtype=jnp.int32)
 
     true_code = jnp.max(jnp.where(mask[:, None], codes, 0), axis=0)
     correct = jnp.take_along_axis(codes, winner[None, :], axis=0)[0] \

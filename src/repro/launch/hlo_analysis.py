@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
+import warnings
 from collections import defaultdict
 from typing import Dict, List
 
@@ -51,19 +52,47 @@ class CollectiveStats:
         return sum(self.payload_bytes.values())
 
 
-def _shape_bytes(dtype: str, dims: str) -> int:
+# unknown dtypes encountered in non-strict parses: dtype -> occurrence count
+_UNKNOWN_DTYPES: Dict[str, int] = defaultdict(int)
+
+
+def unknown_dtype_counts() -> Dict[str, int]:
+    """Dtypes skipped by non-strict parses since the last reset (counted so
+    reports can surface them instead of silently corrupting byte totals)."""
+    return dict(_UNKNOWN_DTYPES)
+
+
+def reset_unknown_dtype_counts() -> None:
+    _UNKNOWN_DTYPES.clear()
+
+
+def _shape_bytes(dtype: str, dims: str, strict: bool = True) -> int:
     n = 1
     if dims.strip():
         for d in dims.split(","):
             n *= int(d)
-    return n * DTYPE_BYTES.get(dtype, 4)
+    width = DTYPE_BYTES.get(dtype)
+    if width is None:
+        if strict:
+            raise ValueError(
+                f"unknown HLO dtype {dtype!r}: add it to "
+                f"hlo_analysis.DTYPE_BYTES (guessing a width would corrupt "
+                f"the roofline byte totals)")
+        if dtype not in _UNKNOWN_DTYPES:
+            warnings.warn(
+                f"unknown HLO dtype {dtype!r}: its shapes are excluded from "
+                f"collective byte totals (add it to "
+                f"hlo_analysis.DTYPE_BYTES)", stacklevel=3)
+        _UNKNOWN_DTYPES[dtype] += 1
+        return 0
+    return n * width
 
 
-def _result_bytes(line: str, op_pos: int) -> int:
+def _result_bytes(line: str, op_pos: int, strict: bool = True) -> int:
     """Sum all shaped results appearing before the op name on the line."""
     total = 0
     for m in _SHAPE_RE.finditer(line[:op_pos]):
-        total += _shape_bytes(m.group(1), m.group(2))
+        total += _shape_bytes(m.group(1), m.group(2), strict)
     return total
 
 
@@ -78,8 +107,17 @@ def _group_size(line: str, default: int) -> int:
     return default
 
 
-def parse_collectives(hlo_text: str, default_group: int = 2
-                      ) -> CollectiveStats:
+def parse_collectives(hlo_text: str, default_group: int = 2, *,
+                      strict: bool = True) -> CollectiveStats:
+    """Collective counts/bytes of one HLO module.
+
+    ``strict=True`` (the default) raises on collective result dtypes
+    missing from :data:`DTYPE_BYTES` — an unknown f8/int4 width must not
+    silently corrupt roofline numbers.  ``strict=False`` warns once per
+    dtype, counts it in :func:`unknown_dtype_counts` and excludes its
+    shapes from the byte totals (for callers that only need op *counts*,
+    like the analysis pass's collective-freedom check).
+    """
     counts: Dict[str, int] = defaultdict(int)
     payload: Dict[str, int] = defaultdict(int)
     link = 0.0
@@ -89,7 +127,7 @@ def parse_collectives(hlo_text: str, default_group: int = 2
             if pos < 0:
                 continue
             canon = _CANON.get(op, op)
-            pb = _result_bytes(line, pos)
+            pb = _result_bytes(line, pos, strict)
             if pb == 0:
                 continue
             g = _group_size(line, default_group)

@@ -200,7 +200,10 @@ def attn_step(cfg, p: dict, x: jax.Array, positions: jax.Array,
             knew = layers.apply_rope(cfg, knew, positions[:, None])
 
         def upd(c, new, pos):
-            return jax.lax.dynamic_update_slice(c, new, (pos, 0, 0))
+            # literal starts must match pos's dtype (ints pick up int64
+            # under JAX_ENABLE_X64 and lax rejects the mix)
+            zero = jnp.zeros((), pos.dtype)
+            return jax.lax.dynamic_update_slice(c, new, (pos, zero, zero))
 
         k = jax.vmap(upd)(cache["k"], knew, positions)
         v = jax.vmap(upd)(cache["v"], vnew, positions)

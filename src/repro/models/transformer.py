@@ -1,4 +1,4 @@
-"""Block and stack composition: (mixer × ffn) blocks, scanned over periods.
+"""Block and stack composition: (mixer x ffn) blocks, scanned over periods.
 
 A config's layer plan is a cyclic pattern of ``(mixer, ffn)`` pairs
 (``ModelConfig.layer_plan``); the stack scans over ``n_periods`` repetitions

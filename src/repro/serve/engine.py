@@ -93,7 +93,7 @@ class ServeConfig:
     eos_id: int = 1
     greedy: bool = True
     protocol: Optional[Protocol] = None
-    clock: ChannelClock = ChannelClock()
+    clock: ChannelClock = dataclasses.field(default_factory=ChannelClock)
     seed: int = 0
 
     def __post_init__(self):

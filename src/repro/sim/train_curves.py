@@ -486,9 +486,11 @@ def _run_curves_scan(ccfg: CurveConfig, n_devices) -> CurveResult:
 # the public runners
 # ---------------------------------------------------------------------------
 
-def run_curves(ccfg: CurveConfig = CurveConfig(), *,
+def run_curves(ccfg: Optional[CurveConfig] = None, *,
                n_devices: Optional[int] = None) -> CurveResult:
     """Train the p_miss lane axis through the simulated channel, per bits.
+
+    ``ccfg=None`` runs the default :class:`CurveConfig` grid.
 
     For every ``bits`` value: ONE compiled train step (lane-vmapped over
     the traced ``(rng, Protocol)`` channel state) trains all
@@ -504,7 +506,8 @@ def run_curves(ccfg: CurveConfig = CurveConfig(), *,
     only changes placement (lanes are padded up to a device-count multiple
     and the padding is dropped before results are returned).
     """
-    return _run_curves_scan(ccfg, n_devices)
+    return _run_curves_scan(ccfg if ccfg is not None else CurveConfig(),
+                            n_devices)
 
 
 # ---------------------------------------------------------------------------

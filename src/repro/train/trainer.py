@@ -43,6 +43,9 @@ class TrainerConfig:
     # loss_fn takes a third rng argument and each step receives a key derived
     # as fold_in(PRNGKey(seed), step) — resume replays the exact noise stream.
     channel_rng_seed: Optional[int] = None
+    # the watchdog's clock, injectable so straggler detection can be driven
+    # deterministically in tests (the loop itself never reads wall time)
+    clock: Callable[[], float] = time.monotonic
 
 
 @dataclasses.dataclass
@@ -92,7 +95,7 @@ def train(loss_fn: Callable, init_values, optimizer, data_fn: Callable,
     durations: List[float] = []
 
     for step in range(start_step, tcfg.steps):
-        t0 = time.monotonic()
+        t0 = tcfg.clock()
         if delay_injector is not None and tcfg.data_deadline_s is not None:
             delay = delay_injector(step)
             if delay > tcfg.data_deadline_s:
@@ -110,7 +113,7 @@ def train(loss_fn: Callable, init_values, optimizer, data_fn: Callable,
             values, opt_state, err, metrics = step_fn(*args, err)
         else:
             values, opt_state, metrics = step_fn(*args)
-        dt = time.monotonic() - t0
+        dt = tcfg.clock() - t0
         if durations and dt > tcfg.watchdog_factor * float(
                 np.median(durations)):
             flagged.append(step)

@@ -1,0 +1,16 @@
+"""Seeded violation fixture for the `host-sync-in-jit` lint rule.
+
+Never imported.  The jitted scope below concretizes traced values three
+ways (`float()`, `np.asarray()`, `.item()`); each must be flagged by
+`host-sync-in-jit` and by nothing else.
+"""
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def step(x):
+    lr = float(x[0])
+    host = np.asarray(x)
+    return x * lr + x.sum().item() + host[0]

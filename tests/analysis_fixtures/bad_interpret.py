@@ -1,0 +1,11 @@
+"""Seeded violation fixture for the `interpret-hardcode` lint rule.
+
+Never imported — the lint is purely syntactic.  Every construct in this
+file must be flagged by `interpret-hardcode` and by nothing else.
+"""
+
+INTERPRET = True
+
+
+def launch(kernel, x):
+    return kernel(x, interpret=True)

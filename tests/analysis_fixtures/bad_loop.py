@@ -1,0 +1,16 @@
+"""Seeded violation fixture for the `eager-loop-in-jit` lint rule.
+
+Never imported.  The Python loop below unrolls eight `jnp.sin` calls into
+the trace; it must be flagged by `eager-loop-in-jit` and by nothing else.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def accumulate(xs):
+    total = jnp.zeros((), jnp.float32)
+    for i in range(8):
+        total = total + jnp.sin(xs[i])
+    return total

@@ -1,0 +1,17 @@
+"""Seeded violation fixture for the `nondeterminism` lint rule.
+
+Never imported.  Wall clocks and global-state RNGs are illegal in engine
+code (and only there — the same file lints clean with ``engine=False``,
+which is how benchmark timing loops stay legal).
+"""
+
+import random
+import time
+
+import numpy as np
+
+
+def schedule_jitter():
+    t0 = time.time()
+    jitter = random.random() + np.random.rand()
+    return t0, jitter

@@ -1,0 +1,332 @@
+"""The static-analysis pass (`repro.analysis`).
+
+Four layers of coverage:
+
+* the contract registry is green on the repo itself — every registered
+  entry point (protocol aggregate, fused/scheduled curve engines, serve
+  tick, sweep, donated train step) passes its declared trace-level checks
+  on **abstract avals only**, proving zero-recompile/f64/host-sync hygiene
+  without executing a single training or serve step;
+* every seeded violation (in-test functions + `tests/analysis_fixtures/`)
+  is flagged by **exactly** the intended rule;
+* a no-false-positive pass: the AST lint stays silent on
+  `src/repro/protocol/` and `src/repro/serve/` (and the whole repo);
+* report/waiver plumbing and the `hlo_analysis` strict-dtype behaviour.
+"""
+
+import json
+import pathlib
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import contracts, lint, registry
+from repro.analysis import report as R
+from repro.launch import hlo_analysis
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+FIXTURES = pathlib.Path(__file__).parent / "analysis_fixtures"
+
+
+def _only_rule(findings, rule):
+    """Fixtures must be flagged by exactly the intended rule — a second
+    rule firing is a false positive, none firing is a false negative."""
+    assert findings, f"seeded {rule} violation produced no findings"
+    assert {f.rule for f in findings} == {rule}, \
+        f"expected only {rule}, got {[f.key for f in findings]}"
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# the registry is green on the repo (contracts double as pytest fixtures)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", registry.contract_names())
+def test_contract_clean(name):
+    # trace-level only: jaxpr-hash recompile stability across perturbed
+    # p_miss leaves, f64 hygiene under enable_x64, host-sync freedom and
+    # lowered donation — all on ShapeDtypeStruct args, zero executions
+    findings = registry.check_contract(registry.get_contract(name),
+                                       skip_hlo=True)
+    assert findings == [], [f.render() for f in findings]
+
+
+@pytest.mark.slow
+def test_contracts_hlo_clean():
+    findings = registry.check_all(skip_hlo=False)
+    assert findings == [], [f.render() for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# seeded trace-level violations
+# ---------------------------------------------------------------------------
+
+def test_seeded_recompile_hazard_baked_constant():
+    state = {}
+
+    def argsf(p):
+        state["p"] = float(p)          # host-materialized channel quality
+        return (np.zeros((4,), np.float32),)
+
+    def fn(x):
+        return x * state["p"]          # baked into the trace as a constant
+
+    fs = _only_rule(contracts.check_trace_stable("seed", fn, argsf),
+                    R.RECOMPILE_HAZARD)
+    assert {f.detail for f in fs} == {"jaxpr-hash"}
+
+
+def test_seeded_recompile_hazard_static_leaf():
+    def argsf(p):
+        # the leaf value lands in the treedef (dict key = static metadata)
+        return ({f"p{p:g}": np.zeros((3,), np.float32)},)
+
+    fs = _only_rule(
+        contracts.check_trace_stable(
+            "seed", lambda d: sum(jax.tree_util.tree_leaves(d)), argsf),
+        R.RECOMPILE_HAZARD)
+    assert {f.detail for f in fs} == {"treedef"}
+
+
+def test_seeded_recompile_hazard_shape_unstable():
+    def argsf(p):
+        return (np.zeros((int(p * 100),), np.float32),)
+
+    fs = _only_rule(
+        contracts.check_trace_stable("seed", lambda x: x * 2.0, argsf),
+        R.RECOMPILE_HAZARD)
+    assert {f.detail for f in fs} == {"aval"}
+
+
+def test_seeded_recompile_hazard_concretization():
+    def fn(x):
+        if x[0] > 0:                   # Python branch on a traced value
+            return x
+        return -x
+
+    fs = _only_rule(
+        contracts.check_trace_stable(
+            "seed", fn, lambda p: (np.full((2,), p, np.float32),)),
+        R.RECOMPILE_HAZARD)
+    assert {f.detail for f in fs} == {"trace-error"}
+
+
+def test_trace_stable_clean():
+    def argsf(p):
+        return (np.full((4,), p, np.float32),)
+
+    assert contracts.check_trace_stable(
+        "seed", lambda x: jnp.tanh(x) * x, argsf) == []
+
+
+def test_seeded_f64_promotion():
+    def argsf(p):
+        return (np.zeros((4,), np.float32),)
+
+    def bad(x):
+        return x + jnp.zeros((4,))     # unpinned dtype promotes under x64
+
+    fs = _only_rule(contracts.check_no_f64("seed", bad, argsf),
+                    R.F64_PROMOTION)
+    assert any("float64" in f.detail for f in fs)
+
+    def good(x):
+        return x + jnp.zeros((4,), jnp.float32)
+
+    assert contracts.check_no_f64("seed", good, argsf) == []
+
+
+def test_seeded_host_sync():
+    args = (np.zeros((4,), np.float32),)
+
+    def fn(x):
+        return jax.pure_callback(
+            lambda a: a, jax.ShapeDtypeStruct((4,), np.float32), x)
+
+    fs = _only_rule(contracts.check_no_host_sync("seed", fn, args),
+                    R.HOST_SYNC)
+    assert fs[0].detail == "pure_callback"
+    # an explicit per-contract allowlist admits it
+    assert contracts.check_no_host_sync(
+        "seed", fn, args, allowlist=("pure_callback",)) == []
+
+
+def test_seeded_donation_alias():
+    args = (np.zeros((4,), np.float32), np.zeros((4,), np.float32))
+    undonated = jax.jit(lambda x, y: (x + y, x - y))
+    fs = _only_rule(contracts.check_donation("seed", undonated, args, 1),
+                    R.DONATION_ALIAS)
+    assert fs[0].detail == "lowered"
+    donated = jax.jit(lambda x, y: (x + y, x - y), donate_argnums=(0,))
+    assert contracts.check_donation("seed", donated, args, 1) == []
+
+
+# ---------------------------------------------------------------------------
+# seeded lint violations (tests/analysis_fixtures/, never imported)
+# ---------------------------------------------------------------------------
+
+def _lint_fixture(name, engine=False):
+    return lint.lint_file(FIXTURES / name,
+                          f"tests/analysis_fixtures/{name}", engine=engine)
+
+
+def test_fixture_interpret_hardcode():
+    fs = _only_rule(_lint_fixture("bad_interpret.py"), R.INTERPRET_HARDCODE)
+    assert {f.detail for f in fs} == {"interpret=True", "INTERPRET=True"}
+    assert all(f.line for f in fs)
+
+
+def test_fixture_host_sync_in_jit():
+    fs = _only_rule(_lint_fixture("bad_hostsync.py"), R.HOST_SYNC_IN_JIT)
+    assert {f.detail.split(":", 1)[1] for f in fs} == \
+        {".item()", "float()", "np.asarray()"}
+
+
+def test_fixture_eager_loop_in_jit():
+    fs = _only_rule(_lint_fixture("bad_loop.py"), R.EAGER_LOOP_IN_JIT)
+    assert fs[0].detail == "accumulate:loop"
+
+
+def test_fixture_nondeterminism_engine_only():
+    fs = _only_rule(_lint_fixture("bad_nondet.py", engine=True),
+                    R.NONDETERMINISM)
+    assert {f.detail for f in fs} == \
+        {"time.time", "random.random", "np.random.rand"}
+    # the same file is legal outside engine dirs (benchmarks time things)
+    assert _lint_fixture("bad_nondet.py", engine=False) == []
+
+
+def test_seeded_missing_kernel_ref(tmp_path):
+    pkg = tmp_path / "src/repro/kernels/fake_op"
+    pkg.mkdir(parents=True)
+    (pkg / "ops.py").write_text("def op():\n    pass\n")
+    fs = _only_rule(lint.check_kernel_refs(tmp_path), R.MISSING_KERNEL_REF)
+    assert {f.detail for f in fs} == {"ref.py", "parity-op"}
+    # shipping ref.py + a ParityOp grid registration clears both
+    (pkg / "ref.py").write_text("def ref():\n    pass\n")
+    (tmp_path / "tests").mkdir()
+    (tmp_path / "tests/test_parity.py").write_text(
+        "GRID = [ParityOp('fake_op')]\n")
+    assert lint.check_kernel_refs(tmp_path) == []
+
+
+# ---------------------------------------------------------------------------
+# no false positives on the real tree
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("subtree", ["src/repro/protocol", "src/repro/serve"])
+def test_lint_no_false_positives(subtree):
+    findings = []
+    for path in sorted((REPO / subtree).rglob("*.py")):
+        findings += lint.lint_file(
+            path, path.relative_to(REPO).as_posix(), engine=True)
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_repo_lint_clean():
+    findings = lint.lint_repo(REPO)
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_cli_lint_only_clean(tmp_path):
+    from repro.analysis.__main__ import main
+    out = tmp_path / "report.json"
+    assert main(["--root", str(REPO), "--skip-contracts",
+                 "--json", str(out)]) == 0
+    data = json.loads(out.read_text())
+    assert data["ok"] is True
+    assert data["findings"] == []
+
+
+# ---------------------------------------------------------------------------
+# shared dispatch-count assertions (the bench self-checks call these)
+# ---------------------------------------------------------------------------
+
+def test_dispatch_assertions():
+    contracts.assert_trace_count(2, 2, "engine")
+    with pytest.raises(RuntimeError, match="recompiled"):
+        contracts.assert_trace_count(3, 2, "engine")
+
+    assert contracts.fused_dispatch_bound(24, 8) == 5
+    contracts.assert_fused_dispatches(5, 24, 8)
+    with pytest.raises(RuntimeError, match="fusion bound"):
+        contracts.assert_fused_dispatches(6, 24, 8)
+
+    contracts.assert_single_dispatch({"sched": 1}, "sched", "run")
+    with pytest.raises(RuntimeError, match="ONE"):
+        contracts.assert_single_dispatch({"sched": 2}, "sched", "run")
+
+    contracts.assert_tick_dispatch_bracket("run", 10, 5, 4)
+    with pytest.raises(RuntimeError, match="one fused dispatch per"):
+        contracts.assert_tick_dispatch_bracket("run", 10, 2, 4)
+    with pytest.raises(RuntimeError, match="one fused dispatch per"):
+        contracts.assert_tick_dispatch_bracket("run", 10, 11, 4)
+
+
+# ---------------------------------------------------------------------------
+# report / waiver plumbing
+# ---------------------------------------------------------------------------
+
+def test_waiver_baseline_roundtrip(tmp_path):
+    f1 = R.Finding(R.HOST_SYNC, "contract:x", "pure_callback", "m", line=12)
+    f2 = R.Finding(R.NONDETERMINISM, "a.py", "time.time", "m")
+    rep = R.Report(waivers=[f1.key, "stale::rule::key"])
+    rep.extend([f1, f2])
+    assert [f.key for f in rep.unwaived()] == [f2.key]
+    assert rep.stale_waivers() == ["stale::rule::key"]
+    assert ":12" not in f1.key           # line drift never breaks waivers
+    p = tmp_path / "report.json"
+    rep.write_json(str(p))
+    data = json.loads(p.read_text())
+    assert data["ok"] is False
+    assert data["waived"] == [f1.key]
+    assert data["stale_waivers"] == ["stale::rule::key"]
+
+
+def test_load_baseline(tmp_path):
+    assert R.load_baseline(None) == []
+    p = tmp_path / "b.json"
+    p.write_text('{"waivers": ["a::b::c"]}\n')
+    assert R.load_baseline(str(p)) == ["a::b::c"]
+    p.write_text('{"waivers": [1]}\n')
+    with pytest.raises(ValueError, match="list of finding keys"):
+        R.load_baseline(str(p))
+
+
+def test_committed_baseline_is_empty():
+    # CI is strict: the committed baseline carries no waivers (add one only
+    # with a comment-worthy reason in the PR that adds it)
+    assert R.load_baseline(str(REPO / "analysis_baseline.json")) == []
+
+
+# ---------------------------------------------------------------------------
+# hlo_analysis: unknown dtypes must not silently corrupt byte totals
+# ---------------------------------------------------------------------------
+
+_F4_LINE = ("  %r = f4[8,2]{1,0} all-reduce(f4[8,2] %x), "
+            "replica_groups={{0,1}}")
+
+
+def test_unknown_dtype_strict_raises():
+    with pytest.raises(ValueError, match="unknown HLO dtype 'f4'"):
+        hlo_analysis.parse_collectives(_F4_LINE)
+
+
+def test_unknown_dtype_nonstrict_warns_once_and_counts():
+    hlo_analysis.reset_unknown_dtype_counts()
+    try:
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            stats = hlo_analysis.parse_collectives(
+                "\n".join([_F4_LINE] * 2), strict=False)
+        assert stats.counts == {}        # f4 shapes excluded from totals
+        assert stats.link_bytes == 0.0
+        msgs = [x for x in w if "unknown HLO dtype" in str(x.message)]
+        assert len(msgs) == 1            # warn once per dtype, not per line
+        assert hlo_analysis.unknown_dtype_counts() == {"f4": 2}
+    finally:
+        hlo_analysis.reset_unknown_dtype_counts()
+    assert hlo_analysis.unknown_dtype_counts() == {}
