@@ -19,7 +19,13 @@ engine contracts:
     scheduled run reproduces the plain run's first-bits noisy lanes bit for
     bit (accuracy, nll, loss history AND trained parameters),
   * the adaptive schedule runs end-to-end in ONE ``sched`` dispatch with
-    every chosen depth drawn from its candidate set.
+    every chosen depth drawn from its candidate set,
+  * the 2-D compressed-comms engine (``run_curves_dp``: p_miss lanes x DP
+    shards, ``CompressedAllReduce`` inside the fused scan) stays one
+    dispatch per ``bits`` value and its MEASURED per-step DP payload bits
+    equal the analytic exact-k bill — the unified uplink + DP accounting
+    lands in the emitted records (``total_comm_bits``) and BENCH json
+    (``dp_payload_bits``).
 
 ``--bench-json PATH`` (or ``bench_json_path=``) additionally emits the
 timing/dispatch numbers as ``BENCH_curves.json`` — ``benchmarks/run.py``
@@ -31,6 +37,7 @@ writes the canonical copy at the repo root for trajectory tracking.
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import sys
 import time
@@ -39,9 +46,14 @@ from typing import List, Optional
 import numpy as np
 
 from repro import analysis
+from repro.optim.compressed_allreduce import CompressedAllReduce
 from repro.protocol import CollisionAdaptiveBits, FixedBits
 from repro.sim import results as sim_results
 from repro.sim import train_curves as tc
+
+# the DP compression operating point both tiers bench: 1/8 kept + EF
+_DP_K_FRAC = 1 / 8
+_DP_SHARDS = 2
 
 
 def _smoke_config() -> tc.CurveConfig:
@@ -143,12 +155,42 @@ def run(smoke: bool = False, json_path: Optional[str] = None,
         raise RuntimeError("adaptive scheduled run produced non-finite acc")
     sched_switches = int(np.sum(np.diff(adaptive.bits_per_step) != 0))
 
+    # the 2-D compressed-comms engine: p_miss lanes x DP batch shards with
+    # CompressedAllReduce (top-k + EF) inside the fused scan — still one
+    # dispatch per bits value, and the payload bits MEASURED on device must
+    # equal the analytic exact-k bill every step
+    dcfg = dataclasses.replace(ccfg, dp_shards=_DP_SHARDS)
+    car = CompressedAllReduce.topk(_DP_K_FRAC)
+    tc.reset_trace_counts()
+    tc.reset_dispatch_counts()
+    t0 = time.perf_counter()
+    dp = tc.run_curves_dp(dcfg, car)
+    wall_dp = time.perf_counter() - t0
+    traces_d, disp_d = tc.trace_counts(), tc.dispatch_counts()
+    analysis.assert_trace_count(traces_d["fused_dp"], n_bits,
+                                "dp curve engine")
+    per_bits_dp = disp_d["fused_dp"] / n_bits
+    analysis.assert_fused_dispatches(per_bits_dp, ccfg.steps, ccfg.log_every)
+    if not np.all(dp.dp_payload_bits == dp.dp_payload_bits_step):
+        raise RuntimeError(
+            "dp accounting broken: measured per-step payload bits "
+            f"{np.unique(dp.dp_payload_bits)} != analytic exact-k bill "
+            f"{dp.dp_payload_bits_step}")
+    if not np.all(dp.dp_payload_bits_total
+                  == dp.dp_payload_bits_step * ccfg.steps):
+        raise RuntimeError("dp accounting broken: run total != steps x bill")
+    if not np.isfinite(dp.acc).all():
+        raise RuntimeError("dp curve run produced non-finite accuracy")
+
     # wall-clock includes the (cacheable) compile
     sps_scan = trained_steps / wall_scan
     sps_sched = ccfg.steps / wall_sched
+    sps_dp = trained_steps / wall_dp
 
     records = sim_results.summarize_curves(curves)
+    dp_records = sim_results.summarize_dp_curves(dp)
     rows = sim_results.curve_rows(records)
+    rows += sim_results.dp_curve_rows(dp_records)
     rows.append(
         f"curves/engine_scan,{wall_scan / trained_steps * 1e6:.0f},"
         f"steps_per_sec={sps_scan:.1f};dispatches_per_bits="
@@ -160,16 +202,25 @@ def run(smoke: bool = False, json_path: Optional[str] = None,
         f"switches={sched_switches};"
         f"final_bits={int(adaptive.bits_per_step[-1])}")
     rows.append(
+        f"curves/engine_dp,{wall_dp / trained_steps * 1e6:.0f},"
+        f"steps_per_sec={sps_dp:.1f};dispatches_per_bits={per_bits_dp:g};"
+        f"compiles={traces_d['fused_dp']};dp_shards={_DP_SHARDS};"
+        f"k_frac={_DP_K_FRAC:g};"
+        f"dp_payload_bits_step={dp.dp_payload_bits_step};"
+        f"dp_payload_frac="
+        f"{dp.dp_payload_bits_step / dp.dp_dense_bits_step:.3f}")
+    rows.append(
         f"curves/dispatch,0,scan_bound={bound};"
         f"dispatches_per_bits={per_bits_scan:g}")
     rows.append(
         f"curves/meta,0,"
         f"bits={n_bits};lanes={len(ccfg.p_miss)};steps={ccfg.steps};"
-        f"p0_matches_ideal=1;fixed_schedule_bitwise_equal=1")
+        f"p0_matches_ideal=1;fixed_schedule_bitwise_equal=1;"
+        f"dp_payload_measured_equals_analytic=1")
 
     if json_path:
         with open(json_path, "w") as f:
-            json.dump(records, f, indent=2, sort_keys=True)
+            json.dump(records + dp_records, f, indent=2, sort_keys=True)
             f.write("\n")
     if bench_json_path:
         bench = {
@@ -191,6 +242,20 @@ def run(smoke: bool = False, json_path: Optional[str] = None,
                           "candidates": list(ccfg.bits),
                           "switches": sched_switches,
                           "final_bits": int(adaptive.bits_per_step[-1])},
+                "dp": {"wall_s": round(wall_dp, 3),
+                       "steps_per_sec": round(sps_dp, 2),
+                       "dispatches_per_bits": per_bits_dp,
+                       "traces_per_bits": traces_d["fused_dp"] / n_bits,
+                       "dp_shards": _DP_SHARDS},
+            },
+            "dp_payload_bits": {
+                "k_frac": _DP_K_FRAC,
+                "per_step": dp.dp_payload_bits_step,
+                "dense_per_step": dp.dp_dense_bits_step,
+                "payload_frac": round(
+                    dp.dp_payload_bits_step / dp.dp_dense_bits_step, 4),
+                "run_total": int(dp.dp_payload_bits_total.max()),
+                "measured_equals_analytic": True,
             },
             "parity_bitwise": True,          # FixedBits sched == plain run
             "p0_matches_ideal": True,

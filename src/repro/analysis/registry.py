@@ -148,6 +148,49 @@ def _build_curves_fused() -> Entry:
     return Entry(fn=fused, argsf=_curve_args(ccfg, per_bits, logged))
 
 
+def _build_curves_fused_dp() -> Entry:
+    from repro.optim.compressed_allreduce import CompressedAllReduce
+    from repro.core import vertical
+    from repro.sim import train_curves as tc
+
+    ccfg = dataclasses.replace(_tiny_curve_config(), dp_shards=2)
+    compress = CompressedAllReduce.topk(0.25)
+    per_bits = tc._make_steps(ccfg, 8)
+    logged = ccfg.logged_steps()
+    fused = tc._make_fused_dp(ccfg, compress, per_bits, len(logged),
+                              n_s=1, n_d=1)
+
+    vcfg_n, opt = per_bits[0], per_bits[2]
+    params0 = jax.eval_shape(lambda k: vertical.init(vcfg_n, k),
+                             jax.random.PRNGKey(0))
+    opt0 = jax.eval_shape(opt.init, params0)
+    patch_dim = (ccfg.hw // ccfg.grid) ** 2
+    sds = jax.ShapeDtypeStruct
+    views = sds((ccfg.n_workers, ccfg.n_train, patch_dim), jnp.float32)
+    labels = sds((ccfg.n_train,), jnp.int32)
+    vviews = sds((ccfg.n_workers, ccfg.n_val, patch_dim), jnp.float32)
+    vlabels = sds((ccfg.n_val,), jnp.int32)
+    slots = tc._log_slots(ccfg, logged)
+    lane_keys, k_data = _key_data(len(ccfg.p_miss)), _key_data()
+    shard_ids = np.arange(ccfg.dp_shards, dtype=np.int32)
+    lanes = len(ccfg.p_miss)
+
+    def argsf(p):
+        # the perturbation lands in BOTH rebindable state leaves: the lane
+        # p_miss axis AND the error-feedback memory values — the EF carry
+        # must be ordinary traced data, never a recompile trigger (concrete
+        # arrays here, so differing values would show up as differing
+        # jaxprs if they were ever baked in)
+        p_lanes = np.asarray([0.0, p], np.float32)
+        err0 = jax.tree.map(
+            lambda x: np.full((lanes, ccfg.dp_shards) + tuple(x.shape), p,
+                              np.float32), params0)
+        return (params0, opt0, err0, lane_keys, p_lanes, shard_ids, k_data,
+                views, labels, vviews, vlabels, slots)
+
+    return Entry(fn=fused, argsf=argsf)
+
+
 def _build_curves_sched() -> Entry:
     from repro.protocol import CollisionAdaptiveBits
     from repro.sim import train_curves as tc
@@ -247,6 +290,13 @@ CONTRACTS: Tuple[Contract, ...] = (
     Contract(
         name="curves.fused",
         build=_build_curves_fused,
+        max_dispatches="1 per bits value "
+                       "(+ <= ceil(steps/log_every)+2 result fetches)",
+    ),
+    Contract(
+        name="curves.fused_dp",
+        build=_build_curves_fused_dp,
+        recompile_free_over="protocol.p_miss + error-feedback memory",
         max_dispatches="1 per bits value "
                        "(+ <= ceil(steps/log_every)+2 result fetches)",
     ),

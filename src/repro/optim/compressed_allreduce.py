@@ -1,0 +1,222 @@
+"""Compressed data-parallel all-reduce as a first-class policy object.
+
+:class:`repro.protocol.Protocol` made the *uplink* half of the paper's
+communication story a frozen pytree value with measured accounting
+(``ProtocolAccounting``).  :class:`CompressedAllReduce` does the same for
+the *data-parallel* half: top-k sparsification with error feedback
+(``optim/grad_compression.py``, the generalization of the Eq.-6
+winner-sparse backward) behind ONE entry point,
+
+    ``reduce(grads, err, axis_name=...) -> (reduced, new_err, DPAccounting)``
+
+with the EF memory threaded as an ordinary traced pytree (a scan carry /
+donated buffer, never a recompile trigger) and the payload bits billed from
+the **actual kept-element counts** of the exact-k masks — so the number in
+:class:`DPAccounting` is a measurement, not the analytic ``2*k_frac``
+estimate (which the per-leaf k floor makes wrong for small leaves).
+
+Pytree layout mirrors ``Protocol``'s discipline, with one inversion: a
+``CompressedAllReduce`` has NO data leaves at all — ``k_frac`` and the
+payload encoding are compile-time policy (they select top_k sizes), so the
+whole object is static, hashable metadata.  What *is* traced is the state it
+operates on (gradients, EF memory) and the counters it returns.
+
+Determinism contract: the all-reduce is implemented as
+``all_gather(axis=0)`` + ``jnp.sum(axis=0)`` rather than a raw ``psum`` so
+that the floating-point reduction order is the fixed stacked-axis order on
+every backend.  A ``vmap(axis_name=...)`` single-device run and a
+``shard_map`` multi-device run therefore sum the *identical* ``(D, ...)``
+array in the identical order — the bit-for-bit parity the 2-D curve engine
+(``sim/train_curves.run_curves_dp``) asserts.  Integer accounting uses
+``lax.psum`` (exact for ints).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import grad_compression
+
+
+@dataclasses.dataclass(frozen=True)
+class DPAccounting:
+    """Measured payload accounting of one ``CompressedAllReduce.reduce``.
+
+    All counters are () int32 arrays (traced, so they thread through scans
+    and vmaps like ``ProtocolAccounting``), totalled over every
+    participating rank when ``axis_name`` is given:
+
+    * ``payload_bits`` — bits actually shipped into the all-reduce this
+      step: per leaf, (kept nonzeros) x (value_bits + index bits), summed
+      over leaves and ranks.  Kept counts come from the exact-k masks, so
+      with the tie-exact ``topk_mask`` this equals the analytic
+      ``CompressedAllReduce.payload_bits(tree) * n_ranks``.
+    * ``kept_elems`` — total kept (transmitted) elements across leaves and
+      ranks.
+    * ``dense_bits`` — what an uncompressed all-reduce would have shipped
+      (total elements x value_bits x n_ranks), the denominator for the
+      achieved compression ratio.
+    """
+
+    payload_bits: jax.Array  # () int32
+    kept_elems: jax.Array    # () int32
+    dense_bits: jax.Array    # () int32
+
+    @staticmethod
+    def zeros() -> "DPAccounting":
+        return DPAccounting(payload_bits=jnp.int32(0),
+                            kept_elems=jnp.int32(0),
+                            dense_bits=jnp.int32(0))
+
+
+jax.tree_util.register_dataclass(
+    DPAccounting,
+    data_fields=["payload_bits", "kept_elems", "dense_bits"],
+    meta_fields=[])
+
+
+def _leaf_index_bits(n: int) -> int:
+    """Bits to address one element of an n-element leaf (>= 1)."""
+    return max(1, math.ceil(math.log2(max(n, 2))))
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressedAllReduce:
+    """One DP gradient-compression policy as a frozen (all-static) pytree.
+
+    Do not call the constructor directly — use :meth:`topk`.  Fields:
+
+    * ``k_frac`` — kept fraction per tensor; each leaf keeps exactly
+      ``max(1, int(n * k_frac))`` largest-|.| entries (error feedback
+      accumulates the rest, including the dtype-cast residual).
+    * ``value_bits`` — wire width of one kept value (32 = raw float32).
+    * ``index_bits`` — wire width of one kept index; ``None`` derives
+      ``ceil(log2(n))`` per leaf (the tight encoding), an int fixes a
+      uniform width (e.g. 32 for the naive value+index encoding that
+      ``grad_compression.payload_fraction`` bills at 2x per element).
+    """
+
+    k_frac: float
+    value_bits: int = 32
+    index_bits: Optional[int] = None
+
+    def __post_init__(self):
+        if not (0.0 < self.k_frac <= 1.0):
+            raise ValueError(f"k_frac must be in (0, 1], got {self.k_frac}")
+        if not (1 <= self.value_bits <= 32):
+            raise ValueError(
+                f"value_bits must be in [1, 32], got {self.value_bits}")
+        if self.index_bits is not None and self.index_bits < 1:
+            raise ValueError(
+                f"index_bits must be >= 1 or None, got {self.index_bits}")
+
+    @classmethod
+    def topk(cls, k_frac: float, *, value_bits: int = 32,
+             index_bits: Optional[int] = None) -> "CompressedAllReduce":
+        """Top-k magnitude sparsification with error feedback."""
+        return cls(k_frac=float(k_frac), value_bits=value_bits,
+                   index_bits=index_bits)
+
+    # -- EF state -----------------------------------------------------------
+
+    def init_error(self, params):
+        """Zero error-feedback memory shaped like ``params`` (f32)."""
+        return grad_compression.init_error(params)
+
+    # -- analytic payload facts (host-side, ints) ---------------------------
+
+    def leaf_index_bits(self, n: int) -> int:
+        return (self.index_bits if self.index_bits is not None
+                else _leaf_index_bits(n))
+
+    def leaf_payload_bits(self, n: int) -> int:
+        """Wire bits for ONE rank's push of an n-element leaf."""
+        kept = grad_compression.topk_count(n, self.k_frac)
+        return kept * (self.value_bits + self.leaf_index_bits(n))
+
+    def payload_bits(self, tree) -> int:
+        """Analytic wire bits for ONE rank's push of the whole tree.
+
+        ``reduce``'s measured ``DPAccounting.payload_bits`` equals this
+        times the rank count — the exact-k masks guarantee it.
+        """
+        sizes = _leaf_sizes(tree)
+        return sum(self.leaf_payload_bits(n) for n in sizes)
+
+    def dense_bits(self, tree) -> int:
+        """Wire bits an uncompressed push of the tree would cost (one rank)."""
+        return sum(n * self.value_bits for n in _leaf_sizes(tree))
+
+    def payload_fraction(self, tree) -> float:
+        """Achieved compression ratio vs dense (one rank)."""
+        return self.payload_bits(tree) / self.dense_bits(tree)
+
+    # -- the reduction law --------------------------------------------------
+
+    def reduce(self, grads, err, *, axis_name: Optional[str] = None
+               ) -> Tuple[object, object, DPAccounting]:
+        """Compress, all-reduce, and bill one gradient tree.
+
+        ``grads``/``err`` are per-rank trees (no leading rank axis); inside
+        a ``shard_map`` or ``vmap(axis_name=...)`` over the DP axis, pass
+        that ``axis_name`` and every rank receives the summed sparse
+        gradients plus accounting totalled over ranks.  With
+        ``axis_name=None`` this is the degenerate 1-rank all-reduce:
+        ``reduced`` is the rank's own sparse tree.
+
+        Returns ``(reduced, new_err, DPAccounting)``.  ``reduced`` is NOT
+        divided by the rank count — callers choose sum vs mean semantics.
+        """
+        leaves, treedef = jax.tree.flatten(grads)
+        err_leaves = treedef.flatten_up_to(err)
+
+        sparse_leaves, new_err_leaves = [], []
+        payload = jnp.int32(0)
+        kept_total = jnp.int32(0)
+        for g, e in zip(leaves, err_leaves):
+            sparse, new_err, kept = grad_compression.compress_counted(
+                g, e, self.k_frac)
+            n = int(np.prod(np.shape(g)))
+            bits_per = jnp.int32(self.value_bits + self.leaf_index_bits(n))
+            payload = payload + kept * bits_per
+            kept_total = kept_total + kept
+            sparse_leaves.append(sparse)
+            new_err_leaves.append(new_err)
+
+        dense = jnp.int32(self.dense_bits(grads))
+        if axis_name is None:
+            reduced_leaves = sparse_leaves
+        else:
+            # all_gather + fixed-order sum (not raw psum): both the vmap
+            # fallback and the mesh path reduce the identical (D, ...) stack
+            # in the identical order -> bitwise parity across topologies.
+            reduced_leaves = [
+                jnp.sum(jax.lax.all_gather(s, axis_name, axis=0), axis=0)
+                for s in sparse_leaves]
+            payload = jax.lax.psum(payload, axis_name)
+            kept_total = jax.lax.psum(kept_total, axis_name)
+            dense = jax.lax.psum(dense, axis_name)
+
+        acct = DPAccounting(payload_bits=payload, kept_elems=kept_total,
+                            dense_bits=dense)
+        return (treedef.unflatten(reduced_leaves),
+                treedef.unflatten(new_err_leaves), acct)
+
+
+def _leaf_sizes(tree):
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        raise ValueError("CompressedAllReduce: tree has no leaves")
+    return [int(np.prod(np.shape(leaf))) for leaf in leaves]
+
+
+jax.tree_util.register_dataclass(
+    CompressedAllReduce,
+    data_fields=[],
+    meta_fields=["k_frac", "value_bits", "index_bits"])

@@ -8,6 +8,21 @@ tensor, accumulates the residual locally, and adds it to the next step's
 gradient.  With k = 1/16..1/64 the DP all-reduce payload shrinks
 proportionally at negligible convergence cost (validated in
 ``tests/test_grad_compression.py``).
+
+Three invariants this module guarantees (each was a bug once):
+
+* ``topk_mask`` keeps **exactly** ``k = max(1, int(n * k_frac))`` entries
+  per tensor, including under threshold ties — selection scatters over
+  ``lax.top_k`` indices rather than comparing against the k-th value, so
+  zero-heavy or quantized gradients cannot ship near-dense payloads.
+* The error memory accumulates the **dtype-quantization residual** too:
+  the residual is computed against the value actually transmitted
+  (``sparse.astype(g.dtype)``), so for bf16/fp16 gradients the cast error
+  feeds back instead of being silently dropped each step.  Exactly:
+  ``sparse.astype(f32) + new_err == g.astype(f32) + err``.
+* ``payload_fraction`` bills the **per-leaf** k floors: small leaves
+  (biases, norms) keep ``max(1, int(n*k_frac))`` elements, which can be a
+  far larger fraction of the leaf than ``k_frac``.
 """
 
 from __future__ import annotations
@@ -16,23 +31,50 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+
+def topk_count(n: int, k_frac: float) -> int:
+    """Number of entries kept for a tensor of ``n`` elements."""
+    return max(1, int(n * k_frac))
 
 
 def topk_mask(x: jax.Array, k_frac: float) -> jax.Array:
-    """Boolean mask keeping the k largest-|x| entries (per tensor)."""
+    """Boolean mask keeping exactly the k largest-|x| entries (per tensor).
+
+    Ties at the threshold are broken by ``lax.top_k``'s stable ordering
+    (lowest flat index wins), so the mask always has exactly
+    ``max(1, int(n * k_frac))`` True entries.
+    """
     flat = jnp.abs(x.reshape(-1))
-    k = max(1, int(flat.shape[0] * k_frac))
-    thresh = jax.lax.top_k(flat, k)[0][-1]
-    return (jnp.abs(x) >= thresh)
+    k = topk_count(flat.shape[0], k_frac)
+    _, idx = jax.lax.top_k(flat, k)
+    mask = jnp.zeros(flat.shape, jnp.bool_).at[idx].set(True)
+    return mask.reshape(x.shape)
+
+
+def compress_counted(g: jax.Array, err: jax.Array, k_frac: float
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (sparse gradient, new error memory, kept-element count).
+
+    The residual is computed against the value actually applied /
+    transmitted (``sparse`` in ``g.dtype``), so dtype-cast error is
+    accumulated rather than lost.  The count is an int32 scalar equal to
+    the number of nonzero mask entries (== ``topk_count``; traced so it
+    composes with vmap/psum for measured payload accounting).
+    """
+    corrected = g.astype(jnp.float32) + err
+    mask = topk_mask(corrected, k_frac)
+    sparse = jnp.where(mask, corrected, 0.0).astype(g.dtype)
+    new_err = corrected - sparse.astype(jnp.float32)
+    return sparse, new_err, jnp.sum(mask, dtype=jnp.int32)
 
 
 def compress(g: jax.Array, err: jax.Array, k_frac: float
              ) -> Tuple[jax.Array, jax.Array]:
     """Returns (sparse gradient, new error memory)."""
-    corrected = g.astype(jnp.float32) + err
-    mask = topk_mask(corrected, k_frac)
-    sparse = jnp.where(mask, corrected, 0.0)
-    return sparse.astype(g.dtype), corrected - sparse
+    sparse, new_err, _ = compress_counted(g, err, k_frac)
+    return sparse, new_err
 
 
 def compress_tree(grads, err_tree, k_frac: float):
@@ -50,5 +92,16 @@ def init_error(params):
 
 def payload_fraction(tree, k_frac: float) -> float:
     """Analytic DP-collective payload ratio vs dense all-reduce (value+index
-    encoding at 2x per kept element)."""
-    return min(1.0, 2.0 * k_frac)
+    encoding at 2x per kept element), honoring the per-leaf k floor.
+
+    For a tree with leaf sizes ``n_i`` the kept count is
+    ``sum_i max(1, int(n_i * k_frac))`` — small leaves (biases, norms)
+    ship a higher fraction than ``k_frac`` — and the ratio is
+    ``2 * kept / total`` capped at 1.
+    """
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        raise ValueError("payload_fraction: tree has no leaves")
+    sizes = [int(np.prod(np.shape(leaf))) for leaf in leaves]
+    kept = sum(topk_count(n, k_frac) for n in sizes)
+    return min(1.0, 2.0 * kept / sum(sizes))

@@ -125,6 +125,79 @@ def summarize_curves(curves) -> List[Record]:
     return records
 
 
+def summarize_dp_curves(dp) -> List[Record]:
+    """One record per (bits, p_miss) cell of a 2-D compressed-comms run —
+    THE unified communication report.
+
+    ``dp`` is a ``repro.sim.train_curves.DPCurveResult``.  Every accuracy
+    point carries both halves of the communication bill:
+
+    * **uplink** — the analytic FedOCS airtime of the operating point
+      (``Protocol.comm_load``, per aggregated sample), scaled to the
+      training run: ``batch`` samples aggregate per step, ``steps`` steps;
+    * **DP all-reduce** — the payload bits *measured* inside the fused scan
+      from the exact-k kept-element counts, totalled over ranks and steps
+      (``dp_payload_bits_total``), plus the per-step analytic bill and the
+      dense baseline it compresses against;
+
+    and their sum ``total_comm_bits`` — accuracy vs total communication as
+    one number, which is the ROADMAP's compressed-comms unification.
+    """
+    ccfg = dp.config
+    records: List[Record] = []
+    for bi, bits in enumerate(ccfg.bits):
+        fed = ccfg.protocol(bits).comm_load(ccfg.n_workers, ccfg.embed_dim)
+        # one channel aggregation per training sample, batch per step
+        uplink_step = fed.uplink_bits * ccfg.batch
+        for li in range(dp.p_miss.shape[0]):
+            p = ccfg.p_miss[li]
+            dp_total = int(dp.dp_payload_bits_total[bi, li])
+            uplink_total = uplink_step * ccfg.steps
+            records.append({
+                "curve": f"b{bits}_p{_fmt_p_miss(p)}",
+                "bits": bits,
+                "p_miss": float(p) if np.ndim(p) == 0
+                else [float(x) for x in p],
+                "n_workers": ccfg.n_workers,
+                "dp_shards": ccfg.dp_shards,
+                "k_elems": ccfg.embed_dim,
+                "steps": ccfg.steps,
+                "k_frac": dp.compress.k_frac,
+                "acc": float(dp.acc[bi, li]),
+                "nll": float(dp.nll[bi, li]),
+                # uplink half (analytic, per paper §I/§IV)
+                "uplink_bits_step": uplink_step,
+                "uplink_bits_total": uplink_total,
+                # DP half (measured kept-element counts, all ranks)
+                "dp_payload_bits_step": dp.dp_payload_bits_step,
+                "dp_payload_bits_total": dp_total,
+                "dp_dense_bits_step": dp.dp_dense_bits_step,
+                "dp_payload_frac": (dp.dp_payload_bits_step
+                                    / dp.dp_dense_bits_step),
+                # the one number
+                "total_comm_bits": uplink_total + dp_total,
+            })
+    return records
+
+
+def dp_curve_rows(records: List[Record], prefix: str = "dp_curves"
+                  ) -> List[str]:
+    """Benchmark-harness CSV rows for the unified comm report."""
+    rows = []
+    for rec in records:
+        derived = [
+            f"bits={rec['bits']}", f"p_miss={_fmt_p_miss(rec['p_miss'])}",
+            f"dp={rec['dp_shards']}", f"k_frac={rec['k_frac']:g}",
+            f"acc={rec['acc']:.4f}", f"nll={rec['nll']:.4f}",
+            f"uplink_bits={rec['uplink_bits_total']}",
+            f"dp_bits={rec['dp_payload_bits_total']}",
+            f"dp_frac={rec['dp_payload_frac']:.3f}",
+            f"total_bits={rec['total_comm_bits']}",
+        ]
+        rows.append(f"{prefix}/{rec['curve']},0," + ";".join(derived))
+    return rows
+
+
 def curve_rows(records: List[Record], prefix: str = "curves") -> List[str]:
     """Benchmark-harness CSV rows for train-curve records."""
     rows = []

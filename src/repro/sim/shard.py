@@ -34,13 +34,20 @@ def mesh_1d(n_devices: int, axis: str = "s"):
         np.asarray(jax.devices()[:n_devices]), (axis,))
 
 
-def shard_1d(fn, n_devices: int, in_specs, out_specs, axis: str = "s"):
-    """Wrap ``fn`` in shard_map over a 1-D ``axis`` mesh.
+@functools.lru_cache(maxsize=None)
+def mesh_2d(n_s: int, n_d: int, axes=("s", "d")):
+    """2-D device mesh: ``axes[0]`` lanes x ``axes[1]`` data-parallel ranks
+    (cached: jit keys on mesh identity)."""
+    make_mesh = getattr(jax, "make_mesh", None)
+    if make_mesh is not None:
+        return make_mesh((n_s, n_d), tuple(axes))
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:n_s * n_d]).reshape(n_s, n_d),
+        tuple(axes))
 
-    ``in_specs``/``out_specs`` follow the shard_map contract (pytree
-    prefixes of the arguments/results); pass ``P(axis)`` for lane-leading
-    arguments and ``P()`` for replicated ones.
-    """
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """The jax-version shard_map shim shared by :func:`shard_1d`/:func:`shard_2d`."""
     shard_map = getattr(jax, "shard_map", None)
     kwargs = {}
     if shard_map is None:            # jax<0.6: experimental namespace,
@@ -48,8 +55,46 @@ def shard_1d(fn, n_devices: int, in_specs, out_specs, axis: str = "s"):
         kwargs["check_rep"] = False  # replication check kwarg predates
     else:                            # its rename to check_vma
         kwargs["check_vma"] = False
-    return shard_map(fn, mesh=mesh_1d(n_devices, axis),
-                     in_specs=in_specs, out_specs=out_specs, **kwargs)
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     **kwargs)
+
+
+def shard_1d(fn, n_devices: int, in_specs, out_specs, axis: str = "s"):
+    """Wrap ``fn`` in shard_map over a 1-D ``axis`` mesh.
+
+    ``in_specs``/``out_specs`` follow the shard_map contract (pytree
+    prefixes of the arguments/results); pass ``P(axis)`` for lane-leading
+    arguments and ``P()`` for replicated ones.
+    """
+    return _shard_map(fn, mesh_1d(n_devices, axis), in_specs, out_specs)
+
+
+def shard_2d(fn, n_s: int, n_d: int, in_specs, out_specs, axes=("s", "d")):
+    """Wrap ``fn`` in shard_map over a 2-D (lanes x DP ranks) mesh.
+
+    The DP axis name (``axes[1]``) is visible to collectives inside ``fn``
+    (``lax.all_gather``/``lax.psum``), which is how the 2-D curve engine
+    all-reduces compressed gradients inside the fused scan.
+    """
+    return _shard_map(fn, mesh_2d(n_s, n_d, tuple(axes)), in_specs,
+                      out_specs)
+
+
+def dp_mesh_shape(n_devices, n_lanes: int, dp_shards: int):
+    """Split ``n_devices`` into (lane-mesh size, DP-mesh size).
+
+    The DP axis is either placed *entirely* on the mesh (``n_d ==
+    dp_shards``) or *entirely* vmapped on-device (``n_d == 1``) — never a
+    partial block — so the all_gather stacking order is trivially identical
+    across topologies and the bit-for-bit parity property holds.  Lanes take
+    whatever devices remain.
+    """
+    if n_devices is None:
+        n_devices = jax.local_device_count()
+    n_devices = int(n_devices)
+    n_d = dp_shards if 1 < dp_shards <= n_devices else 1
+    n_s = max(1, min(n_devices // n_d, n_lanes))
+    return n_s, n_d
 
 
 def lane_devices(n_devices, n_lanes: int) -> int:

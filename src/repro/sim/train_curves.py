@@ -37,9 +37,20 @@ the schedule's pure on-device policy consuming the protocol accounting
 (collision/round telemetry) of the previous round — channel-aware backoff
 depth scheduling in ONE host dispatch for the whole run.
 
+:func:`run_curves_dp` is the 2-D generalization: p_miss lanes x
+data-parallel batch shards, with each rank's top-k-sparsified gradients
+(``repro.optim.compressed_allreduce.CompressedAllReduce``, error feedback
+carried through the scan) all-reduced over the ``"d"`` axis *inside* the
+fused scan and the DP payload bits measured from actual kept-element
+counts — the complement of the uplink accounting, reported together by
+``repro.sim.results.summarize_dp_curves``.  The DP axis runs on a 2-D mesh
+(``repro.sim.shard.mesh_2d``) when devices allow, else on a named vmap
+axis, bit-for-bit identical either way.
+
 Compilations are observable via :func:`trace_counts`, host dispatches via
 :func:`dispatch_counts` — the fused engine costs ONE dispatch per ``bits``
-value (``fused``), a scheduled run ONE dispatch total (``sched``).
+value (``fused``; ``fused_dp`` for the 2-D engine), a scheduled run ONE
+dispatch total (``sched``).
 """
 
 from __future__ import annotations
@@ -56,6 +67,7 @@ from repro.core import vertical
 from repro.core.vertical import VerticalConfig
 from repro.data.vertical_data import PatchTaskConfig, patch_classification
 from repro.optim import optimizers, schedules
+from repro.optim.compressed_allreduce import CompressedAllReduce
 from repro.protocol import BitsSchedule, Protocol
 from repro.sim import shard as sim_shard
 from repro.train.train_step import make_train_step
@@ -64,7 +76,7 @@ from repro.train.train_step import make_train_step
 # compilation + dispatch observability (same contract as repro.sim.sweep)
 # ---------------------------------------------------------------------------
 
-_COUNTER_KEYS = ("fused", "sched")
+_COUNTER_KEYS = ("fused", "sched", "fused_dp")
 _TRACE_COUNTS: Dict[str, int] = {k: 0 for k in _COUNTER_KEYS}
 _DISPATCH_COUNTS: Dict[str, int] = {k: 0 for k in _COUNTER_KEYS}
 
@@ -137,8 +149,17 @@ class CurveConfig:
     seed: int = 0
     log_every: int = 10
     backend: str = "scan"                # noisy-contention engine
+    dp_shards: int = 1                   # data-parallel batch shards
+    #   (run_curves_dp: each rank trains batch/dp_shards samples and the
+    #   compressed gradients all-reduce inside the fused scan)
 
     def __post_init__(self):
+        if self.dp_shards < 1:
+            raise ValueError(f"dp_shards must be >= 1, got {self.dp_shards}")
+        if self.batch % self.dp_shards:
+            raise ValueError(
+                f"batch={self.batch} must divide evenly into "
+                f"dp_shards={self.dp_shards} ranks")
         for b in self.bits:
             if b not in (8, 16):
                 raise ValueError(
@@ -230,6 +251,33 @@ class ScheduledCurveResult:
     bits_per_step: np.ndarray           # (steps,) chosen depth per round
     logged_steps: np.ndarray            # (n_logged,)
     params: object                      # lane-stacked trained params
+
+
+@dataclasses.dataclass
+class DPCurveResult:
+    """Outcome of one 2-D (p_miss lanes x DP shards) compressed-comms run.
+
+    The DP payload numbers are MEASURED inside the fused scan — per step,
+    the kept-element counts of every rank's exact-k masks are billed through
+    ``CompressedAllReduce.reduce``'s :class:`DPAccounting` and psum'd over
+    ranks.  ``dp_payload_bits_step`` / ``dp_dense_bits_step`` are the
+    analytic per-step totals (all ranks) the measurement must equal — the
+    tie-exact ``topk_mask`` guarantees it, and ``tests/test_dp_curves.py``
+    asserts it.
+    """
+
+    config: CurveConfig
+    compress: CompressedAllReduce
+    p_miss: np.ndarray                  # (L,) or (L, N) per-worker lanes
+    acc: np.ndarray                     # (n_bits, L) channel-in-the-loop
+    nll: np.ndarray                     # (n_bits, L)
+    loss_history: np.ndarray            # (n_bits, n_logged, L) rank-mean loss
+    dp_payload_bits: np.ndarray         # (n_bits, n_logged, L) measured/step
+    dp_payload_bits_total: np.ndarray   # (n_bits, L) int64, whole run
+    dp_payload_bits_step: int           # analytic bits/step, all ranks
+    dp_dense_bits_step: int             # uncompressed bits/step, all ranks
+    logged_steps: np.ndarray            # (n_logged,)
+    params: List                        # per-bits lane-stacked trained params
 
 
 # ---------------------------------------------------------------------------
@@ -649,3 +697,222 @@ def run_scheduled_curves(ccfg: CurveConfig, schedule: BitsSchedule
         collision_frac=np.asarray(coll_hist, np.float64),
         bits_per_step=np.asarray(bits_seq, np.int64),
         logged_steps=np.asarray(logged), params=vals)
+
+
+# ---------------------------------------------------------------------------
+# the 2-D engine: p_miss lanes x data-parallel shards, compressed all-reduce
+# ---------------------------------------------------------------------------
+
+def _make_fused_dp(ccfg: CurveConfig, compress: CompressedAllReduce,
+                   per_bits, n_logged: int, n_s: int, n_d: int):
+    """Build the jitted 2-D engine for one ``bits`` value.
+
+    Every training step, each DP rank draws its slice of the shared batch
+    stream, runs the channel-in-the-loop forward on its own sensing key
+    (``fold_in(lane_step_key, rank)``), and the sparse gradients all-reduce
+    over the ``"d"`` axis via ``compress.reduce`` — all inside the single
+    ``lax.scan``/dispatch of the fused-engine contract.  Per-step measured
+    payload bits ride the scan carry next to the loss history.
+
+    The ``"d"`` axis is either a mesh axis (``n_d == dp_shards``, gradients
+    cross devices) or a ``vmap(axis_name="d")`` axis on one device —
+    ``compress.reduce``'s gather+fixed-order-sum makes the two bit-for-bit
+    identical (``dp_mesh_shape`` never splits the DP axis between the two).
+    Lanes shard over ``"s"`` exactly as in :func:`_make_fused`.
+    """
+    vcfg_n = per_bits[0]
+    opt = per_bits[2]
+    proto_tmpl = vcfg_n.resolve_protocol()
+    steps, batch, n_train = ccfg.steps, ccfg.batch, ccfg.n_train
+    dp_shards = ccfg.dp_shards
+    shard_b = batch // dp_shards
+    mesh_dp = n_d > 1
+
+    grad_fn = jax.value_and_grad(
+        lambda v, bv, bl, rng, p_l: vertical.loss_fn(
+            vcfg_n, v, bv, bl, rng=rng,
+            protocol=proto_tmpl.with_p_miss(p_l)),
+        has_aux=True)
+
+    def dp_lanes(params0, opt0, err0, lane_keys, p, shard_ids, k_data,
+                 views, labels, vviews, vlabels, slots):
+        lanes = lane_keys.shape[0]          # shard-local lane count
+        d_local = shard_ids.shape[0]        # 1 on the mesh path, D vmapped
+        vals = _lane_stack(_lane_stack(params0, d_local), lanes)
+        opts = _lane_stack(_lane_stack(opt0, d_local), lanes)
+        hist = jnp.zeros((lanes, n_logged), jnp.float32)
+        pay_hist = jnp.zeros((lanes, n_logged), jnp.int32)
+        pay_total = jnp.zeros((lanes,), jnp.int32)
+
+        def rank_step(vals, opts, err, shard_id, rng_lane, p_l, idx):
+            """One DP rank of one lane: local grads -> compressed all-reduce
+            over "d" -> rank-mean update.  Params/opt stay bitwise identical
+            across ranks (same reduced gradient); only ``err`` diverges."""
+            rng = jax.random.fold_in(rng_lane, shard_id)
+            idx_s = jax.lax.dynamic_slice(idx, (shard_id * shard_b,),
+                                          (shard_b,))
+            (loss, _met), grads = grad_fn(vals, views[:, idx_s],
+                                          labels[idx_s], rng, p_l)
+            reduced, err, acct = compress.reduce(grads, err, axis_name="d")
+            n_ranks = jax.lax.psum(jnp.int32(1), "d")
+            reduced = jax.tree.map(lambda g: g / n_ranks, reduced)
+            vals, opts, _stats = opt.update(reduced, opts, vals)
+            loss_mean = jnp.mean(jax.lax.all_gather(loss, "d"))
+            return vals, opts, err, loss_mean, acct.payload_bits
+
+        if mesh_dp:
+            # the mesh carries "d": each device holds one rank (d_local==1);
+            # only the lane axis is vmapped — collectives hit the mesh axis
+            def step_all(vals, opts, errs, rngs, idx):
+                v, o, e = (jax.tree.map(lambda x: x[:, 0], t)
+                           for t in (vals, opts, errs))
+                v, o, e, lm, pay = jax.vmap(
+                    rank_step, in_axes=(0, 0, 0, None, 0, 0, None))(
+                        v, o, e, shard_ids[0], rngs, p, idx)
+                v, o, e = (jax.tree.map(lambda x: x[:, None], t)
+                           for t in (v, o, e))
+                return v, o, e, lm, pay
+        else:
+            # single-device DP: the "d" axis is a named vmap axis — the
+            # collectives see the identical (D, ...) stacking order
+            ranks = jax.vmap(rank_step, in_axes=(0, 0, 0, 0, None, None,
+                                                 None), axis_name="d")
+
+            def step_all(vals, opts, errs, rngs, idx):
+                v, o, e, lm, pay = jax.vmap(
+                    ranks, in_axes=(0, 0, 0, None, 0, 0, None))(
+                        vals, opts, errs, shard_ids, rngs, p, idx)
+                # per-rank outputs are rank-invariant (post-psum): take rank 0
+                return v, o, e, lm[:, 0], pay[:, 0]
+
+        def body(carry, x):
+            vals, opts, errs, hist, pay_hist, pay_total = carry
+            step, slot = x
+            idx = _batch_indices(k_data, step, batch, n_train)
+            rngs = _fold_lanes(lane_keys, step)
+            vals, opts, errs, lm, pay = step_all(vals, opts, errs, rngs, idx)
+            hist = hist.at[:, slot].set(lm, mode="drop")
+            pay_hist = pay_hist.at[:, slot].set(pay, mode="drop")
+            pay_total = pay_total + pay
+            return (vals, opts, errs, hist, pay_hist, pay_total), None
+
+        carry0 = (vals, opts, err0, hist, pay_hist, pay_total)
+        (vals, _opts, _errs, hist, pay_hist, pay_total), _ = jax.lax.scan(
+            body, carry0, (jnp.arange(steps, dtype=jnp.int32), slots))
+
+        # rank replicas are bitwise identical: evaluate the local rank's copy
+        vals_l = jax.tree.map(lambda x: x[:, 0], vals)
+        eval_rngs = _fold_lanes(lane_keys, steps)
+        met = jax.vmap(
+            lambda v, r, p_l: vertical.loss_fn(
+                vcfg_n, v, vviews, vlabels, rng=r,
+                protocol=proto_tmpl.with_p_miss(p_l))[1],
+            in_axes=(0, 0, 0))(vals_l, eval_rngs, p)
+        return vals_l, hist, pay_hist, pay_total, met["acc"], met["nll"]
+
+    dp_engine = dp_lanes
+    if n_d > 1:
+        dp_engine = sim_shard.shard_2d(
+            dp_lanes, n_s, n_d,
+            in_specs=(P(), P(), P("s", "d"), P("s"), P("s"), P("d"), P(),
+                      P(), P(), P(), P(), P()),
+            out_specs=(P("s"),) * 6)
+    elif n_s > 1:
+        dp_engine = sim_shard.shard_1d(
+            dp_lanes, n_s,
+            in_specs=(P(), P(), P("s"), P("s"), P("s"), P(), P(), P(), P(),
+                      P(), P(), P()),
+            out_specs=(P("s"),) * 6)
+
+    def fused(params0, opt0, err0, lane_keys, p, shard_ids, k_data, views,
+              labels, vviews, vlabels, slots):
+        _TRACE_COUNTS["fused_dp"] += 1
+        return dp_engine(params0, opt0, err0, lane_keys, p, shard_ids,
+                         k_data, views, labels, vviews, vlabels, slots)
+
+    return jax.jit(fused)
+
+
+def _run_curves_dp(ccfg: CurveConfig, compress: CompressedAllReduce,
+                   n_devices) -> DPCurveResult:
+    lanes = len(ccfg.p_miss)
+    p_lanes = ccfg.lane_p_miss()
+    n_s, n_d = sim_shard.dp_mesh_shape(n_devices, lanes, ccfg.dp_shards)
+    p_pad = jnp.asarray(sim_shard.pad_lanes(p_lanes, n_s))
+    l_pad = p_pad.shape[0]
+    shard_ids = jnp.arange(ccfg.dp_shards, dtype=jnp.int32)
+
+    views_j, labels_j, vv_j, vl_j = _make_data(ccfg)
+    logged = ccfg.logged_steps()
+    slots = jnp.asarray(_log_slots(ccfg, logged))
+
+    acc = np.zeros((len(ccfg.bits), lanes), np.float64)
+    nll = np.zeros_like(acc)
+    hist = np.zeros((len(ccfg.bits), len(logged), lanes), np.float64)
+    pay = np.zeros((len(ccfg.bits), len(logged), lanes), np.int64)
+    pay_total = np.zeros((len(ccfg.bits), lanes), np.int64)
+    params_out = []
+    pay_step = dense_step = 0
+
+    for bi, bits in enumerate(ccfg.bits):
+        per_bits = _make_steps(ccfg, bits)
+        vcfg_n, opt = per_bits[0], per_bits[2]
+        k_data, lane_keys = _stream_keys(ccfg, bits)
+        keys_pad = jnp.asarray(
+            sim_shard.pad_lanes(np.asarray(lane_keys), n_s))
+
+        params0 = vertical.init(vcfg_n, jax.random.PRNGKey(ccfg.seed))
+        opt0 = opt.init(params0)
+        # per-(lane, rank) error-feedback memory, a traced scan carry
+        err0 = jax.tree.map(
+            lambda x: jnp.zeros((l_pad, ccfg.dp_shards) + x.shape,
+                                jnp.float32), params0)
+        # the analytic per-step bill every measured step must equal
+        pay_step = compress.payload_bits(params0) * ccfg.dp_shards
+        dense_step = compress.dense_bits(params0) * ccfg.dp_shards
+
+        fused = _make_fused_dp(ccfg, compress, per_bits, len(logged), n_s,
+                               n_d)
+        _DISPATCH_COUNTS["fused_dp"] += 1
+        vals, hist_b, pay_b, pay_tot_b, acc_b, nll_b = fused(
+            params0, opt0, err0, keys_pad, p_pad, shard_ids, k_data,
+            views_j, labels_j, vv_j, vl_j, slots)
+
+        acc[bi] = np.asarray(acc_b)[:lanes]
+        nll[bi] = np.asarray(nll_b)[:lanes]
+        hist[bi] = np.asarray(hist_b)[:lanes].T
+        pay[bi] = np.asarray(pay_b, np.int64)[:lanes].T
+        pay_total[bi] = np.asarray(pay_tot_b, np.int64)[:lanes]
+        params_out.append(jax.tree.map(lambda x: x[:lanes], vals))
+
+    return DPCurveResult(
+        config=ccfg, compress=compress, p_miss=ccfg.lane_p_miss(),
+        acc=acc, nll=nll, loss_history=hist,
+        dp_payload_bits=pay, dp_payload_bits_total=pay_total,
+        dp_payload_bits_step=int(pay_step),
+        dp_dense_bits_step=int(dense_step),
+        logged_steps=np.asarray(logged), params=params_out)
+
+
+def run_curves_dp(ccfg: CurveConfig, compress: CompressedAllReduce, *,
+                  n_devices: Optional[int] = None) -> DPCurveResult:
+    """Train the 2-D (p_miss lanes x DP shards) grid with compressed comms.
+
+    Each lane's training step splits the shared batch stream across
+    ``ccfg.dp_shards`` data-parallel ranks; every rank sparsifies its
+    gradients (top-k + error feedback, per-rank EF memory) and the sparse
+    trees all-reduce via ``compress.reduce`` *inside* the fused scan — the
+    whole run stays ONE host dispatch per ``bits`` value
+    (``dispatch_counts()["fused_dp"]``), with the measured DP payload bits
+    accumulated on device alongside the loss history.
+
+    Placement follows :func:`repro.sim.shard.dp_mesh_shape`: the DP axis
+    lands entirely on the device mesh (when ``dp_shards`` divides into the
+    available devices) or entirely on a named vmap axis, never split —
+    results are bit-for-bit identical across ``n_devices`` (the
+    forced-multi-device subprocess test in ``tests/test_dp_curves.py``).
+
+    Feed the result to ``repro.sim.results.summarize_dp_curves`` for the
+    unified uplink + DP all-reduce communication report.
+    """
+    return _run_curves_dp(ccfg, compress, n_devices)

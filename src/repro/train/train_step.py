@@ -8,25 +8,34 @@ standard comm/compute overlap structure.
 
 from __future__ import annotations
 
-import functools
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.optim import grad_compression
+from repro.optim.compressed_allreduce import CompressedAllReduce
 
 
 def make_train_step(loss_fn: Callable, optimizer, microbatches: int = 1,
-                    compress_k: Optional[float] = None,
+                    compress_k: Optional[Union[float,
+                                               CompressedAllReduce]] = None,
                     with_rng: bool = False,
-                    donate: bool = False) -> Callable:
+                    donate: bool = False,
+                    dp_axis: Optional[str] = None) -> Callable:
     """loss_fn(values, batch) -> (loss, metrics dict).
 
     Returns train_step(values, opt_state, batch, err) ->
         (values, opt_state, err, metrics)
     ``err`` is the error-feedback memory when compress_k is set (else None —
     pass jnp.zeros(()) sentinel-free via the same pytree each call).
+    ``compress_k`` is either a kept-fraction float (sugar for
+    ``CompressedAllReduce.topk(k)``) or a full
+    :class:`repro.optim.compressed_allreduce.CompressedAllReduce` policy;
+    compressed steps report the measured ``dp_payload_bits`` /
+    ``dp_kept_elems`` in the metrics dict.  ``dp_axis`` names a mapped
+    data-parallel axis (``shard_map`` or ``vmap(axis_name=...)``) to
+    all-reduce the compressed gradients over — the reduced gradient is the
+    rank **mean** and the payload counters are totals across ranks.
 
     ``with_rng=True`` switches the contract to a stochastic forward (e.g. the
     channel-in-the-loop OCS aggregation): ``loss_fn(values, batch, rng)``
@@ -107,11 +116,24 @@ def make_train_step(loss_fn: Callable, optimizer, microbatches: int = 1,
         # contract variant: updated in place when donated
         return jax.jit(step, donate_argnums=(0, 1)) if donate else step
 
+    if compress_k is not None:
+        compress = (compress_k if isinstance(compress_k, CompressedAllReduce)
+                    else CompressedAllReduce.topk(float(compress_k)))
+
+        def reduce_grads(grads, err, metrics):
+            grads, err, acct = compress.reduce(grads, err, axis_name=dp_axis)
+            if dp_axis is not None:
+                n_ranks = jax.lax.psum(jnp.int32(1), dp_axis)
+                grads = jax.tree.map(lambda g: g / n_ranks, grads)
+            metrics = dict(metrics)
+            metrics["dp_payload_bits"] = acct.payload_bits
+            metrics["dp_kept_elems"] = acct.kept_elems
+            return grads, err, metrics
+
     if compress_k is not None and with_rng:
         def train_step(values, opt_state, batch, rng, err):
             grads, loss, metrics = compute_grads(values, batch, rng)
-            grads, err = grad_compression.compress_tree(grads, err,
-                                                        compress_k)
+            grads, err, metrics = reduce_grads(grads, err, metrics)
             values, opt_state, metrics = apply_update(values, opt_state,
                                                       grads, loss, metrics)
             return values, opt_state, err, metrics
@@ -120,8 +142,7 @@ def make_train_step(loss_fn: Callable, optimizer, microbatches: int = 1,
     if compress_k is not None:
         def train_step(values, opt_state, batch, err):
             grads, loss, metrics = compute_grads(values, batch, None)
-            grads, err = grad_compression.compress_tree(grads, err,
-                                                        compress_k)
+            grads, err, metrics = reduce_grads(grads, err, metrics)
             values, opt_state, metrics = apply_update(values, opt_state,
                                                       grads, loss, metrics)
             return values, opt_state, err, metrics

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Union
 
 import jax
 import numpy as np
@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import checkpointer
 from repro.optim import grad_compression
+from repro.optim.compressed_allreduce import CompressedAllReduce
 from repro.train.train_step import make_train_step
 
 
@@ -35,7 +36,9 @@ class TrainerConfig:
     ckpt_every: int = 50
     log_every: int = 10
     microbatches: int = 1
-    compress_k: Optional[float] = None
+    # kept-fraction float (sugar for CompressedAllReduce.topk) or a full
+    # CompressedAllReduce policy; compressed steps log dp_payload_bits
+    compress_k: Optional[Union[float, CompressedAllReduce]] = None
     data_deadline_s: Optional[float] = None     # straggler: batch deadline
     watchdog_factor: float = 3.0                # step-time anomaly threshold
     resume: bool = True

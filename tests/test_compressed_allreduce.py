@@ -1,0 +1,146 @@
+"""CompressedAllReduce: the DP-comms policy object (ISSUE 8 tentpole).
+
+Contracts under test:
+  * pytree discipline mirroring ``Protocol``: the policy is all-static
+    metadata (no data leaves), frozen, hashable, and survives jit/tree ops;
+  * ``reduce`` with no axis is the degenerate 1-rank all-reduce (bitwise
+    the ``grad_compression.compress`` path) and with a named axis sums the
+    per-rank sparse trees in the fixed gather order;
+  * ``DPAccounting`` bills MEASURED kept-element counts that equal the
+    analytic per-rank ``payload_bits`` times the rank count — the property
+    the fixed exact-k ``topk_mask`` guarantees;
+  * constructor validation + the analytic payload helpers.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import grad_compression as gc
+from repro.optim.compressed_allreduce import CompressedAllReduce, DPAccounting
+
+
+def _tree(rng, dtype=np.float32):
+    return {"w": jnp.asarray(rng.standard_normal((16, 8)), dtype),
+            "b": jnp.asarray(rng.standard_normal((8,)), dtype)}
+
+
+def test_policy_is_static_pytree():
+    car = CompressedAllReduce.topk(1 / 8)
+    leaves, treedef = jax.tree.flatten(car)
+    assert leaves == []                      # all-static: no data leaves
+    assert treedef.unflatten([]) == car
+    assert hash(car) == hash(CompressedAllReduce.topk(1 / 8))
+    # static-arg friendly: closing over it never adds traced operands
+    out = jax.jit(lambda g, e: car.reduce(g, e))(
+        _tree(np.random.default_rng(0)), car.init_error(
+            _tree(np.random.default_rng(0))))
+    assert isinstance(out[2], DPAccounting)
+
+
+def test_validation():
+    with pytest.raises(ValueError):
+        CompressedAllReduce.topk(0.0)
+    with pytest.raises(ValueError):
+        CompressedAllReduce.topk(1.5)
+    with pytest.raises(ValueError):
+        CompressedAllReduce.topk(0.5, value_bits=0)
+    with pytest.raises(ValueError):
+        CompressedAllReduce.topk(0.5, index_bits=0)
+    with pytest.raises(ValueError):
+        CompressedAllReduce.topk(0.5).payload_bits({})
+
+
+def test_analytic_payload_helpers():
+    car = CompressedAllReduce.topk(1 / 16)
+    tree = {"w": np.zeros((32, 32)), "b": np.zeros((4,))}
+    # per-leaf: 64 of 1024 at ceil(log2(1024))=10 index bits, 1 of 4 at 2
+    assert car.leaf_payload_bits(1024) == 64 * (32 + 10)
+    assert car.leaf_payload_bits(4) == 1 * (32 + 2)
+    assert car.payload_bits(tree) == 64 * 42 + 34
+    assert car.dense_bits(tree) == 1028 * 32
+    assert car.payload_fraction(tree) == (64 * 42 + 34) / (1028 * 32)
+    # a fixed index width reproduces the naive 2x value+index encoding
+    naive = CompressedAllReduce.topk(1 / 16, index_bits=32)
+    assert (naive.payload_bits(tree) / naive.dense_bits(tree)
+            == pytest.approx(gc.payload_fraction(tree, 1 / 16)))
+
+
+def test_single_rank_reduce_matches_compress():
+    rng = np.random.default_rng(1)
+    car = CompressedAllReduce.topk(1 / 8)
+    grads = _tree(rng)
+    err = jax.tree.map(lambda g: jnp.asarray(
+        rng.standard_normal(g.shape) * 0.1, jnp.float32), grads)
+    reduced, new_err, acct = car.reduce(grads, err)
+    ref_s, ref_e = gc.compress_tree(grads, err, 1 / 8)
+    for a, b in zip(jax.tree.leaves(reduced), jax.tree.leaves(ref_s)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(new_err), jax.tree.leaves(ref_e)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert int(acct.payload_bits) == car.payload_bits(grads)
+    assert int(acct.dense_bits) == car.dense_bits(grads)
+    kept = sum(gc.topk_count(int(np.prod(x.shape)), 1 / 8)
+               for x in jax.tree.leaves(grads))
+    assert int(acct.kept_elems) == kept
+
+
+def test_vmapped_axis_reduce_sums_ranks_in_gather_order():
+    """reduce over a named vmap axis == stacking each rank's own sparse
+    tree and summing along the rank axis — every rank sees the same total,
+    and the accounting is the per-rank bill times the rank count."""
+    rng = np.random.default_rng(2)
+    car = CompressedAllReduce.topk(1 / 4)
+    D = 3
+    grads = {"w": jnp.asarray(rng.standard_normal((D, 16, 8)), jnp.float32),
+             "b": jnp.asarray(rng.standard_normal((D, 8)), jnp.float32)}
+    err = jax.tree.map(jnp.zeros_like, grads)
+
+    reduced, new_err, acct = jax.vmap(
+        lambda g, e: car.reduce(g, e, axis_name="d"), axis_name="d")(
+            grads, err)
+
+    # reference: per-rank sparse trees (no collective), stacked in rank
+    # order and summed with the same jnp.sum the reduce path uses — the
+    # fixed-order contract is about the (D, ...) stacking, not about
+    # matching numpy's accumulation order
+    per_rank = [gc.compress_tree(
+        jax.tree.map(lambda x, r=r: x[r], grads),
+        jax.tree.map(lambda x, r=r: x[r], err), 1 / 4) for r in range(D)]
+    for key in ("w", "b"):
+        stacked = jnp.stack([s[key] for s, _e in per_rank], axis=0)
+        total = np.asarray(jnp.sum(stacked, axis=0))
+        for r in range(D):
+            assert np.array_equal(np.asarray(reduced[key][r]), total)
+            assert np.array_equal(np.asarray(new_err[key][r]),
+                                  np.asarray(per_rank[r][1][key]))
+    one_rank = car.payload_bits(jax.tree.map(lambda x: x[0], grads))
+    assert np.all(np.asarray(acct.payload_bits) == one_rank * D)
+    assert np.all(np.asarray(acct.dense_bits)
+                  == car.dense_bits(jax.tree.map(lambda x: x[0], grads)) * D)
+
+
+def test_reduce_keeps_grad_dtype_and_accumulates_cast_error():
+    rng = np.random.default_rng(3)
+    car = CompressedAllReduce.topk(1 / 4)
+    grads = _tree(rng, jnp.bfloat16)
+    err = car.init_error(grads)
+    reduced, new_err, _acct = car.reduce(grads, err)
+    for g, r, e in zip(jax.tree.leaves(grads), jax.tree.leaves(reduced),
+                       jax.tree.leaves(new_err)):
+        assert r.dtype == jnp.bfloat16
+        assert e.dtype == jnp.float32
+        # nothing lost: transmitted + residual == corrected, exactly
+        assert np.array_equal(
+            np.asarray(r.astype(jnp.float32) + e),
+            np.asarray(g.astype(jnp.float32)))
+
+
+def test_accounting_zeros_and_pytree():
+    z = DPAccounting.zeros()
+    assert int(z.payload_bits) == int(z.kept_elems) == int(z.dense_bits) == 0
+    leaves = jax.tree.leaves(z)
+    assert len(leaves) == 3                  # all counters are data leaves
+    doubled = jax.tree.map(lambda x: x * 2, z)
+    assert isinstance(doubled, DPAccounting)

@@ -1,0 +1,174 @@
+"""The 2-D compressed-comms curve engine (ISSUE 8 tentpole).
+
+Contracts under test:
+  * ``run_curves_dp`` trains p_miss lanes x DP shards in ONE fused dispatch
+    per ``bits`` value (trace/dispatch counters via the shared
+    ``repro.analysis`` assertions) and is deterministic run-to-run;
+  * the MEASURED per-step DP payload bits (kept-element counts billed
+    through ``CompressedAllReduce.reduce`` inside the scan) equal the
+    analytic exact-k bill — the accounting acceptance that the fixed
+    ``topk_mask`` makes possible;
+  * the 2-D mesh placement (forced host devices, subprocess) is bit-for-bit
+    the single-device vmap path, mirroring the 1-D lane-sharding property;
+  * ``summarize_dp_curves`` emits the unified uplink + DP report with
+    ``total_comm_bits`` per accuracy point;
+  * config validation for the DP axis.
+"""
+
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.contracts import (assert_fused_dispatches,
+                                      assert_trace_count)
+from repro.optim.compressed_allreduce import CompressedAllReduce
+from repro.sim import results as sim_results
+from repro.sim import train_curves as tc
+
+TINY_DP = tc.CurveConfig(bits=(8,), p_miss=(0.0, 0.3), steps=6, batch=16,
+                         n_train=128, n_val=64, hw=8, encoder_dims=(8,),
+                         embed_dim=8, head_dims=(8,), log_every=3,
+                         dp_shards=2)
+CAR = CompressedAllReduce.topk(1 / 8)
+
+
+def test_dp_config_validation():
+    with pytest.raises(ValueError):
+        dataclasses.replace(TINY_DP, dp_shards=0)
+    with pytest.raises(ValueError):         # 16 % 3 != 0
+        dataclasses.replace(TINY_DP, dp_shards=3)
+
+
+def test_dp_engine_one_dispatch_per_bits_value():
+    cfg = dataclasses.replace(TINY_DP, bits=(8, 16))
+    tc.reset_trace_counts()
+    tc.reset_dispatch_counts()
+    tc.run_curves_dp(cfg, CAR, n_devices=1)
+    traces, disp = tc.trace_counts(), tc.dispatch_counts()
+    assert_trace_count(traces["fused_dp"], len(cfg.bits), "dp curve engine")
+    assert_fused_dispatches(disp["fused_dp"] / len(cfg.bits), cfg.steps,
+                            cfg.log_every)
+    # nothing fell back to another driver
+    assert all(v == 0 for k, v in disp.items() if k != "fused_dp"), disp
+
+
+def test_dp_run_is_deterministic():
+    a = tc.run_curves_dp(TINY_DP, CAR, n_devices=1)
+    b = tc.run_curves_dp(TINY_DP, CAR, n_devices=1)
+    assert np.array_equal(a.acc, b.acc)
+    assert np.array_equal(a.nll, b.nll)
+    assert np.array_equal(a.loss_history, b.loss_history)
+    assert np.array_equal(a.dp_payload_bits_total, b.dp_payload_bits_total)
+    for x, y in zip(jax.tree.leaves(a.params[0]),
+                    jax.tree.leaves(b.params[0])):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    # the lanes really saw different channels
+    assert not np.array_equal(a.loss_history[0, :, 0],
+                              a.loss_history[0, :, 1])
+
+
+def test_measured_dp_payload_equals_exact_k_bill():
+    """The accounting acceptance: every logged step's measured payload ==
+    the analytic exact-k bill (all ranks), and the run total is exactly
+    steps x per-step.  Only holds because topk_mask keeps exactly k
+    entries — tie inflation would overshoot the analytic number."""
+    out = tc.run_curves_dp(TINY_DP, CAR, n_devices=1)
+    assert out.dp_payload_bits_step > 0
+    assert np.all(out.dp_payload_bits == out.dp_payload_bits_step)
+    assert np.all(out.dp_payload_bits_total
+                  == out.dp_payload_bits_step * TINY_DP.steps)
+    # and the analytic bill really is the policy's per-rank bits x ranks
+    from repro.core import vertical
+    params0 = jax.eval_shape(
+        lambda k: vertical.init(tc._make_steps(TINY_DP, 8)[0], k),
+        jax.random.PRNGKey(0))
+    assert (out.dp_payload_bits_step
+            == CAR.payload_bits(params0) * TINY_DP.dp_shards)
+    assert out.dp_dense_bits_step == CAR.dense_bits(params0) * TINY_DP.dp_shards
+    assert out.dp_payload_bits_step < out.dp_dense_bits_step
+
+
+def test_dp_shards_change_math_but_keep_accounting_shape():
+    """More ranks: different trajectories (per-rank EF + rank-mean grads)
+    but proportionally scaled payload."""
+    one = tc.run_curves_dp(dataclasses.replace(TINY_DP, dp_shards=1), CAR,
+                           n_devices=1)
+    two = tc.run_curves_dp(TINY_DP, CAR, n_devices=1)
+    assert two.dp_payload_bits_step == 2 * one.dp_payload_bits_step
+    assert not np.array_equal(one.loss_history, two.loss_history)
+
+
+def test_summarize_dp_curves_unifies_uplink_and_dp(tmp_path):
+    out = tc.run_curves_dp(TINY_DP, CAR, n_devices=1)
+    recs = sim_results.summarize_dp_curves(out)
+    assert len(recs) == len(TINY_DP.bits) * len(TINY_DP.p_miss)
+    r0 = recs[0]
+    # uplink half: the protocol's own analytic load, batch samples per step
+    fed = TINY_DP.protocol(8).comm_load(TINY_DP.n_workers, TINY_DP.embed_dim)
+    assert r0["uplink_bits_step"] == fed.uplink_bits * TINY_DP.batch
+    assert r0["uplink_bits_total"] == r0["uplink_bits_step"] * TINY_DP.steps
+    # DP half: the measured totals from the run
+    assert r0["dp_payload_bits_total"] == int(out.dp_payload_bits_total[0, 0])
+    assert 0 < r0["dp_payload_frac"] < 1
+    # THE one number
+    assert (r0["total_comm_bits"]
+            == r0["uplink_bits_total"] + r0["dp_payload_bits_total"])
+    rows = sim_results.dp_curve_rows(recs)
+    assert len(rows) == len(recs)
+    assert rows[0].startswith("dp_curves/b8_p0,")
+    assert "total_bits=" in rows[0]
+    sim_results.write_json(recs, str(tmp_path / "dp.json"))
+    loaded = json.loads((tmp_path / "dp.json").read_text())
+    assert loaded[1]["p_miss"] == 0.3
+
+
+def test_sharded_dp_curves_match_vmap_path():
+    """The 2-D (lanes x DP) mesh over >=2 forced host devices is bit-for-bit
+    the single-device vmap path — covering the 2x2 mesh, the dp-only 1x2
+    mesh, and lane padding (3 lanes on 2 lane-devices)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = textwrap.dedent("""
+        import jax, numpy as np
+        assert jax.local_device_count() == 4, jax.devices()
+        from repro.optim.compressed_allreduce import CompressedAllReduce
+        from repro.sim import train_curves as tc
+        from repro.sim.shard import dp_mesh_shape
+        # 3 lanes (indivisible -> padding) incl. a per-worker near/far lane
+        cfg = tc.CurveConfig(bits=(8,), p_miss=(0.0, (0.0, 0.1, 0.1, 0.3),
+                                                0.3),
+                             steps=6, batch=16, n_train=128, n_val=64, hw=8,
+                             encoder_dims=(8,), embed_dim=8, head_dims=(8,),
+                             log_every=3, dp_shards=2)
+        car = CompressedAllReduce.topk(1/8)
+        assert dp_mesh_shape(4, 3, 2) == (2, 2)   # full 2-D mesh
+        assert dp_mesh_shape(2, 3, 2) == (1, 2)   # dp-only mesh
+        assert dp_mesh_shape(1, 3, 2) == (1, 1)   # vmap fallback
+        ref = tc.run_curves_dp(cfg, car, n_devices=1)
+        for n_dev in (None, 2, 4):     # None = auto-detect (4 devices)
+            got = tc.run_curves_dp(cfg, car, n_devices=n_dev)
+            assert np.array_equal(ref.acc, got.acc), n_dev
+            assert np.array_equal(ref.nll, got.nll), n_dev
+            assert np.array_equal(ref.loss_history, got.loss_history), n_dev
+            assert np.array_equal(ref.dp_payload_bits,
+                                  got.dp_payload_bits), n_dev
+            assert np.array_equal(ref.dp_payload_bits_total,
+                                  got.dp_payload_bits_total), n_dev
+            for x, y in zip(jax.tree.leaves(ref.params[0]),
+                            jax.tree.leaves(got.params[0])):
+                assert np.array_equal(np.asarray(x), np.asarray(y)), n_dev
+        print("SHARDED_DP_CURVES_OK")
+    """)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, env=env, timeout=900)
+    assert proc.returncode == 0, f"OUT:\n{proc.stdout}\nERR:\n{proc.stderr}"
+    assert "SHARDED_DP_CURVES_OK" in proc.stdout

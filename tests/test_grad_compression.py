@@ -3,15 +3,35 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.optim import grad_compression as gc
-from repro.optim import optimizers, schedules
 
 
 def test_topk_mask_density():
     x = jnp.asarray(np.random.default_rng(0).standard_normal(1024),
                     jnp.float32)
     mask = gc.topk_mask(x, 1 / 16)
+    assert int(mask.sum()) == 64
+
+
+@pytest.mark.parametrize("x", [
+    np.ones((256,)),                        # everything tied
+    np.zeros((256,)),                       # all-zero gradient
+    np.repeat([3.0, -3.0, 1.0, 0.0], 64),   # tied blocks at the threshold
+])
+def test_topk_mask_exact_k_on_ties(x):
+    """Threshold ties must not inflate the payload: exactly k survive."""
+    mask = gc.topk_mask(jnp.asarray(x, jnp.float32), 1 / 16)
+    assert int(mask.sum()) == 16
+
+
+def test_topk_mask_quantized_gradient_density():
+    """A quantized (few-distinct-values) gradient used to ship near-dense
+    payloads through the >= threshold comparison."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.integers(-2, 3, size=512), jnp.float32)
+    mask = gc.topk_mask(x, 1 / 8)
     assert int(mask.sum()) == 64
 
 
@@ -23,7 +43,32 @@ def test_compress_preserves_mass_with_error():
     # sparse + residual == original (nothing lost, only deferred)
     assert np.allclose(np.asarray(sparse + new_err), np.asarray(g), atol=1e-6)
     nz = int((np.asarray(sparse) != 0).sum())
-    assert nz <= 16 + 1
+    assert nz <= 16
+
+
+def test_compress_bf16_residual_keeps_cast_error():
+    """The EF memory must accumulate the dtype-quantization residual: the
+    value applied is sparse in g.dtype, and exactly
+    sparse.astype(f32) + new_err == g.astype(f32) + err."""
+    rng = np.random.default_rng(4)
+    g = jnp.asarray(rng.standard_normal((256,)), jnp.bfloat16)
+    err = jnp.asarray(rng.standard_normal((256,)) * 0.1, jnp.float32)
+    sparse, new_err = gc.compress(g, err, 1 / 8)
+    assert sparse.dtype == jnp.bfloat16
+    corrected = g.astype(jnp.float32) + err
+    total = np.asarray(sparse.astype(jnp.float32) + new_err)
+    assert np.array_equal(total, np.asarray(corrected))
+    # bf16 casts genuinely lose bits here, so the residual is nonzero ON the
+    # kept coordinates too — the mass the old code silently dropped
+    kept = np.asarray(sparse) != 0
+    assert np.any(np.asarray(new_err)[kept] != 0)
+
+
+def test_compress_counted_reports_actual_kept():
+    rng = np.random.default_rng(5)
+    g = jnp.asarray(rng.standard_normal((128,)), jnp.float32)
+    sparse, _err, kept = gc.compress_counted(g, jnp.zeros_like(g), 1 / 8)
+    assert int(kept) == 16 == int((np.asarray(sparse) != 0).sum())
 
 
 def test_error_feedback_convergence_quadratic():
@@ -56,6 +101,38 @@ def test_error_feedback_convergence_quadratic():
     assert run(0.2, 1 / 16, 800) > 1.0
 
 
-def test_payload_fraction():
-    assert gc.payload_fraction(None, 1 / 16) == 1 / 8
-    assert gc.payload_fraction(None, 0.9) == 1.0
+def test_error_feedback_convergence_quadratic_bf16():
+    """EF convergence survives bf16 gradients BECAUSE the cast residual
+    feeds back; bf16 resolution alone (~2^-8 relative) would floor the
+    error well above the 1e-4 bound this run reaches."""
+    rng = np.random.default_rng(6)
+    target = jnp.asarray(rng.standard_normal((64,)), jnp.float32)
+
+    def body(carry, _):
+        w, e = carry
+        g = (2 * (w - target)).astype(jnp.bfloat16)
+        sparse, e = gc.compress(g, e, 1 / 8)
+        return (w - 0.05 * sparse.astype(jnp.float32), e), None
+
+    @jax.jit
+    def go():
+        (w, _), _ = jax.lax.scan(
+            body, (jnp.zeros((64,)), jnp.zeros((64,))), None, length=4000)
+        return jnp.sum((w - target) ** 2)
+
+    assert float(go()) < 1e-4
+
+
+def test_payload_fraction_per_leaf_floors():
+    # one big leaf: 64 of 1024 kept -> exactly 2 * k_frac
+    assert gc.payload_fraction({"w": np.zeros((1024,))}, 1 / 16) == 1 / 8
+    # a small bias leaf keeps max(1, int(4/16)) = 1 of 4 elements, so the
+    # true ratio exceeds the naive 2*k_frac
+    tree = {"w": np.zeros((32, 32)), "b": np.zeros((4,))}
+    expected = 2.0 * (64 + 1) / (1024 + 4)
+    assert gc.payload_fraction(tree, 1 / 16) == pytest.approx(expected)
+    assert gc.payload_fraction(tree, 1 / 16) > 1 / 8
+    # dense limit caps at 1
+    assert gc.payload_fraction({"w": np.zeros((8,))}, 0.9) == 1.0
+    with pytest.raises(ValueError):
+        gc.payload_fraction(None, 1 / 16)
