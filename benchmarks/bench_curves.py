@@ -25,7 +25,12 @@ engine contracts:
     dispatch per ``bits`` value and its MEASURED per-step DP payload bits
     equal the analytic exact-k bill — the unified uplink + DP accounting
     lands in the emitted records (``total_comm_bits``) and BENCH json
-    (``dp_payload_bits``).
+    (``dp_payload_bits``),
+  * the fault-injection engine (``run_fault_curves``: Gilbert–Elliott burst
+    lanes + worker dropout, ``repro.faults``) adds ZERO extra traces —
+    one compile and one dispatch per ``bits`` value however many fault
+    lanes ride along — and its ``FaultModel.iid`` witness lane reproduces
+    the plain engine's lane 0 bit for bit.
 
 ``--bench-json PATH`` (or ``bench_json_path=``) additionally emits the
 timing/dispatch numbers as ``BENCH_curves.json`` — ``benchmarks/run.py``
@@ -45,7 +50,7 @@ from typing import List, Optional
 
 import numpy as np
 
-from repro import analysis
+from repro import analysis, faults
 from repro.optim.compressed_allreduce import CompressedAllReduce
 from repro.protocol import CollisionAdaptiveBits, FixedBits
 from repro.sim import results as sim_results
@@ -54,6 +59,21 @@ from repro.sim import train_curves as tc
 # the DP compression operating point both tiers bench: 1/8 kept + EF
 _DP_K_FRAC = 1 / 8
 _DP_SHARDS = 2
+
+
+def _fault_lanes(ccfg: tc.CurveConfig):
+    """The benched fault grid: one i.i.d. witness lane per ``p_miss`` entry
+    position, then burst lanes of growing mean length.  Lane 0 is
+    ``FaultModel.iid(p_miss[0])`` so it must reproduce the plain engine's
+    lane 0 bit for bit (same stream derivation); the burst lanes share one
+    ``stale`` policy — the whole grid is ONE compile per bits value."""
+    policy = faults.DegradePolicy.stale()
+    models = [faults.FaultModel.iid(p, policy=policy) for p in ccfg.p_miss]
+    for burst_len in (4.0, 16.0):
+        models.append(faults.FaultModel.burst(
+            burst_len=burst_len, gap_len=4 * burst_len, p_miss_bad=0.5,
+            p_miss_good=0.01, policy=policy))
+    return models
 
 
 def _smoke_config() -> tc.CurveConfig:
@@ -182,15 +202,45 @@ def run(smoke: bool = False, json_path: Optional[str] = None,
     if not np.isfinite(dp.acc).all():
         raise RuntimeError("dp curve run produced non-finite accuracy")
 
+    # the fault-injection engine: FaultModel lanes (Gilbert–Elliott bursts +
+    # i.i.d. witnesses) inside the fused scan — the burst-lane self-check:
+    # fault lanes add ZERO extra traces (one compile per bits value, however
+    # many fault lanes ride along), and the i.i.d. witness lane reproduces
+    # the plain engine's lane 0 bit for bit
+    flanes = _fault_lanes(ccfg)
+    tc.reset_trace_counts()
+    tc.reset_dispatch_counts()
+    t0 = time.perf_counter()
+    fc = tc.run_fault_curves(ccfg, flanes)
+    wall_faults = time.perf_counter() - t0
+    traces_f, disp_f = tc.trace_counts(), tc.dispatch_counts()
+    analysis.assert_trace_count(traces_f["fused_faults"], n_bits,
+                                "fault curve engine")
+    if disp_f["fused_faults"] != n_bits:
+        raise RuntimeError(
+            f"fault engine dispatched {disp_f['fused_faults']} times for "
+            f"{n_bits} bits values — fault lanes must ride the one fused "
+            f"dispatch")
+    if not np.array_equal(fc.acc[:, 0], curves.acc[:, 0]):
+        raise RuntimeError(
+            "fault-engine parity broken: the FaultModel.iid witness lane "
+            f"diverged from the plain run (fault {fc.acc[:, 0]} vs plain "
+            f"{curves.acc[:, 0]})")
+    if not np.isfinite(fc.acc).all():
+        raise RuntimeError("fault curve run produced non-finite accuracy")
+
     # wall-clock includes the (cacheable) compile
     sps_scan = trained_steps / wall_scan
     sps_sched = ccfg.steps / wall_sched
     sps_dp = trained_steps / wall_dp
+    sps_faults = trained_steps / wall_faults
 
     records = sim_results.summarize_curves(curves)
     dp_records = sim_results.summarize_dp_curves(dp)
+    fault_records = sim_results.summarize_fault_curves(fc)
     rows = sim_results.curve_rows(records)
     rows += sim_results.dp_curve_rows(dp_records)
+    rows += sim_results.fault_curve_rows(fault_records)
     rows.append(
         f"curves/engine_scan,{wall_scan / trained_steps * 1e6:.0f},"
         f"steps_per_sec={sps_scan:.1f};dispatches_per_bits="
@@ -210,6 +260,13 @@ def run(smoke: bool = False, json_path: Optional[str] = None,
         f"dp_payload_frac="
         f"{dp.dp_payload_bits_step / dp.dp_dense_bits_step:.3f}")
     rows.append(
+        f"curves/engine_faults,{wall_faults / trained_steps * 1e6:.0f},"
+        f"steps_per_sec={sps_faults:.1f};fault_lanes={len(flanes)};"
+        f"dispatches_per_bits={disp_f['fused_faults'] / n_bits:g};"
+        f"compiles={traces_f['fused_faults']};"
+        f"policy={flanes[0].policy.kind};"
+        f"iid_witness_bitwise_equal=1")
+    rows.append(
         f"curves/dispatch,0,scan_bound={bound};"
         f"dispatches_per_bits={per_bits_scan:g}")
     rows.append(
@@ -220,7 +277,8 @@ def run(smoke: bool = False, json_path: Optional[str] = None,
 
     if json_path:
         with open(json_path, "w") as f:
-            json.dump(records + dp_records, f, indent=2, sort_keys=True)
+            json.dump(records + dp_records + fault_records, f, indent=2,
+                      sort_keys=True)
             f.write("\n")
     if bench_json_path:
         bench = {
@@ -247,6 +305,15 @@ def run(smoke: bool = False, json_path: Optional[str] = None,
                        "dispatches_per_bits": per_bits_dp,
                        "traces_per_bits": traces_d["fused_dp"] / n_bits,
                        "dp_shards": _DP_SHARDS},
+                "faults": {"wall_s": round(wall_faults, 3),
+                           "steps_per_sec": round(sps_faults, 2),
+                           "fault_lanes": len(flanes),
+                           "dispatches_per_bits":
+                               disp_f["fused_faults"] / n_bits,
+                           "traces_per_bits":
+                               traces_f["fused_faults"] / n_bits,
+                           "policy": flanes[0].policy.kind,
+                           "iid_witness_bitwise_equal": True},
             },
             "dp_payload_bits": {
                 "k_frac": _DP_K_FRAC,

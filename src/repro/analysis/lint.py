@@ -1,6 +1,6 @@
 """Repo-specific AST lint: the rules ruff can't express.
 
-Five rules, all syntactic (no imports of the scanned code, so a broken
+Six rules, all syntactic (no imports of the scanned code, so a broken
 module parses and lints like any other):
 
 ``interpret-hardcode``
@@ -31,11 +31,19 @@ module parses and lints like any other):
     standing guardrail; a kernel without it is unverifiable.
 
 ``nondeterminism``
-    Engine code (sim/serve/protocol/core/train/optim/models) must not call
-    wall clocks (``time.*``, ``datetime.now``) or global-state RNGs
-    (stdlib ``random.*``, legacy ``np.random.*``); seeded
+    Engine code (sim/serve/protocol/core/train/optim/models/faults) must
+    not call wall clocks (``time.*``, ``datetime.now``) or global-state
+    RNGs (stdlib ``random.*``, legacy ``np.random.*``); seeded
     ``np.random.default_rng`` stays legal.  Benchmarks time things — they
     are exempt from this rule, not from the jit rules.
+
+``silent-except``
+    Engine code must not swallow exceptions: no bare ``except:`` and no
+    handler whose entire body is ``pass``/``...`` — a fault-injection run
+    that silently eats an error reports clean numbers for a broken
+    experiment.  Degrade *policies* handle faults explicitly
+    (``repro.faults.DegradePolicy``); code outside the engine subtrees
+    (e.g. best-effort checkpoint discovery) may still catch-and-continue.
 
 Jitted scopes are detected syntactically: functions decorated with
 ``@jax.jit``/``@jit``/``@functools.partial(jax.jit, ...)``, functions
@@ -54,10 +62,11 @@ from repro.analysis import report as R
 from repro.analysis.report import Finding
 
 # rules `host-sync-in-jit` and `eager-loop-in-jit` apply to jitted scopes
-# in any scanned file; `nondeterminism` only to these engine subtrees
+# in any scanned file; `nondeterminism` and `silent-except` only to these
+# engine subtrees
 ENGINE_DIRS = ("src/repro/sim", "src/repro/serve", "src/repro/protocol",
                "src/repro/core", "src/repro/train", "src/repro/optim",
-               "src/repro/models")
+               "src/repro/models", "src/repro/faults")
 
 # the one module allowed to spell `interpret=` resolution
 INTERPRET_HOME = "src/repro/kernels/__init__.py"
@@ -242,9 +251,38 @@ def _check_nondeterminism(tree: ast.Module, rel: str) -> List[Finding]:
     return findings
 
 
+def _check_silent_except(tree: ast.Module, rel: str) -> List[Finding]:
+    findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if node.type is None:
+            findings.append(Finding(
+                R.SILENT_EXCEPT, rel, "bare",
+                "bare `except:` in engine code catches everything "
+                "(including KeyboardInterrupt) — name the exception",
+                line=node.lineno))
+            continue
+        swallow = all(
+            isinstance(stmt, ast.Pass)
+            or (isinstance(stmt, ast.Expr)
+                and isinstance(stmt.value, ast.Constant)
+                and stmt.value.value is Ellipsis)
+            for stmt in node.body)
+        if swallow:
+            name = ast.unparse(node.type)
+            findings.append(Finding(
+                R.SILENT_EXCEPT, rel, f"swallow:{name}",
+                f"`except {name}: pass` in engine code swallows the error "
+                f"— a faulted run would report clean numbers; handle it "
+                f"or let it propagate", line=node.lineno))
+    return findings
+
+
 def lint_file(path: Path, rel: str, *, engine: bool) -> List[Finding]:
     """All per-file rules on one source file (``rel`` is the repo-relative
-    path used in findings; ``engine`` enables the nondeterminism rule)."""
+    path used in findings; ``engine`` enables the nondeterminism and
+    silent-except rules)."""
     try:
         tree = ast.parse(path.read_text(), filename=str(path))
     except SyntaxError as e:
@@ -256,6 +294,7 @@ def lint_file(path: Path, rel: str, *, engine: bool) -> List[Finding]:
     findings += _check_jit_scopes(tree, rel)
     if engine:
         findings += _check_nondeterminism(tree, rel)
+        findings += _check_silent_except(tree, rel)
     return findings
 
 

@@ -204,6 +204,7 @@ def _build_curves_sched() -> Entry:
 
 
 def _build_serve_tick() -> Entry:
+    from repro import faults
     from repro.configs import get_reduced
     from repro.models import model as M
     from repro.parallel.sharding import split_tree
@@ -218,13 +219,108 @@ def _build_serve_tick() -> Entry:
     eng = ServeEngine(m, values, ServeConfig(batch_slots=2, max_seq=8))
 
     def argsf(p):
+        # the perturbation lands in EVERY rebindable channel leaf at once:
+        # protocol.p_miss, the Gilbert–Elliott transition/miss probs, the
+        # dropout rates, AND the carried chain state (bad mask, stale
+        # cache, outage counters) — a fault sweep must reuse the one
+        # compiled tick
         proto = Protocol.ocs(bits=8, max_rounds=2,
                              p_miss=np.full((2,), p, np.float32))
-        return (values, proto, eng.cur_token, eng.positions, eng.cache,
-                np.int32(0))
+        fm = faults.FaultModel.gilbert_elliott(
+            p_gb=p, p_bg=2 * p, p_miss_good=p, p_miss_bad=0.5,
+            policy=faults.DegradePolicy.stale()).with_dropout(p, 1.0 - p)
+        fstate = faults.FaultState(
+            bad=np.arange(2) % 2 == int(p > 0.05),
+            offline=np.zeros((2,), bool),
+            stale=np.float32(p), age=np.int32(int(100 * p)),
+            consec=np.int32(0))
+        return (values, proto, fm, fstate, eng.cur_token, eng.positions,
+                eng.cache, np.int32(0))
 
     return Entry(fn=eng._tick, argsf=argsf,
                  lower=lambda: eng._tick.lower(*argsf(0.05)))
+
+
+def _build_faults_aggregate() -> Entry:
+    from repro import faults
+    from repro.protocol import Protocol
+
+    h = jax.ShapeDtypeStruct((_N_WORKERS, 2, 8), jnp.float32)
+    rng = _key_data()
+
+    def agg(protocol, model, state, h, rng):
+        return faults.aggregate(protocol, model, state, h, rng)
+
+    def argsf(p):
+        proto = Protocol.ocs(
+            bits=8, max_rounds=2,
+            p_miss=np.full((_N_WORKERS,), p, np.float32))
+        fm = faults.FaultModel(
+            p_gb=np.float32(p), p_bg=np.float32(2 * p),
+            p_miss_good=np.float32(p / 2),
+            p_miss_bad=np.float32(0.4 + p),
+            p_drop=np.float32(p), p_recover=np.float32(1.0 - p),
+            policy=faults.DegradePolicy.stale())
+        state = faults.FaultState(
+            bad=np.arange(_N_WORKERS) % 2 == int(p > 0.05),
+            offline=np.arange(_N_WORKERS) % 3 == int(p > 0.05),
+            stale=np.full((2, 8), p, np.float32),
+            age=np.int32(int(100 * p)), consec=np.int32(int(10 * p)))
+        return (proto, fm, state, h, rng)
+
+    return Entry(fn=agg, argsf=argsf,
+                 lower=lambda: jax.jit(agg).lower(*argsf(0.05)))
+
+
+def _build_curves_fused_faults() -> Entry:
+    from repro import faults
+    from repro.core import vertical
+    from repro.sim import train_curves as tc
+
+    ccfg = _tiny_curve_config()
+    lanes = 2
+    per_bits = tc._make_fault_steps(ccfg, 8)
+    logged = ccfg.logged_steps()
+    fused = tc._make_fused_faults(ccfg, per_bits, len(logged))
+
+    vcfg_n = per_bits[0]
+    params0 = jax.eval_shape(lambda k: vertical.init(vcfg_n, k),
+                             jax.random.PRNGKey(0))
+    opt0 = jax.eval_shape(per_bits[1].init, params0)
+    patch_dim = (ccfg.hw // ccfg.grid) ** 2
+    sds = jax.ShapeDtypeStruct
+    views = sds((ccfg.n_workers, ccfg.n_train, patch_dim), jnp.float32)
+    labels = sds((ccfg.n_train,), jnp.int32)
+    vviews = sds((ccfg.n_workers, ccfg.n_val, patch_dim), jnp.float32)
+    vlabels = sds((ccfg.n_val,), jnp.int32)
+    slots = tc._log_slots(ccfg, logged)
+    lane_keys, k_data = _key_data(lanes), _key_data()
+    n = ccfg.n_workers
+
+    def argsf(p):
+        # lane-stacked fault grid: both lanes' GE transition probs, dropout
+        # rates AND the carried chain state (bad/offline masks, stale
+        # cache) move with p — the fused engine must hold at one trace
+        fm = faults.FaultModel(
+            p_gb=np.asarray([0.0, p], np.float32),
+            p_bg=np.asarray([0.25, 2 * p], np.float32),
+            p_miss_good=np.asarray([0.0, p], np.float32),
+            p_miss_bad=np.asarray([0.5, 0.4 + p], np.float32),
+            p_drop=np.asarray([0.0, p], np.float32),
+            p_recover=np.asarray([1.0, 1.0 - p], np.float32),
+            policy=faults.DegradePolicy.stale())
+        fs0 = faults.FaultState(
+            bad=np.zeros((lanes, n), bool),
+            offline=(np.arange(lanes * n).reshape(lanes, n) % 3
+                     == int(p > 0.05)),
+            stale=np.full((lanes, ccfg.batch, ccfg.embed_dim), p,
+                          np.float32),
+            age=np.zeros((lanes,), np.int32),
+            consec=np.zeros((lanes,), np.int32))
+        return (params0, opt0, lane_keys, fm, fs0, k_data, views, labels,
+                vviews, vlabels, slots)
+
+    return Entry(fn=fused, argsf=argsf)
 
 
 def _build_sweep_noisy() -> Entry:
@@ -308,8 +404,25 @@ CONTRACTS: Tuple[Contract, ...] = (
     Contract(
         name="serve.tick",
         build=_build_serve_tick,
+        recompile_free_over="protocol.p_miss + fault-model leaves + "
+                            "chain state",
         max_dispatches="1 per decode tick",
         forbid_collectives=True,
+    ),
+    Contract(
+        name="faults.aggregate",
+        build=_build_faults_aggregate,
+        recompile_free_over="GE transition/miss probs + dropout rates + "
+                            "chain state + protocol.p_miss",
+        max_dispatches="inline (no host loop)",
+        forbid_collectives=True,
+    ),
+    Contract(
+        name="curves.fused_faults",
+        build=_build_curves_fused_faults,
+        recompile_free_over="fault-model leaves + FaultState carry "
+                            "(incl. stale cache + dropout masks)",
+        max_dispatches="1 per bits value (+ result fetches)",
     ),
     Contract(
         name="sweep.noisy",

@@ -34,6 +34,7 @@ HOST_SYNC_IN_JIT = "host-sync-in-jit"
 EAGER_LOOP_IN_JIT = "eager-loop-in-jit"
 MISSING_KERNEL_REF = "missing-kernel-ref"
 NONDETERMINISM = "nondeterminism"
+SILENT_EXCEPT = "silent-except"
 UNKNOWN_DTYPE = "unknown-dtype"
 CHECK_ERROR = "check-error"
 
@@ -41,7 +42,7 @@ ALL_RULES = (
     RECOMPILE_HAZARD, F64_PROMOTION, HOST_SYNC, DONATION_ALIAS,
     UNEXPECTED_COLLECTIVE, EXCESS_COPIES, INTERPRET_HARDCODE,
     HOST_SYNC_IN_JIT, EAGER_LOOP_IN_JIT, MISSING_KERNEL_REF, NONDETERMINISM,
-    UNKNOWN_DTYPE, CHECK_ERROR,
+    SILENT_EXCEPT, UNKNOWN_DTYPE, CHECK_ERROR,
 )
 
 

@@ -140,18 +140,29 @@ maxpool_quantized.defvjp(_maxpool_q_fwd, _maxpool_q_bwd)
 # channel-in-the-loop max-pool: noisy-OCS winner selection in the forward
 # ---------------------------------------------------------------------------
 
-def _maxpool_noisy_impl(h, rng, p_miss, bits, max_rounds, backend):
+def _maxpool_noisy_impl(h, rng, p_miss, bits, max_rounds, backend,
+                        online=None):
     """Protocol-outcome pooling: (pooled, winner one-hot mask, accounting).
 
     The third element is the contention core's full ``NoisyOCSResult`` —
     ``repro.protocol`` surfaces its collision/round counters as the
     ``ProtocolAccounting`` of ``Protocol.aggregate``.
+
+    ``online`` (optional ``(N,)`` bool) removes dark workers from the
+    contention mask entirely — they neither transmit nor capture by index
+    (``repro.faults`` worker dropout).  ``None`` means everyone contends;
+    an all-``True`` array is bit-for-bit identical to ``None``.  With no
+    online worker the core's lowest-index capture degenerates to worker 0:
+    callers that allow total outage must gate on ``online.any()``
+    (``repro.faults`` does).
     """
     n = h.shape[0]
     flat = h.reshape(n, -1)                                    # (N, M)
     id_bits = ocs.host_id_bits(n)
+    mask = (jnp.ones((n,), dtype=bool) if online is None
+            else jnp.asarray(online, bool))
     res = ocs.ocs_maxpool_noisy_core(
-        flat, jnp.ones((n,), dtype=bool), id_bits, rng, p_miss,
+        flat, mask, id_bits, rng, p_miss,
         bits=bits, max_id_bits=id_bits, max_rounds=max_rounds,
         backend=backend)
     codes = qz.quantize(flat, bits)

@@ -110,17 +110,23 @@ def embeddings(cfg: VerticalConfig, params: dict, views: jax.Array) -> jax.Array
 
 
 def _fuse_forward(cfg: VerticalConfig, params: dict, views: jax.Array,
-                  rng, protocol):
-    """Shared forward: (prediction, accounting-or-None, protocol-or-None)."""
+                  rng, protocol, fault=None, fault_state=None):
+    """Shared forward: (prediction, accounting-or-None, protocol-or-None,
+    new-fault-state-or-None)."""
     h = embeddings(cfg, params, views)
     if cfg.prediction_level:
         preds = jax.vmap(_mlp_apply)(params["head"], h)       # (N, B, out)
         if cfg.task == "classification":
             preds = jax.nn.softmax(preds, axis=-1)
-        return jnp.mean(preds, axis=0), None, None            # Avg. Workers Preds
+        return jnp.mean(preds, axis=0), None, None, None      # Avg. Workers Preds
     proto = protocol if protocol is not None else cfg.resolve_protocol()
+    if fault is not None:
+        from repro import faults                   # lazy: faults -> protocol
+        v, new_state, acct = faults.aggregate(proto, fault, fault_state, h,
+                                              rng)
+        return _mlp_apply(params["head"], v), acct, proto, new_state
     v, acct = proto.aggregate(h, rng)
-    return _mlp_apply(params["head"], v), acct, proto
+    return _mlp_apply(params["head"], v), acct, proto, None
 
 
 def forward(cfg: VerticalConfig, params: dict, views: jax.Array, *,
@@ -133,7 +139,7 @@ def forward(cfg: VerticalConfig, params: dict, views: jax.Array, *,
     uses to vmap a ``p_miss`` lane axis.  An OCS protocol additionally
     needs ``rng`` (the sensing PRNG key); both are ordinary traced values.
     """
-    pred, _, _ = _fuse_forward(cfg, params, views, rng, protocol)
+    pred, _, _, _ = _fuse_forward(cfg, params, views, rng, protocol)
     return pred
 
 
@@ -148,7 +154,8 @@ def per_worker_predictions(cfg: VerticalConfig, params: dict,
 def loss_fn(cfg: VerticalConfig, params: dict, views: jax.Array,
             target: jax.Array, *,
             rng: Optional[jax.Array] = None,
-            protocol: Optional[Protocol] = None
+            protocol: Optional[Protocol] = None,
+            fault=None, fault_state=None
             ) -> Tuple[jax.Array, dict]:
     """Task loss + metrics.  For an OCS fusion protocol the metrics carry
     the measured channel telemetry of this step's aggregate call
@@ -156,8 +163,17 @@ def loss_fn(cfg: VerticalConfig, params: dict, views: jax.Array,
     the signal :class:`repro.protocol.BitsSchedule` policies consume.
     ``chan_collision_frac`` is a true fraction in [0, 1]: collided
     re-contention opportunities over the ``K * max_rounds`` available
-    (the core bills a sub-frame once per round it stays collided)."""
-    pred, acct, proto = _fuse_forward(cfg, params, views, rng, protocol)
+    (the core bills a sub-frame once per round it stays collided).
+
+    ``fault``/``fault_state`` (a ``repro.faults.FaultModel`` + carried
+    ``FaultState``) switch the aggregation to the fault-aware path: the
+    metrics then additionally carry the evolved carry under
+    ``metrics["fault_state"]`` (a pytree — pop it before scalar logging)
+    and the degradation telemetry scalars (``fault_dropped_frames``,
+    ``fault_stale_age``, ``fault_offline``, ``fault_retry_slots``,
+    ``fault_outage``)."""
+    pred, acct, proto, new_fault_state = _fuse_forward(
+        cfg, params, views, rng, protocol, fault, fault_state)
     if cfg.task == "reconstruction":
         # Paper Eq. 2 squared error == Gaussian NLL up to constants; we report
         # per-pixel NLL with unit variance /2 convention for Fig.2 comparison.
@@ -184,6 +200,13 @@ def loss_fn(cfg: VerticalConfig, params: dict, views: jax.Array,
             acct.collisions.astype(jnp.float32)
             / (k_total * proto.max_rounds))
         metrics["chan_correct_frac"] = acct.correct_frac
+    if new_fault_state is not None:
+        metrics["fault_state"] = new_fault_state
+        metrics["fault_dropped_frames"] = acct.dropped_frames
+        metrics["fault_stale_age"] = acct.stale_age
+        metrics["fault_offline"] = acct.offline_workers
+        metrics["fault_retry_slots"] = acct.retry_slots
+        metrics["fault_outage"] = acct.outage
     return loss, metrics
 
 

@@ -1,0 +1,25 @@
+"""Channel fault injection: bursty sensing, worker dropout, degradation."""
+
+from repro.faults.model import (
+    POLICIES,
+    DegradePolicy,
+    FaultAccounting,
+    FaultModel,
+    FaultState,
+    aggregate,
+    effective_p_miss,
+    init_state,
+    step_chains,
+)
+
+__all__ = [
+    "POLICIES",
+    "DegradePolicy",
+    "FaultAccounting",
+    "FaultModel",
+    "FaultState",
+    "aggregate",
+    "effective_p_miss",
+    "init_state",
+    "step_chains",
+]

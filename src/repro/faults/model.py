@@ -1,0 +1,392 @@
+"""Fault injection for the wireless channel: bursty sensing, worker dropout,
+and graceful degradation — as one traced pytree value.
+
+The repo's baseline channel is an i.i.d. Bernoulli miss draw (``p_miss``);
+real wireless links fail in *bursts* (deep fades) and whole workers go dark
+(device dropout, stragglers).  :class:`FaultModel` upgrades the sensing
+channel to a Gilbert–Elliott two-state Markov chain with per-state miss
+probabilities, adds an evolving per-worker offline mask, and names a
+:class:`DegradePolicy` for what the aggregator does when an OCS frame
+resolves nothing — all with the same pytree discipline as
+``repro.protocol.Protocol``: every probability is a traced data leaf, so one
+compiled program serves a whole grid of fault parameters (zero recompiles),
+and only the policy is static metadata.
+
+Chain mechanics (one :func:`aggregate` call = one contention frame):
+
+* sensing state: ``bad' = bad ? (u >= p_bg) : (u < p_gb)`` per worker —
+  mean bad sojourn ``1/p_bg`` frames, mean good sojourn ``1/p_gb`` frames;
+  the effective miss probability fed to the contention core is
+  ``where(bad', p_miss_bad, p_miss_good)``;
+* dropout: ``offline' = offline ? (u >= p_recover) : (u < p_drop)`` —
+  offline workers leave the contention mask entirely (they are *deaf and
+  mute*, never miss-sensing false winners);
+* degradation: when no worker is online the frame resolves nothing — the
+  policy fills the pooled value with zeros (``zero_fill``), the last
+  resolved frame from a carried cache (``stale``), or first spends a
+  bounded retransmission budget with exponential backoff (``retry``),
+  billing every extra attempt through the accounting.
+
+The chain uniforms are drawn from ``fold_in(rng, tag)`` side streams with
+tags disjoint from the contention core's round indices, so the *sensing*
+random stream is untouched: a :meth:`FaultModel.iid` model (identical
+good/bad states, no dropout) reproduces the plain ``Protocol.aggregate``
+path bit for bit — forward, vjp and accounting (property-tested).
+
+Gradients (paper Eq. 5-6 extended): on a resolved frame the cotangent
+routes to the actual winner exactly as before; on a dropped frame nothing
+reaches ``h`` and the cotangent of the pooled value routes to the stale
+cache instead (``stale`` policy) or vanishes (``zero_fill``/``retry``),
+so degraded steps never invent gradient signal.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fedocs, ocs
+
+POLICIES = ("zero_fill", "stale", "retry")
+
+# fold_in tags for the fault side-streams.  The contention core consumes
+# fold_in(rng, r) for round indices r < max_rounds and fold_in(key, d) for
+# bit-slot indices below that; these large tags can never collide with
+# either, which is what keeps the sensing stream bit-for-bit unchanged.
+_CHAIN_TAG = 0x000C5A17   # Gilbert–Elliott sensing-state chain
+_DROP_TAG = 0x000D2079    # worker-dropout chain
+_RETRY_TAG = 0x000AE771   # retry-recovery re-draws
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradePolicy:
+    """What the aggregator does when a frame resolves nothing (static).
+
+    ``zero_fill`` emits zeros for the dropped frame; ``stale`` replays the
+    last resolved pooled value from the carried cache; ``retry`` spends up
+    to ``retry_budget`` retransmission attempts (each re-drawing worker
+    recovery and billing a full contention frame plus an exponential
+    backoff wait) before degrading to zeros.
+    """
+
+    kind: str = "zero_fill"
+    retry_budget: int = 0
+
+    def __post_init__(self):
+        if self.kind not in POLICIES:
+            raise ValueError(
+                f"unknown degrade policy {self.kind!r}; valid: {POLICIES}")
+        if self.kind == "retry" and self.retry_budget < 1:
+            raise ValueError("retry policy needs retry_budget >= 1")
+        if self.kind != "retry" and self.retry_budget != 0:
+            raise ValueError(
+                f"retry_budget is only meaningful for kind='retry', "
+                f"got {self.retry_budget} with {self.kind!r}")
+
+    @classmethod
+    def zero_fill(cls) -> "DegradePolicy":
+        return cls(kind="zero_fill")
+
+    @classmethod
+    def stale(cls) -> "DegradePolicy":
+        return cls(kind="stale")
+
+    @classmethod
+    def retry(cls, budget: int = 2) -> "DegradePolicy":
+        return cls(kind="retry", retry_budget=budget)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """The channel fault process as a frozen pytree (traced leaves).
+
+    Every probability is a traced ``float32`` leaf — scalar or per-worker
+    ``(N,)`` — so fault parameters rebind without recompiles and a ``vmap``
+    lane axis serves a whole fault grid; only ``policy`` is static.
+    Construct with :meth:`iid`, :meth:`gilbert_elliott`, or :meth:`burst`
+    (+ :meth:`with_dropout` / :meth:`with_policy`).
+    """
+
+    p_gb: jax.Array          # P(good -> bad) per frame
+    p_bg: jax.Array          # P(bad -> good) per frame
+    p_miss_good: jax.Array   # sensing miss prob in the good state
+    p_miss_bad: jax.Array    # sensing miss prob in the bad state
+    p_drop: jax.Array        # P(online -> offline) per frame
+    p_recover: jax.Array     # P(offline -> online) per frame
+    policy: DegradePolicy = DegradePolicy()
+
+    @classmethod
+    def iid(cls, p_miss, *, policy: Optional[DegradePolicy] = None
+            ) -> "FaultModel":
+        """Degenerate model: identical states, no dropout — bit-for-bit the
+        existing i.i.d. ``p_miss`` path (the reduction witness)."""
+        p = jnp.asarray(p_miss, jnp.float32)
+        z = jnp.float32(0.0)
+        return cls(p_gb=z, p_bg=z, p_miss_good=p, p_miss_bad=p,
+                   p_drop=z, p_recover=jnp.float32(1.0),
+                   policy=policy or DegradePolicy.zero_fill())
+
+    @classmethod
+    def gilbert_elliott(cls, *, p_gb, p_bg, p_miss_good=0.0, p_miss_bad=0.5,
+                        policy: Optional[DegradePolicy] = None
+                        ) -> "FaultModel":
+        return cls(p_gb=jnp.asarray(p_gb, jnp.float32),
+                   p_bg=jnp.asarray(p_bg, jnp.float32),
+                   p_miss_good=jnp.asarray(p_miss_good, jnp.float32),
+                   p_miss_bad=jnp.asarray(p_miss_bad, jnp.float32),
+                   p_drop=jnp.float32(0.0), p_recover=jnp.float32(1.0),
+                   policy=policy or DegradePolicy.zero_fill())
+
+    @classmethod
+    def burst(cls, *, burst_len: float, gap_len: float, p_miss_bad=0.5,
+              p_miss_good=0.0, policy: Optional[DegradePolicy] = None
+              ) -> "FaultModel":
+        """Gilbert–Elliott parameterized by mean sojourn times: bad spans
+        average ``burst_len`` frames, good spans ``gap_len`` frames."""
+        if burst_len < 1.0 or gap_len < 1.0:
+            raise ValueError(
+                f"burst_len/gap_len are mean sojourns in frames, >= 1 "
+                f"(got {burst_len}, {gap_len})")
+        return cls.gilbert_elliott(
+            p_gb=1.0 / gap_len, p_bg=1.0 / burst_len,
+            p_miss_good=p_miss_good, p_miss_bad=p_miss_bad, policy=policy)
+
+    def with_dropout(self, p_drop, p_recover=0.25) -> "FaultModel":
+        return dataclasses.replace(
+            self, p_drop=jnp.asarray(p_drop, jnp.float32),
+            p_recover=jnp.asarray(p_recover, jnp.float32))
+
+    def with_policy(self, policy: DegradePolicy) -> "FaultModel":
+        return dataclasses.replace(self, policy=policy)
+
+
+jax.tree_util.register_dataclass(
+    FaultModel,
+    data_fields=["p_gb", "p_bg", "p_miss_good", "p_miss_bad",
+                 "p_drop", "p_recover"],
+    meta_fields=["policy"])
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultState:
+    """The carried fault state (one per independent channel/lane).
+
+    ``stale`` caches the last *resolved* pooled value (the ``stale``
+    policy's replay source; carried regardless of policy so policies can
+    rebind without re-shaping the carry), ``age`` counts frames since the
+    last resolved frame, ``consec`` counts consecutive dropped frames.
+    """
+
+    bad: jax.Array       # (N,) bool — sensing chain state
+    offline: jax.Array   # (N,) bool — dropout chain state
+    stale: jax.Array     # pooled-shape cache of the last resolved frame
+    age: jax.Array       # () int32 — frames since last resolution
+    consec: jax.Array    # () int32 — consecutive dropped frames
+
+
+jax.tree_util.register_dataclass(
+    FaultState,
+    data_fields=["bad", "offline", "stale", "age", "consec"],
+    meta_fields=[])
+
+
+def init_state(n_workers: int, pooled_shape: Tuple[int, ...] = (),
+               dtype=jnp.float32) -> FaultState:
+    """All-good initial state: every worker online, chain in the good
+    state, empty stale cache of the pooled shape ``h.shape[1:]``."""
+    return FaultState(
+        bad=jnp.zeros((n_workers,), bool),
+        offline=jnp.zeros((n_workers,), bool),
+        stale=jnp.zeros(pooled_shape, dtype),
+        age=jnp.int32(0), consec=jnp.int32(0))
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultAccounting:
+    """Honest channel accounting of one fault-aware aggregation.
+
+    The first four fields keep the exact :class:`ProtocolAccounting` names
+    (``rounds``/``collisions``/``contention_slots``/``correct_frac``) so
+    every telemetry consumer of ``Protocol.aggregate`` reads this object
+    unchanged; ``contention_slots`` additionally includes the retry bill.
+    """
+
+    rounds: jax.Array            # () int32
+    collisions: jax.Array        # () int32
+    contention_slots: jax.Array  # () int32 — core slots + retry_slots
+    correct_frac: jax.Array      # () float32 — 0.0 on a dropped frame
+    dropped_frames: jax.Array    # () int32 — sub-frames that resolved nothing
+    stale_age: jax.Array         # () int32 — frames since last resolution
+    offline_workers: jax.Array   # () int32
+    retry_slots: jax.Array       # () int32 — extra airtime spent retrying
+    outage: jax.Array            # () int32 — 1 if this frame was dropped
+
+
+jax.tree_util.register_dataclass(
+    FaultAccounting,
+    data_fields=["rounds", "collisions", "contention_slots", "correct_frac",
+                 "dropped_frames", "stale_age", "offline_workers",
+                 "retry_slots", "outage"],
+    meta_fields=[])
+
+
+# ---------------------------------------------------------------------------
+# chain evolution (side-stream rng; sensing stream untouched)
+# ---------------------------------------------------------------------------
+
+def step_chains(model: FaultModel, state: FaultState, rng: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+    """One Markov step of both chains: ``(new_bad, new_offline)``."""
+    n = state.bad.shape[0]
+    u_s = jax.random.uniform(jax.random.fold_in(rng, _CHAIN_TAG), (n,),
+                             jnp.float32)
+    p_gb = jnp.asarray(model.p_gb, jnp.float32)
+    p_bg = jnp.asarray(model.p_bg, jnp.float32)
+    new_bad = jnp.where(state.bad, u_s >= p_bg, u_s < p_gb)
+    u_d = jax.random.uniform(jax.random.fold_in(rng, _DROP_TAG), (n,),
+                             jnp.float32)
+    p_drop = jnp.asarray(model.p_drop, jnp.float32)
+    p_rec = jnp.asarray(model.p_recover, jnp.float32)
+    new_offline = jnp.where(state.offline, u_d >= p_rec, u_d < p_drop)
+    return new_bad, new_offline
+
+
+def effective_p_miss(model: FaultModel, bad: jax.Array) -> jax.Array:
+    """Per-worker sensing miss probability under the current chain state."""
+    return jnp.where(bad, jnp.asarray(model.p_miss_bad, jnp.float32),
+                     jnp.asarray(model.p_miss_good, jnp.float32))
+
+
+def _retry_recover(model: FaultModel, offline: jax.Array, rng: jax.Array,
+                   frame_slots: int) -> Tuple[jax.Array, jax.Array]:
+    """Bounded retransmission: while the cell is in total outage, re-draw
+    worker recovery up to ``retry_budget`` times, billing each attempt a
+    full contention frame plus an exponential-backoff wait."""
+    kr = jax.random.fold_in(rng, _RETRY_TAG)
+    p_rec = jnp.asarray(model.p_recover, jnp.float32)
+    n = offline.shape[0]
+    retry_slots = jnp.int32(0)
+    for a in range(model.policy.retry_budget):    # static unroll: budget is
+        outage = ~jnp.any(~offline)               # policy metadata
+        u = jax.random.uniform(jax.random.fold_in(kr, a), (n,), jnp.float32)
+        cost = jnp.int32(frame_slots + 2 ** a)
+        retry_slots = retry_slots + jnp.where(outage, cost, jnp.int32(0))
+        offline = jnp.where(outage, offline & (u >= p_rec), offline)
+    return offline, retry_slots
+
+
+# ---------------------------------------------------------------------------
+# the fault-aware pooling law (custom_vjp: degraded frames never invent
+# gradient signal)
+# ---------------------------------------------------------------------------
+
+def _fault_pool_impl(h, rng, p_eff, online, stale, bits, max_rounds,
+                     backend, stale_fill):
+    pooled_raw, onehot, res = fedocs._maxpool_noisy_impl(
+        h, rng, p_eff, bits, max_rounds, backend, online=online)
+    ok = jnp.any(online)
+    okf = ok.astype(h.dtype)
+    fill = stale if stale_fill else jnp.zeros_like(stale)
+    pooled = jnp.where(ok, pooled_raw, fill)
+    new_stale = jnp.where(ok, pooled_raw, stale)
+    mask = okf * onehot                           # winner routing, outage-gated
+    return (pooled, new_stale, res, ok), (mask, okf)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _fault_pool(h, rng, p_eff, online, stale, bits, max_rounds, backend,
+                stale_fill):
+    """``fedocs._maxpool_noisy_impl`` + outage gating + stale-cache carry.
+
+    Returns ``(pooled, new_stale, NoisyOCSResult, ok)``.  On a resolved
+    frame (``ok``) this is bit-for-bit the plain noisy pool; on outage the
+    pooled value is the policy fill and the cache/telemetry carry forward.
+    """
+    out, _ = _fault_pool_impl(h, rng, p_eff, online, stale, bits,
+                              max_rounds, backend, stale_fill)
+    return out
+
+
+def _fault_pool_fwd(h, rng, p_eff, online, stale, bits, max_rounds, backend,
+                    stale_fill):
+    out, (mask, okf) = _fault_pool_impl(h, rng, p_eff, online, stale, bits,
+                                        max_rounds, backend, stale_fill)
+    return out, (mask, okf, p_eff, rng, online)
+
+
+def _fault_pool_bwd(bits, max_rounds, backend, stale_fill, residuals, g):
+    mask, okf, p_eff, rng, online = residuals
+    g_pooled, g_new_stale, _g_res, _g_ok = g     # telemetry: non-diff
+    # pooled and new_stale both equal pooled_raw on a resolved frame, so the
+    # winner receives the sum of their cotangents; mask is already okf-gated
+    # (nothing reaches h on a dropped frame).
+    d_h = (g_pooled + g_new_stale)[None] * mask
+    # on a dropped frame the cache passes through to new_stale, and under
+    # the stale policy it IS the pooled output as well.
+    d_stale = (1.0 - okf) * (g_new_stale
+                             + (g_pooled if stale_fill
+                                else jnp.zeros_like(g_pooled)))
+    d_rng = np.zeros(np.shape(rng), jax.dtypes.float0)
+    d_online = np.zeros(np.shape(online), jax.dtypes.float0)
+    return (d_h, d_rng, jnp.zeros_like(p_eff), d_online, d_stale)
+
+
+_fault_pool.defvjp(_fault_pool_fwd, _fault_pool_bwd)
+
+
+# ---------------------------------------------------------------------------
+# the one entry point
+# ---------------------------------------------------------------------------
+
+def aggregate(protocol, model: FaultModel, state: FaultState, h: jax.Array,
+              rng: jax.Array
+              ) -> Tuple[jax.Array, FaultState, FaultAccounting]:
+    """Fault-aware OCS aggregation: one contention frame under the fault
+    process.
+
+    Evolves both Markov chains, runs the (possibly retried) contention with
+    the effective per-worker miss probabilities and the offline workers
+    removed from the mask, applies the degrade policy on outage, and bills
+    everything through :class:`FaultAccounting`.  ``protocol`` supplies the
+    static contention parameters (``bits``/``max_rounds``/``backend``); its
+    own ``p_miss`` leaf is superseded by the model's per-state
+    probabilities.  Returns ``(pooled, new_state, accounting)``.
+    """
+    if protocol.kind != "ocs":
+        raise ValueError(
+            f"fault injection needs an OCS protocol, got {protocol.kind!r}")
+    n = h.shape[0]
+    new_bad, new_offline = step_chains(model, state, rng)
+    retry_slots = jnp.int32(0)
+    if model.policy.kind == "retry":
+        frame_slots = ((protocol.bits + ocs.host_id_bits(n))
+                       * int(np.prod(h.shape[1:])))
+        new_offline, retry_slots = _retry_recover(model, new_offline, rng,
+                                                  frame_slots)
+    online = ~new_offline
+    p_eff = effective_p_miss(model, new_bad)
+    pooled, new_stale, res, ok = _fault_pool(
+        h, rng, p_eff, online, state.stale, protocol.bits,
+        protocol.max_rounds, protocol.backend,
+        model.policy.kind == "stale")
+    age = jnp.where(ok, jnp.int32(0), state.age + jnp.int32(1))
+    consec = jnp.where(ok, jnp.int32(0), state.consec + jnp.int32(1))
+    new_state = FaultState(bad=new_bad, offline=new_offline, stale=new_stale,
+                           age=age, consec=consec)
+    m_frames = int(np.prod(h.shape[1:]))
+    acct = FaultAccounting(
+        rounds=res.rounds, collisions=res.collisions,
+        contention_slots=res.contention_slots + retry_slots,
+        correct_frac=jnp.where(ok, jnp.mean(res.correct.astype(jnp.float32)),
+                               jnp.float32(0.0)),
+        dropped_frames=jnp.where(ok, jnp.int32(0), jnp.int32(m_frames)),
+        stale_age=age,
+        offline_workers=jnp.sum(new_offline.astype(jnp.int32)),
+        retry_slots=retry_slots,
+        outage=(~ok).astype(jnp.int32))
+    return pooled, new_state, acct

@@ -19,9 +19,11 @@ consumers used to scatter across ``fedocs.aggregate``, ``ChannelNoise``,
   * ``protocol.output_dim(n_workers, k)`` — the fused feature width the
     head sees.
 
-Pytree layout: ``p_miss`` is the ONLY leaf — a traced scalar or per-worker
-``(N,)`` array — so a single compiled computation (or a ``vmap`` lane axis)
-serves a whole miss-probability grid; every other field is static metadata
+Pytree layout: ``p_miss`` (traced scalar or per-worker ``(N,)`` miss
+probability) and ``online`` (optional ``(N,)`` worker-up mask, default
+``None`` = everyone contends) are the only leaves, so a single compiled
+computation (or a ``vmap`` lane axis) serves a whole miss-probability or
+fault grid; every other field is static metadata
 (``kind``, ``bits``, ``backend``, ``max_rounds``, ``tie_break``,
 ``n_channels``, ``payload_bits``) baked into the compiled program.  The
 quantization depth ``bits`` stays static because it selects the code dtype
@@ -108,31 +110,36 @@ def _acct_from(res: ocs.NoisyOCSResult) -> ProtocolAccounting:
         correct_frac=jnp.mean(res.correct.astype(jnp.float32)))
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def _ocs_pool(h, rng, p_miss, bits, max_rounds, backend):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _ocs_pool(h, rng, p_miss, online, bits, max_rounds, backend):
     """``fedocs.maxpool_noisy`` + the contention core's channel accounting.
 
     Shares ``fedocs._maxpool_noisy_impl`` with :func:`fedocs.maxpool_noisy`,
     so the pooled value, the winner-routed backward AND the accounting are
     bit-for-bit the historical path (the accounting was always computed by
-    the core; it was just discarded before reaching the caller).
+    the core; it was just discarded before reaching the caller).  ``online``
+    is the all-``True`` mask unless the protocol carries a dropout state
+    (``repro.faults``): dark workers leave the contention entirely.
     """
     pooled, _, res = fedocs._maxpool_noisy_impl(h, rng, p_miss, bits,
-                                                max_rounds, backend)
+                                                max_rounds, backend,
+                                                online=online)
     return pooled, _acct_from(res)
 
 
-def _ocs_pool_fwd(h, rng, p_miss, bits, max_rounds, backend):
+def _ocs_pool_fwd(h, rng, p_miss, online, bits, max_rounds, backend):
     pooled, mask, res = fedocs._maxpool_noisy_impl(h, rng, p_miss, bits,
-                                                   max_rounds, backend)
-    return (pooled, _acct_from(res)), (mask, rng, p_miss)
+                                                   max_rounds, backend,
+                                                   online=online)
+    return (pooled, _acct_from(res)), (mask, rng, p_miss, online)
 
 
 def _ocs_pool_bwd(bits, max_rounds, backend, residuals, g):
-    mask, rng, p_miss = residuals
+    mask, rng, p_miss, online = residuals
     g_pooled, _g_acct = g        # accounting is non-differentiable telemetry
     d_rng = np.zeros(np.shape(rng), jax.dtypes.float0)
-    return (g_pooled[None] * mask, d_rng, jnp.zeros_like(p_miss))
+    d_online = np.zeros(np.shape(online), jax.dtypes.float0)
+    return (g_pooled[None] * mask, d_rng, jnp.zeros_like(p_miss), d_online)
 
 
 _ocs_pool.defvjp(_ocs_pool_fwd, _ocs_pool_bwd)
@@ -149,8 +156,8 @@ class Protocol:
     Do not call the constructor directly — use the named constructors
     (:meth:`ocs`, :meth:`ideal_max`, :meth:`max`, :meth:`mean`,
     :meth:`concat`, :meth:`sum`, or :meth:`from_mode` for legacy
-    string-mode names).  ``p_miss`` is the only pytree leaf; all other
-    fields are static metadata.
+    string-mode names).  ``p_miss`` and ``online`` are the only pytree
+    leaves; all other fields are static metadata.
     """
 
     kind: str                       # one of KINDS
@@ -164,6 +171,8 @@ class Protocol:
     #   full 32-bit float payload otherwise)
     p_miss: Optional[jax.Array] = None   # traced leaf: () or (N,) miss prob;
     #   None = unbound (supply per call via with_p_miss)
+    online: Optional[jax.Array] = None   # traced leaf: (N,) bool worker-up
+    #   mask; None = all workers contend (bit-for-bit the all-True mask)
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -260,6 +269,11 @@ class Protocol:
         """Bind (or rebind) the traced miss probability, e.g. one vmap lane."""
         return dataclasses.replace(self, p_miss=p_miss)
 
+    def with_online(self, online) -> "Protocol":
+        """Bind (or rebind) the worker-up mask — dark workers leave the
+        contention entirely (``repro.faults`` dropout spans)."""
+        return dataclasses.replace(self, online=online)
+
     # -- the aggregation law ------------------------------------------------
 
     def aggregate(self, h: jax.Array, rng: Optional[jax.Array] = None
@@ -296,7 +310,10 @@ class Protocol:
                 "Protocol.ocs has no p_miss bound; construct with "
                 "Protocol.ocs(bits, p_miss=...) or bind via with_p_miss()")
         p = jnp.asarray(self.p_miss, jnp.float32)
-        return _ocs_pool(h, rng, p, self.bits, self.max_rounds, self.backend)
+        online = (jnp.ones((h.shape[0],), bool) if self.online is None
+                  else jnp.asarray(self.online, bool))
+        return _ocs_pool(h, rng, p, online, self.bits, self.max_rounds,
+                         self.backend)
 
     # -- derived protocol facts --------------------------------------------
 
@@ -334,6 +351,6 @@ class Protocol:
 
 jax.tree_util.register_dataclass(
     Protocol,
-    data_fields=["p_miss"],
+    data_fields=["p_miss", "online"],
     meta_fields=["kind", "bits", "tie_break", "max_rounds", "backend",
                  "n_channels", "payload_bits"])

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import faults
 from repro.protocol import Protocol
 
 _TRACE_COUNTS = {"tick": 0}
@@ -93,6 +94,7 @@ class ServeConfig:
     eos_id: int = 1
     greedy: bool = True
     protocol: Optional[Protocol] = None
+    fault: Optional[faults.FaultModel] = None
     clock: ChannelClock = dataclasses.field(default_factory=ChannelClock)
     seed: int = 0
 
@@ -105,6 +107,11 @@ class ServeConfig:
             raise ValueError(
                 "concat protocols cannot serve in-block fusion (the fused "
                 "width N*K does not match the residual width K)")
+        if self.fault is not None and self.protocol is None:
+            raise ValueError(
+                "fault injection needs a channel protocol (fault models "
+                "perturb the sensing channel; channel-free serving has "
+                "no channel to fault)")
 
 
 @dataclasses.dataclass
@@ -125,6 +132,12 @@ class Completion:
     analytic per-request uplink (``Protocol.comm_load`` per aggregate call
     x channel sites x channel-decoded tokens).  All three are 0 for
     channel-free serving.
+
+    Under fault injection (``ServeConfig.fault``) two degradation counters
+    ride along: ``degraded_tokens`` counts tokens this request emitted on
+    outage ticks (every worker offline — the degrade policy substituted a
+    filler instead of wedging the FIFO), and ``retry_ticks`` counts ticks
+    the whole batch stalled re-contending under the ``retry`` policy.
     """
 
     rid: int
@@ -133,6 +146,8 @@ class Completion:
     latency_ticks: int = 0
     channel_slots: int = 0
     uplink_bits: int = 0
+    degraded_tokens: int = 0
+    retry_ticks: int = 0
 
     def latency_us(self, clock: ChannelClock) -> float:
         return clock.latency_us(self.latency_ticks, self.channel_slots)
@@ -170,23 +185,67 @@ class ServeEngine:
         base_key = jax.random.PRNGKey(config.seed)
         sample_key = jax.random.fold_in(base_key, 0x5A)
 
-        def _tick(v, protocol, cur_token, positions, cache, tick):
+        def _tick(v, protocol, fault, fstate, cur_token, positions, cache,
+                  tick):
             _TRACE_COUNTS["tick"] += 1
             if protocol is None:
                 logits, new_cache = model.decode_step(v, cur_token,
                                                       positions, cache)
                 chan = None
-            else:
+            elif fault is None:
                 rng = jax.random.fold_in(base_key, tick)
                 logits, new_cache, chan = model.decode_step_channel(
                     v, cur_token, positions, cache, protocol, rng)
+            else:
+                # evolve the Gilbert-Elliott sensing chain + dropout spans
+                # one step per tick, then rebind the protocol's traced
+                # leaves -- fault parameters never recompile the tick
+                rng = jax.random.fold_in(base_key, tick)
+                new_bad, new_offline = faults.step_chains(fault, fstate, rng)
+                online = ~new_offline
+                proto_f = protocol.with_p_miss(
+                    faults.effective_p_miss(fault, new_bad)
+                ).with_online(online)
+                logits, new_cache, chan = model.decode_step_channel(
+                    v, cur_token, positions, cache, proto_f, rng)
             if config.greedy:
                 nxt = jnp.argmax(logits, -1).astype(jnp.int32)
             else:
                 nxt = jax.random.categorical(
                     jax.random.fold_in(sample_key, tick),
                     logits).astype(jnp.int32)
-            return nxt, positions + 1, new_cache, chan
+            if fault is None:
+                return nxt, positions + 1, new_cache, chan, fstate, None
+            # Degrade instead of wedging: on an outage tick (every worker
+            # offline) the pooled fusions resolved nothing, so the decode
+            # output is garbage -- the policy decides what the slots emit.
+            ok = jnp.any(online)
+            consec = jnp.where(ok, jnp.int32(0),
+                               fstate.consec + jnp.int32(1))
+            age = jnp.where(ok, jnp.int32(0), fstate.age + jnp.int32(1))
+            kind = fault.policy.kind                     # static meta
+            if kind == "retry":
+                retrying = (~ok) & (
+                    consec <= jnp.int32(fault.policy.retry_budget))
+            else:
+                retrying = jnp.bool_(False)
+            if kind == "stale":
+                deg_tok = cur_token[:, 0]     # repeat the last token
+            else:                             # zero_fill / exhausted retry
+                deg_tok = jnp.zeros_like(nxt)
+            nxt = jnp.where(ok, nxt, deg_tok)
+            # a retry tick makes no progress: token/positions/cache hold
+            # while the chain re-contends (airtime still billed via chan)
+            commit = ok | ~retrying
+            nxt = jnp.where(commit, nxt, cur_token[:, 0])
+            new_positions = jnp.where(commit, positions + 1, positions)
+            new_cache = jax.tree.map(
+                lambda nc, oc: jnp.where(commit, nc, oc), new_cache, cache)
+            new_fstate = dataclasses.replace(
+                fstate, bad=new_bad, offline=new_offline, age=age,
+                consec=consec)
+            flags = {"ok": ok, "retrying": retrying}
+            return nxt, new_positions, new_cache, chan, new_fstate, flags
 
         self._tick = jax.jit(_tick)
         self._prefill = jax.jit(
@@ -247,7 +306,7 @@ class ServeEngine:
     # -- main loop ----------------------------------------------------------
 
     def run(self, requests: List[Request],
-            protocol=_UNSET) -> Dict[int, Completion]:
+            protocol=_UNSET, fault=_UNSET) -> Dict[int, Completion]:
         """Serve ``requests`` to completion; returns ``{rid: Completion}``.
 
         Requests are admitted FIFO by ``arrival_tick`` (ties keep
@@ -256,9 +315,19 @@ class ServeEngine:
         empty decode ticks.  ``protocol`` overrides the config's (pass
         ``None`` for an explicitly channel-free run) — only the traced
         ``p_miss`` leaf differs between runs of equal structure, so the
-        compiled tick is reused.
+        compiled tick is reused.  ``fault`` likewise overrides
+        ``config.fault`` (a ``repro.faults.FaultModel``): bursty sensing
+        fades and worker outages then ride the decode tick, with outage
+        ticks *degrading* completions per the model's policy instead of
+        wedging the FIFO — every fault parameter is a traced leaf, so a
+        fault sweep reuses the compiled tick too.
         """
         proto = self.config.protocol if protocol is _UNSET else protocol
+        fm = self.config.fault if fault is _UNSET else fault
+        if fm is not None and proto is None:
+            raise ValueError("fault injection needs a channel protocol")
+        fstate = (faults.init_state(self._n_workers)
+                  if fm is not None else None)
         bits_per_tok = self._uplink_bits_per_tick(proto)
         self._reset()
         pending = sorted(requests, key=lambda r: r.arrival_tick)
@@ -280,13 +349,22 @@ class ServeEngine:
                 if not self.active[slot] and admissible:
                     self._insert(slot, admissible.pop(0))
             _DISPATCH_COUNTS["tick"] += 1
-            nxt, self.positions, self.cache, chan = self._tick(
-                self.values, proto, self.cur_token, self.positions,
-                self.cache, jnp.int32(tick))
+            nxt, self.positions, self.cache, chan, fstate, flags = \
+                self._tick(self.values, proto, fm, fstate, self.cur_token,
+                           self.positions, self.cache, jnp.int32(tick))
             self.cur_token = nxt[:, None]
             tick += 1
             if chan is not None:
                 total_slots += int(chan["contention_slots"])
+            if flags is not None and bool(flags["retrying"]):
+                # retry tick: the batch held position re-contending; bill
+                # the stall against every in-flight request and move on
+                for slot in range(self.B):
+                    if self.active[slot]:
+                        self.outputs[self.slot_req[slot].rid].retry_ticks \
+                            += 1
+                continue
+            degraded = flags is not None and not bool(flags["ok"])
             nxt_np = np.asarray(nxt)
             for slot in range(self.B):
                 if not self.active[slot]:
@@ -295,6 +373,8 @@ class ServeEngine:
                 out = self.outputs[req.rid]
                 out.tokens.append(int(nxt_np[slot]))
                 out.uplink_bits += bits_per_tok
+                if degraded:
+                    out.degraded_tokens += 1
                 self.budget[slot] -= 1
                 done = (int(nxt_np[slot]) == self.eos
                         or self.budget[slot] <= 0

@@ -125,6 +125,74 @@ def summarize_curves(curves) -> List[Record]:
     return records
 
 
+def summarize_fault_curves(fc) -> List[Record]:
+    """One record per (bits, fault-lane) cell of a fault-injection grid.
+
+    ``fc`` is a ``repro.sim.train_curves.FaultCurveResult``.  Accuracy rows
+    carry the degradation telemetry beside them — whole-run dropped-frame /
+    outage / retry-slot totals and the final staleness — so "how much worse
+    under bursts" and "how much airtime the policy spent" read off one row.
+    ``burst_len``/``gap_len`` are reported as the mean sojourns implied by
+    the lane's transition probabilities (``1/p_bg`` / ``1/p_gb``; ``inf``
+    for an i.i.d. lane, which never enters the bad state).
+    """
+    ccfg = fc.config
+    records: List[Record] = []
+    for bi, bits in enumerate(ccfg.bits):
+        fed = ccfg.protocol(bits).comm_load(ccfg.n_workers, ccfg.embed_dim)
+        for li, fm in enumerate(fc.fault_lanes):
+            p_bg = float(np.asarray(fm.p_bg))
+            p_gb = float(np.asarray(fm.p_gb))
+            burst_len = (1.0 / p_bg) if p_bg > 0 else float("inf")
+            gap_len = (1.0 / p_gb) if p_gb > 0 else float("inf")
+            records.append({
+                "curve": f"b{bits}_burst{burst_len:g}_"
+                         f"{fm.policy.kind}_l{li}",
+                "bits": bits,
+                "lane": li,
+                "policy": fm.policy.kind,
+                "retry_budget": fm.policy.retry_budget,
+                "burst_len": burst_len,
+                "gap_len": gap_len,
+                "p_miss_bad": float(np.asarray(fm.p_miss_bad)),
+                "p_miss_good": float(np.asarray(fm.p_miss_good)),
+                "p_drop": float(np.asarray(fm.p_drop)),
+                "p_recover": float(np.asarray(fm.p_recover)),
+                "n_workers": ccfg.n_workers,
+                "k_elems": ccfg.embed_dim,
+                "steps": ccfg.steps,
+                "acc": float(fc.acc[bi, li]),
+                "nll": float(fc.nll[bi, li]),
+                # degradation telemetry (whole-run totals)
+                "dropped_frames": int(fc.dropped_frames[bi, li]),
+                "outage_frames": int(fc.outage_frames[bi, li]),
+                "retry_slots": int(fc.retry_slots[bi, li]),
+                "stale_age_final": int(fc.stale_age[bi, -1, li]),
+                "stale_age_max": int(fc.stale_age[bi, :, li].max()),
+                "uplink_bits_fedocs": fed.uplink_bits,
+            })
+    return records
+
+
+def fault_curve_rows(records: List[Record], prefix: str = "fault_curves"
+                     ) -> List[str]:
+    """Benchmark-harness CSV rows for fault-injection curve records."""
+    rows = []
+    for rec in records:
+        derived = [
+            f"bits={rec['bits']}", f"policy={rec['policy']}",
+            f"burst={rec['burst_len']:g}",
+            f"p_bad={rec['p_miss_bad']:g}",
+            f"acc={rec['acc']:.4f}", f"nll={rec['nll']:.4f}",
+            f"dropped={rec['dropped_frames']}",
+            f"outages={rec['outage_frames']}",
+            f"retry_slots={rec['retry_slots']}",
+            f"stale_max={rec['stale_age_max']}",
+        ]
+        rows.append(f"{prefix}/{rec['curve']},0," + ";".join(derived))
+    return rows
+
+
 def summarize_dp_curves(dp) -> List[Record]:
     """One record per (bits, p_miss) cell of a 2-D compressed-comms run —
     THE unified communication report.

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -23,6 +23,52 @@ from repro.core.ocs import host_id_bits
 from repro.protocol import Protocol
 
 PMiss = Union[float, Tuple[float, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Hashable fault-process parameters of one scenario (plain floats —
+    the registry stays host-side; :meth:`model` builds the traced
+    ``repro.faults.FaultModel`` on demand).
+
+    ``burst_len``/``gap_len`` are the Gilbert–Elliott mean sojourns (frames
+    spent in the bad/good sensing state), ``p_miss_bad``/``p_miss_good``
+    the per-state miss probabilities, ``p_drop``/``p_recover`` the worker
+    dropout/recovery rates, and ``policy``/``retry_budget`` the degrade
+    policy applied when a frame resolves nothing.
+    """
+
+    burst_len: float = 4.0
+    gap_len: float = 16.0
+    p_miss_bad: float = 0.5
+    p_miss_good: float = 0.0
+    p_drop: float = 0.0
+    p_recover: float = 0.25
+    policy: str = "stale"
+    retry_budget: int = 0
+
+    def __post_init__(self):
+        if self.burst_len < 1.0 or self.gap_len < 1.0:
+            raise ValueError("burst_len/gap_len are mean sojourns >= 1")
+        for p in (self.p_miss_bad, self.p_miss_good, self.p_drop,
+                  self.p_recover):
+            if not (0.0 <= p <= 1.0):
+                raise ValueError(f"fault probabilities must be in [0, 1], "
+                                 f"got {p}")
+
+    def model(self):
+        """The traced ``repro.faults.FaultModel`` of this spec."""
+        from repro import faults
+        policy = (faults.DegradePolicy.retry(self.retry_budget)
+                  if self.policy == "retry"
+                  else faults.DegradePolicy(kind=self.policy))
+        fm = faults.FaultModel.burst(
+            burst_len=self.burst_len, gap_len=self.gap_len,
+            p_miss_bad=self.p_miss_bad, p_miss_good=self.p_miss_good,
+            policy=policy)
+        if self.p_drop > 0.0:
+            fm = fm.with_dropout(self.p_drop, self.p_recover)
+        return fm
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,6 +86,8 @@ class Scenario:
     bits: int = 16          # D, backoff quantization depth (paper Eq. 7)
     p_miss: PMiss = 0.0     # per-sub-slot carrier-sensing miss probability
     n_channels: int = 1     # orthogonal OFDMA channels (latency divider)
+    fault: Optional[FaultSpec] = None   # bursty/dropout fault process
+    #   (None = the plain i.i.d. p_miss channel; see repro.faults)
 
     def __post_init__(self):
         if self.n_workers < 1:
@@ -166,5 +214,14 @@ for _s in (
     # OFDMA striping: same transmissions, latency / n_channels
     Scenario("ofdma_wideband", n_workers=16, n_channels=8),
     Scenario("ofdma_noisy",    n_workers=64, bits=8, p_miss=0.02, n_channels=4),
+    # channel faults (repro.faults): bursty sensing fades and worker
+    # dropout spans with explicit degradation policies
+    Scenario("burst_cell",     n_workers=16,
+             fault=FaultSpec(burst_len=8.0, gap_len=32.0, p_miss_bad=0.5,
+                             p_miss_good=0.01, policy="stale")),
+    Scenario("worker_outage_cell", n_workers=16,
+             fault=FaultSpec(burst_len=4.0, gap_len=64.0, p_miss_bad=0.3,
+                             p_miss_good=0.0, p_drop=0.05, p_recover=0.25,
+                             policy="zero_fill")),
 ):
     register(_s)

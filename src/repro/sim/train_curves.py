@@ -76,7 +76,7 @@ from repro.train.train_step import make_train_step
 # compilation + dispatch observability (same contract as repro.sim.sweep)
 # ---------------------------------------------------------------------------
 
-_COUNTER_KEYS = ("fused", "sched", "fused_dp")
+_COUNTER_KEYS = ("fused", "sched", "fused_dp", "fused_faults")
 _TRACE_COUNTS: Dict[str, int] = {k: 0 for k in _COUNTER_KEYS}
 _DISPATCH_COUNTS: Dict[str, int] = {k: 0 for k in _COUNTER_KEYS}
 
@@ -251,6 +251,31 @@ class ScheduledCurveResult:
     bits_per_step: np.ndarray           # (steps,) chosen depth per round
     logged_steps: np.ndarray            # (n_logged,)
     params: object                      # lane-stacked trained params
+
+
+@dataclasses.dataclass
+class FaultCurveResult:
+    """Outcome of one fault-injection curve grid (``run_fault_curves``).
+
+    The lane axis L indexes ``fault_lanes`` — one ``repro.faults.FaultModel``
+    per lane, all sharing one (static) ``DegradePolicy`` so the whole grid
+    compiles once.  Degradation telemetry rides beside accuracy:
+    ``stale_age`` is the staleness (frames since the last resolved frame) at
+    the logged steps, and the ``*_frames``/``retry_slots`` arrays are whole-
+    run totals billed by ``FaultAccounting``.
+    """
+
+    config: CurveConfig
+    fault_lanes: Sequence               # the FaultModel lanes, as given
+    acc: np.ndarray                     # (n_bits, L) channel-in-the-loop
+    nll: np.ndarray                     # (n_bits, L)
+    loss_history: np.ndarray            # (n_bits, n_logged, L)
+    stale_age: np.ndarray               # (n_bits, n_logged, L) int64
+    dropped_frames: np.ndarray          # (n_bits, L) int64 run totals
+    outage_frames: np.ndarray           # (n_bits, L) int64 run totals
+    retry_slots: np.ndarray             # (n_bits, L) int64 run totals
+    logged_steps: np.ndarray            # (n_logged,)
+    params: List                        # per-bits lane-stacked trained params
 
 
 @dataclasses.dataclass
@@ -556,6 +581,205 @@ def run_curves(ccfg: Optional[CurveConfig] = None, *,
     """
     return _run_curves_scan(ccfg if ccfg is not None else CurveConfig(),
                             n_devices)
+
+
+# ---------------------------------------------------------------------------
+# the fault engine: FaultModel lanes inside the fused scan, one dispatch
+# ---------------------------------------------------------------------------
+
+def _fault_stream_keys(ccfg: CurveConfig, bits: int, lanes: int):
+    """Same key-derivation formula as :func:`_stream_keys`, lane count from
+    the fault grid: with ``lanes == len(ccfg.p_miss)`` the streams are
+    bitwise identical, which is what makes an ``FaultModel.iid(p)`` lane
+    reproduce the corresponding :func:`run_curves` noisy lane bit for bit
+    (property-tested in ``tests/test_faults.py``)."""
+    base = jax.random.PRNGKey(ccfg.seed + 7919 * bits)
+    k_data, k_noise = jax.random.split(base)
+    lane_keys = jax.random.split(k_noise, lanes)
+    return k_data, lane_keys
+
+
+def _make_fault_steps(ccfg: CurveConfig, bits: int):
+    """Per-bits config, optimizer and fault-aware train step.
+
+    The channel state is ``chan = (rng, protocol, fault, fault_state)`` —
+    the protocol template carries only static contention metadata (its
+    ``p_miss``/``online`` leaves stay ``None``; the fault model supersedes
+    them), and the evolved ``FaultState`` comes back through the metrics
+    (``metrics["fault_state"]``) to be re-carried by the engine's scan.
+    """
+    vcfg_n = _vertical_config(ccfg, bits, noisy=True)
+
+    def fault_loss(values, batch, chan, _cfg=vcfg_n):
+        bviews, blabels = batch
+        rng, proto, fm, fs = chan
+        return vertical.loss_fn(_cfg, values, bviews, blabels, rng=rng,
+                                protocol=proto, fault=fm, fault_state=fs)
+
+    warmup = max(1, ccfg.steps // 10)
+    opt = optimizers.adamw(
+        schedules.linear_warmup_cosine(ccfg.lr, warmup, ccfg.steps),
+        weight_decay=0.01)
+    step_f = make_train_step(fault_loss, opt, with_rng=True)
+    return vcfg_n, opt, step_f
+
+
+def _make_fused_faults(ccfg: CurveConfig, per_bits, n_logged: int):
+    """Build the jitted fault engine for one ``bits`` value.
+
+    Same one-dispatch shape as :func:`_make_fused`: the whole ``steps``
+    loop is one ``lax.scan``, the fault lanes are vmapped over the stacked
+    ``FaultModel`` leaves and the carried per-lane ``FaultState`` (Markov
+    burst/dropout chains persist across rounds *through the scan carry*),
+    and the degradation telemetry accumulates on device beside the loss
+    history.  Evaluation runs channel-in-the-loop under the final chain
+    state with a fresh eval-shaped stale cache.
+    """
+    from repro import faults
+
+    vcfg_n, _opt, step_f = per_bits
+    proto_tmpl = vcfg_n.resolve_protocol()
+    steps, batch, n_train = ccfg.steps, ccfg.batch, ccfg.n_train
+
+    def fault_lanes_fn(params0, opt0, lane_keys, fm, fs0, k_data, views,
+                       labels, vviews, vlabels, slots):
+        lanes = lane_keys.shape[0]
+        vals, opts = _lane_stack(params0, lanes), _lane_stack(opt0, lanes)
+        hist = jnp.zeros((lanes, n_logged), jnp.float32)
+        stale_hist = jnp.zeros((lanes, n_logged), jnp.int32)
+        drop_tot = jnp.zeros((lanes,), jnp.int32)
+        outage_tot = jnp.zeros((lanes,), jnp.int32)
+        retry_tot = jnp.zeros((lanes,), jnp.int32)
+
+        def body(carry, x):
+            (vals, opts, fs, hist, stale_hist, drop_tot, outage_tot,
+             retry_tot) = carry
+            step, slot = x
+            idx = _batch_indices(k_data, step, batch, n_train)
+            b = (views[:, idx], labels[idx])
+            chan = (_fold_lanes(lane_keys, step), proto_tmpl, fm, fs)
+            vals, opts, met = jax.vmap(
+                step_f, in_axes=(0, 0, None, (0, None, 0, 0)))(
+                    vals, opts, b, chan)
+            met = dict(met)
+            fs = met.pop("fault_state")
+            hist = hist.at[:, slot].set(met["loss_mean"], mode="drop")
+            stale_hist = stale_hist.at[:, slot].set(met["fault_stale_age"],
+                                                    mode="drop")
+            drop_tot = drop_tot + met["fault_dropped_frames"]
+            outage_tot = outage_tot + met["fault_outage"]
+            retry_tot = retry_tot + met["fault_retry_slots"]
+            return (vals, opts, fs, hist, stale_hist, drop_tot, outage_tot,
+                    retry_tot), None
+
+        (vals, _opts, fs, hist, stale_hist, drop_tot, outage_tot,
+         retry_tot), _ = jax.lax.scan(
+            body, (vals, opts, fs0, hist, stale_hist, drop_tot, outage_tot,
+                   retry_tot),
+            (jnp.arange(steps, dtype=jnp.int32), slots))
+
+        # evaluate under the final chain state (bursts/outages carry over)
+        # with a fresh eval-batch-shaped stale cache
+        n_val = vviews.shape[1]
+        eval_fs = faults.FaultState(
+            bad=fs.bad, offline=fs.offline,
+            stale=jnp.zeros((lanes, n_val, ccfg.embed_dim), jnp.float32),
+            age=jnp.zeros((lanes,), jnp.int32),
+            consec=jnp.zeros((lanes,), jnp.int32))
+        met = jax.vmap(
+            lambda v, r, fm_l, fs_l: vertical.loss_fn(
+                vcfg_n, v, vviews, vlabels, rng=r, protocol=proto_tmpl,
+                fault=fm_l, fault_state=fs_l)[1],
+            in_axes=(0, 0, 0, 0))(
+                vals, _fold_lanes(lane_keys, steps), fm, eval_fs)
+        return (vals, hist, stale_hist, drop_tot, outage_tot, retry_tot,
+                met["acc"], met["nll"])
+
+    def fused(params0, opt0, lane_keys, fm, fs0, k_data, views, labels,
+              vviews, vlabels, slots):
+        _TRACE_COUNTS["fused_faults"] += 1
+        return fault_lanes_fn(params0, opt0, lane_keys, fm, fs0, k_data,
+                              views, labels, vviews, vlabels, slots)
+
+    return jax.jit(fused)
+
+
+def run_fault_curves(ccfg: CurveConfig, fault_lanes: Sequence
+                     ) -> FaultCurveResult:
+    """Train a grid of channel-fault lanes through the fused engine.
+
+    ``fault_lanes`` is a sequence of ``repro.faults.FaultModel`` values —
+    e.g. a burst-length sweep — all sharing one ``DegradePolicy`` (the
+    policy is static metadata; mixed policies would need one compile each,
+    so they are rejected — run one grid per policy instead).  Every fault
+    parameter is a traced leaf: the whole grid trains as vmap lanes of ONE
+    compiled dispatch per ``bits`` value (``trace_counts()["fused_faults"]``
+    stays at one per bits no matter how many lanes), the same contract as
+    :func:`run_curves`.
+
+    Stream derivation matches :func:`run_curves` (see
+    :func:`_fault_stream_keys`): with ``len(fault_lanes) ==
+    len(ccfg.p_miss)``, an ``FaultModel.iid(p)`` lane trains bit-for-bit
+    the ``run_curves`` noisy lane of the same ``p``.  Runs single-device
+    (vmap lanes; lane sharding can follow the ``_make_fused`` pattern when
+    fault grids outgrow one device).
+    """
+    from repro import faults
+
+    lanes = len(fault_lanes)
+    if lanes == 0:
+        raise ValueError("fault_lanes needs at least one FaultModel")
+    policies = {fm.policy for fm in fault_lanes}
+    if len(policies) != 1:
+        raise ValueError(
+            f"all fault lanes must share one DegradePolicy (static "
+            f"metadata — one compile per policy), got {policies}")
+    fm_stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *fault_lanes)
+
+    views_j, labels_j, vv_j, vl_j = _make_data(ccfg)
+    logged = ccfg.logged_steps()
+    slots = jnp.asarray(_log_slots(ccfg, logged))
+
+    acc = np.zeros((len(ccfg.bits), lanes), np.float64)
+    nll = np.zeros_like(acc)
+    hist = np.zeros((len(ccfg.bits), len(logged), lanes), np.float64)
+    stale = np.zeros((len(ccfg.bits), len(logged), lanes), np.int64)
+    dropped = np.zeros((len(ccfg.bits), lanes), np.int64)
+    outages = np.zeros_like(dropped)
+    retries = np.zeros_like(dropped)
+    params_out = []
+
+    for bi, bits in enumerate(ccfg.bits):
+        per_bits = _make_fault_steps(ccfg, bits)
+        vcfg_n, opt = per_bits[0], per_bits[1]
+        k_data, lane_keys = _fault_stream_keys(ccfg, bits, lanes)
+
+        params0 = vertical.init(vcfg_n, jax.random.PRNGKey(ccfg.seed))
+        opt0 = opt.init(params0)
+        fs0 = _lane_stack(
+            faults.init_state(ccfg.n_workers,
+                              (ccfg.batch, ccfg.embed_dim)), lanes)
+
+        fused = _make_fused_faults(ccfg, per_bits, len(logged))
+        _DISPATCH_COUNTS["fused_faults"] += 1
+        (vals, hist_b, stale_b, drop_b, out_b, retry_b, acc_b,
+         nll_b) = fused(params0, opt0, jnp.asarray(lane_keys), fm_stacked,
+                        fs0, k_data, views_j, labels_j, vv_j, vl_j, slots)
+
+        acc[bi] = np.asarray(acc_b)
+        nll[bi] = np.asarray(nll_b)
+        hist[bi] = np.asarray(hist_b).T
+        stale[bi] = np.asarray(stale_b, np.int64).T
+        dropped[bi] = np.asarray(drop_b, np.int64)
+        outages[bi] = np.asarray(out_b, np.int64)
+        retries[bi] = np.asarray(retry_b, np.int64)
+        params_out.append(vals)
+
+    return FaultCurveResult(
+        config=ccfg, fault_lanes=tuple(fault_lanes),
+        acc=acc, nll=nll, loss_history=hist, stale_age=stale,
+        dropped_frames=dropped, outage_frames=outages, retry_slots=retries,
+        logged_steps=np.asarray(logged), params=params_out)
 
 
 # ---------------------------------------------------------------------------

@@ -46,6 +46,19 @@ class TrainerConfig:
     # loss_fn takes a third rng argument and each step receives a key derived
     # as fold_in(PRNGKey(seed), step) — resume replays the exact noise stream.
     channel_rng_seed: Optional[int] = None
+    # auxiliary carried state (e.g. a repro.faults.FaultState: burst-chain
+    # states, dropout masks, the stale-winner cache).  When set, loss_fn's
+    # rng argument becomes the pair ``(key, aux)`` and its metrics must
+    # return the evolved carry under ``metrics["aux_state"]``; the carry is
+    # checkpointed and restored alongside params/opt state.  Requires
+    # channel_rng_seed and microbatches == 1 (the microbatch rng-folding
+    # machinery treats integer leaves as PRNG keys and would corrupt the
+    # carry's int32/bool leaves).
+    aux_state: Optional[Any] = None
+    # save a checkpoint immediately when the step-time watchdog flags a
+    # stall, so a subsequent relaunch resumes from right before the stall
+    # instead of the last periodic checkpoint
+    ckpt_on_stall: bool = False
     # the watchdog's clock, injectable so straggler detection can be driven
     # deterministically in tests (the loop itself never reads wall time)
     clock: Callable[[], float] = time.monotonic
@@ -59,6 +72,7 @@ class TrainResult:
     substituted_steps: List[int]
     straggler_flags: List[int]
     final_step: int
+    aux_state: Any = None        # evolved TrainerConfig.aux_state carry
 
 
 def train(loss_fn: Callable, init_values, optimizer, data_fn: Callable,
@@ -73,16 +87,40 @@ def train(loss_fn: Callable, init_values, optimizer, data_fn: Callable,
     values = jax.tree.map(lambda x: jnp.array(x, copy=True), init_values)
     opt_state = optimizer.init(values)
     err = grad_compression.init_error(values)
+    aux = (jax.tree.map(lambda x: jnp.array(x, copy=True), tcfg.aux_state)
+           if tcfg.aux_state is not None else None)
+    if aux is not None:
+        if tcfg.channel_rng_seed is None:
+            raise ValueError("aux_state rides the per-step rng argument; "
+                             "set channel_rng_seed")
+        if tcfg.microbatches != 1:
+            raise ValueError(
+                "aux_state requires microbatches == 1: the microbatch "
+                "rng-folding treats integer leaves as PRNG keys and would "
+                "corrupt the carry's int32/bool leaves")
     start_step = 0
+
+    def carry_state():
+        """The FULL training carry — everything resume needs to continue
+        bitwise-identically to an uninterrupted run: params, opt state,
+        the error-feedback memory (compressed steps), and any auxiliary
+        fault/stale caches."""
+        state = {"values": values, "opt": opt_state}
+        if tcfg.compress_k is not None:
+            state["err"] = err
+        if aux is not None:
+            state["aux"] = aux
+        return state
 
     if tcfg.ckpt_dir and tcfg.resume:
         step = checkpointer.latest_step(tcfg.ckpt_dir)
         if step is not None:
-            state_template = {"values": values, "opt": opt_state}
             restored, step, _ = checkpointer.restore(
-                tcfg.ckpt_dir, step, template=state_template,
+                tcfg.ckpt_dir, step, template=carry_state(),
                 shardings=shardings)
             values, opt_state = restored["values"], restored["opt"]
+            err = restored.get("err", err)
+            aux = restored.get("aux", aux)
             start_step = step
 
     with_rng = tcfg.channel_rng_seed is not None
@@ -111,15 +149,24 @@ def train(loss_fn: Callable, init_values, optimizer, data_fn: Callable,
             batch = data_fn(step)
         args = (values, opt_state, batch)
         if with_rng:
-            args += (jax.random.fold_in(base_rng, step),)
+            key = jax.random.fold_in(base_rng, step)
+            args += ((key, aux) if aux is not None else key,)
         if tcfg.compress_k is not None:
             values, opt_state, err, metrics = step_fn(*args, err)
         else:
             values, opt_state, metrics = step_fn(*args)
+        if aux is not None:
+            metrics = dict(metrics)
+            aux = metrics.pop("aux_state")
         dt = tcfg.clock() - t0
         if durations and dt > tcfg.watchdog_factor * float(
                 np.median(durations)):
             flagged.append(step)
+            if tcfg.ckpt_on_stall and tcfg.ckpt_dir:
+                # stall detected: persist the full carry NOW so a relaunch
+                # resumes from right before the stall, not the last
+                # periodic checkpoint
+                checkpointer.save(tcfg.ckpt_dir, step + 1, carry_state())
         durations.append(dt)
         if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
             row = {k: float(v) for k, v in metrics.items()
@@ -129,12 +176,10 @@ def train(loss_fn: Callable, init_values, optimizer, data_fn: Callable,
             history.append(row)
         if (tcfg.ckpt_dir and tcfg.ckpt_every
                 and (step + 1) % tcfg.ckpt_every == 0):
-            checkpointer.save(tcfg.ckpt_dir, step + 1,
-                              {"values": values, "opt": opt_state})
+            checkpointer.save(tcfg.ckpt_dir, step + 1, carry_state())
 
     if tcfg.ckpt_dir:
-        checkpointer.save(tcfg.ckpt_dir, tcfg.steps,
-                          {"values": values, "opt": opt_state})
+        checkpointer.save(tcfg.ckpt_dir, tcfg.steps, carry_state())
     return TrainResult(values=values, opt_state=opt_state, history=history,
                        substituted_steps=substituted, straggler_flags=flagged,
-                       final_step=tcfg.steps)
+                       final_step=tcfg.steps, aux_state=aux)

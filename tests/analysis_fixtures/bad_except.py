@@ -1,0 +1,21 @@
+"""Seeded silent-except violations (never imported; the lint walks the AST).
+
+Engine code must not swallow failures: a bare ``except:`` hides everything
+including ``KeyboardInterrupt``, and a handler whose body is only
+``pass``/``...`` silently discards the error.  Outside engine dirs both are
+legal (benchmarks and scripts may continue past best-effort failures).
+"""
+
+
+def bad_bare(path):
+    try:
+        return open(path).read()
+    except:                      # noqa: E722  (the seeded violation)
+        pass
+
+
+def bad_swallow(x):
+    try:
+        return 1 / x
+    except ValueError:
+        ...

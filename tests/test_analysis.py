@@ -199,6 +199,15 @@ def test_fixture_nondeterminism_engine_only():
     assert _lint_fixture("bad_nondet.py", engine=False) == []
 
 
+def test_fixture_silent_except_engine_only():
+    fs = _only_rule(_lint_fixture("bad_except.py", engine=True),
+                    R.SILENT_EXCEPT)
+    assert {f.detail for f in fs} == {"bare", "swallow:ValueError"}
+    assert all(f.line for f in fs)
+    # scripts/benchmarks may continue past best-effort failures
+    assert _lint_fixture("bad_except.py", engine=False) == []
+
+
 def test_seeded_missing_kernel_ref(tmp_path):
     pkg = tmp_path / "src/repro/kernels/fake_op"
     pkg.mkdir(parents=True)

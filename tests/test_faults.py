@@ -1,0 +1,392 @@
+"""Fault-injection layer (ISSUE 9 tentpole): bursty channels, worker
+dropout, graceful degradation.
+
+Contracts under test:
+  * the pytree contract: every probability of a ``FaultModel`` is a traced
+    ``float32`` leaf, the ``DegradePolicy`` is static metadata, and a jitted
+    ``faults.aggregate`` serves perturbed transition/miss/dropout
+    probabilities AND evolved chain state with ZERO recompiles;
+  * the reduction witness: ``FaultModel.iid(p)`` reproduces the plain
+    ``Protocol.aggregate`` path bit for bit — forward, vjp and the shared
+    accounting fields — on BOTH contention backends, and iid lanes of the
+    fused fault engine retrain the ``run_curves`` noisy lanes bitwise;
+  * degrade-policy semantics on a total outage: ``zero_fill`` emits zeros,
+    ``stale`` replays the carried cache (and routes the pooled cotangent to
+    it — degraded steps never invent gradient signal), ``retry`` spends its
+    bounded budget and bills ``frame_slots + 2**attempt`` per retry;
+  * chain mechanics: burst persistence, dropout/recovery evolution;
+  * the full-training-carry checkpoint: resume-equals-uninterrupted
+    BITWISE with error-feedback memory and the fault carry in the state,
+    and ``ckpt_on_stall`` persists the carry the moment the watchdog fires.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import random_floats
+from repro import faults
+from repro.core import fedocs, ocs, vertical
+from repro.faults import DegradePolicy, FaultModel, FaultState
+from repro.optim import optimizers, schedules
+from repro.protocol import Protocol
+from repro.sim import train_curves as tc
+from repro.sim.scenarios import get as get_scenario
+from repro.train import trainer
+from repro.train.trainer import TrainerConfig
+
+N = 4
+H = jnp.asarray(random_floats(3, (N, 9, 3), specials=False))
+KEY = jax.random.PRNGKey(7)
+PROTO = Protocol.ocs(8, p_miss=jnp.float32(0.3))
+
+
+def _state(stale=None):
+    s = faults.init_state(N, H.shape[1:])
+    return s if stale is None else dataclasses.replace(s, stale=stale)
+
+
+# ---------------------------------------------------------------------------
+# pytree contract
+# ---------------------------------------------------------------------------
+
+def test_fault_model_leaves_and_static_policy():
+    fm = FaultModel.gilbert_elliott(
+        p_gb=0.1, p_bg=0.25, p_miss_bad=0.5,
+        policy=DegradePolicy.stale()).with_dropout(0.05)
+    leaves, treedef = jax.tree_util.tree_flatten(fm)
+    assert len(leaves) == 6
+    assert all(np.asarray(x).dtype == np.float32 for x in leaves)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert back.policy == DegradePolicy.stale()
+    # the policy survives tree_map untouched (static metadata)
+    mapped = jax.tree.map(lambda x: x * 0, fm)
+    assert mapped.policy.kind == "stale"
+    assert float(mapped.p_bg) == 0.0
+
+
+def test_constructors_and_validation():
+    fm = FaultModel.burst(burst_len=4.0, gap_len=8.0)
+    assert float(fm.p_bg) == pytest.approx(0.25)
+    assert float(fm.p_gb) == pytest.approx(0.125)
+    with pytest.raises(ValueError, match="mean sojourns"):
+        FaultModel.burst(burst_len=0.5, gap_len=8.0)
+    with pytest.raises(ValueError, match="retry_budget >= 1"):
+        DegradePolicy(kind="retry")
+    with pytest.raises(ValueError, match="only meaningful"):
+        DegradePolicy(kind="zero_fill", retry_budget=2)
+    with pytest.raises(ValueError, match="unknown degrade policy"):
+        DegradePolicy(kind="panic")
+    with pytest.raises(ValueError, match="needs an OCS protocol"):
+        faults.aggregate(Protocol.mean(), FaultModel.iid(0.1), _state(),
+                         H, KEY)
+
+
+# ---------------------------------------------------------------------------
+# the reduction witness: iid == the plain Protocol path, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ocs.NOISY_BACKENDS)
+def test_iid_reduces_to_protocol_path_bitwise(backend):
+    """Gilbert–Elliott with identical good/bad states and no dropout is
+    bit-for-bit the i.i.d. ``p_miss`` channel: forward, vjp AND the shared
+    accounting fields, on both contention backends."""
+    proto = Protocol.ocs(8, p_miss=jnp.float32(0.3), backend=backend)
+    fm = FaultModel.iid(0.3)
+    pooled_f, new_state, facct = faults.aggregate(proto, fm, _state(), H, KEY)
+    pooled_p, acct = proto.aggregate(H, KEY)
+    assert np.array_equal(np.asarray(pooled_f), np.asarray(pooled_p))
+    g_f = jax.grad(lambda x: jnp.sum(
+        faults.aggregate(proto, fm, _state(), x, KEY)[0]))(H)
+    g_p = jax.grad(lambda x: jnp.sum(proto.aggregate(x, KEY)[0]))(H)
+    assert np.array_equal(np.asarray(g_f), np.asarray(g_p))
+    for f in ("rounds", "collisions", "contention_slots", "correct_frac"):
+        assert np.array_equal(np.asarray(getattr(facct, f)),
+                              np.asarray(getattr(acct, f))), f
+    # a resolved frame: no degradation billed, cache holds this frame
+    assert int(facct.dropped_frames) == 0 and int(facct.outage) == 0
+    assert int(facct.retry_slots) == 0 and int(facct.stale_age) == 0
+    assert np.array_equal(np.asarray(new_state.stale), np.asarray(pooled_p))
+    assert not bool(new_state.bad.any()) and not bool(new_state.offline.any())
+
+
+TINY = tc.CurveConfig(bits=(8,), p_miss=(0.0, 0.05), steps=6, batch=16,
+                      n_train=96, n_val=48, hw=8, encoder_dims=(8,),
+                      embed_dim=8, head_dims=(8,), log_every=3)
+
+
+def test_fault_engine_iid_lanes_retrain_run_curves_bitwise():
+    """Engine-level witness: iid fault lanes inside the fused fault engine
+    train the exact ``run_curves`` noisy-lane trajectories — and the whole
+    fault grid is ONE trace per bits value."""
+    plain = tc.run_curves(TINY, n_devices=1)
+    tc.reset_trace_counts()
+    fc = tc.run_fault_curves(TINY, [FaultModel.iid(p) for p in TINY.p_miss])
+    assert tc.trace_counts()["fused_faults"] == 1
+    assert np.array_equal(fc.acc, plain.acc)
+    assert np.array_equal(fc.nll, plain.nll)
+    assert np.array_equal(fc.loss_history, plain.loss_history)
+    for x, y in zip(jax.tree.leaves(fc.params[0]),
+                    jax.tree.leaves(plain.noisy_params[0])):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    # a healthy channel degrades nothing
+    assert (fc.dropped_frames == 0).all() and (fc.outage_frames == 0).all()
+    assert (fc.stale_age == 0).all() and (fc.retry_slots == 0).all()
+
+
+def test_fault_engine_rejects_mixed_policies_and_empty_grids():
+    with pytest.raises(ValueError, match="one DegradePolicy"):
+        tc.run_fault_curves(TINY, [FaultModel.iid(0.0),
+                                   FaultModel.iid(0.1,
+                                                  policy=DegradePolicy.stale())])
+    with pytest.raises(ValueError, match="at least one"):
+        tc.run_fault_curves(TINY, [])
+
+
+# ---------------------------------------------------------------------------
+# chain mechanics
+# ---------------------------------------------------------------------------
+
+def test_chain_evolution_extremes():
+    fm = FaultModel.gilbert_elliott(p_gb=1.0, p_bg=0.0).with_dropout(1.0, 0.0)
+    bad, off = faults.step_chains(fm, _state(), KEY)
+    assert bool(bad.all()) and bool(off.all())     # everyone fades + drops
+    st = dataclasses.replace(_state(), bad=bad, offline=off)
+    bad2, off2 = faults.step_chains(fm, st, jax.random.fold_in(KEY, 1))
+    assert bool(bad2.all()) and bool(off2.all())   # ...and stays (p_bg=0)
+    # full recovery path
+    fm_r = FaultModel.iid(0.0).with_dropout(0.0, 1.0)
+    _, off3 = faults.step_chains(fm_r, st, KEY)
+    assert not bool(off3.any())
+
+
+def test_effective_p_miss_follows_chain_state():
+    fm = FaultModel.gilbert_elliott(p_gb=0.1, p_bg=0.1, p_miss_good=0.05,
+                                    p_miss_bad=0.7)
+    bad = jnp.asarray([True, False, True, False])
+    p = faults.effective_p_miss(fm, bad)
+    assert np.allclose(np.asarray(p), [0.7, 0.05, 0.7, 0.05])
+
+
+# ---------------------------------------------------------------------------
+# degrade policies on a total outage
+# ---------------------------------------------------------------------------
+
+def _outage_model(policy):
+    # every worker drops this frame and none recovers: a guaranteed outage
+    return FaultModel.iid(0.0, policy=policy).with_dropout(1.0, 0.0)
+
+
+def test_zero_fill_emits_zeros_and_no_gradient():
+    fm = _outage_model(DegradePolicy.zero_fill())
+    pooled, ns, acct = faults.aggregate(PROTO, fm, _state(), H, KEY)
+    assert np.array_equal(np.asarray(pooled), np.zeros(H.shape[1:]))
+    assert int(acct.outage) == 1
+    assert int(acct.dropped_frames) == int(np.prod(H.shape[1:]))
+    assert float(acct.correct_frac) == 0.0
+    assert int(acct.offline_workers) == N
+    assert int(ns.age) == 1 and int(ns.consec) == 1
+    g = jax.grad(lambda x: jnp.sum(
+        faults.aggregate(PROTO, fm, _state(), x, KEY)[0]))(H)
+    assert np.array_equal(np.asarray(g), np.zeros(H.shape))
+
+
+def test_stale_replays_cache_and_routes_gradient_to_it():
+    cache = jnp.asarray(random_floats(11, H.shape[1:], specials=False))
+    fm = _outage_model(DegradePolicy.stale())
+    pooled, ns, acct = faults.aggregate(PROTO, fm, _state(cache), H, KEY)
+    assert np.array_equal(np.asarray(pooled), np.asarray(cache))
+    assert np.array_equal(np.asarray(ns.stale), np.asarray(cache))
+    assert int(acct.stale_age) == 1
+    # the pooled cotangent reaches the CACHE, never h: degraded steps do
+    # not invent gradient signal (paper Eq. 5-6 extended)
+    g_cache = jax.grad(lambda s: jnp.sum(faults.aggregate(
+        PROTO, fm, _state(s), H, KEY)[0]))(cache)
+    assert np.array_equal(np.asarray(g_cache), np.ones(H.shape[1:]))
+    g_h = jax.grad(lambda x: jnp.sum(faults.aggregate(
+        PROTO, fm, _state(cache), x, KEY)[0]))(H)
+    assert np.array_equal(np.asarray(g_h), np.zeros(H.shape))
+
+
+def test_retry_bills_budget_with_backoff_on_persistent_outage():
+    budget = 3
+    fm = _outage_model(DegradePolicy.retry(budget))
+    pooled, ns, acct = faults.aggregate(PROTO, fm, _state(), H, KEY)
+    frame_slots = (PROTO.bits + ocs.host_id_bits(N)) * int(
+        np.prod(H.shape[1:]))
+    # nobody recovers (p_recover=0): every attempt bills a full frame plus
+    # the exponential backoff wait, then the frame degrades to zeros
+    expect = budget * frame_slots + sum(2 ** a for a in range(budget))
+    assert int(acct.retry_slots) == expect
+    assert int(acct.contention_slots) >= expect
+    assert int(acct.outage) == 1
+    assert np.array_equal(np.asarray(pooled), np.zeros(H.shape[1:]))
+
+
+def test_retry_recovers_and_resolves_the_frame():
+    # everyone drops, but recovery is certain: the first retry attempt
+    # brings the cell back and the frame resolves ideally (p_miss=0)
+    fm = FaultModel.iid(0.0, policy=DegradePolicy.retry(2)).with_dropout(
+        1.0, 1.0)
+    pooled, ns, acct = faults.aggregate(PROTO, fm, _state(), H, KEY)
+    frame_slots = (PROTO.bits + ocs.host_id_bits(N)) * int(
+        np.prod(H.shape[1:]))
+    assert int(acct.retry_slots) == frame_slots + 1    # one attempt, 2**0
+    assert int(acct.outage) == 0 and int(ns.consec) == 0
+    assert np.array_equal(
+        np.asarray(pooled),
+        np.asarray(fedocs.maxpool_quantized(H, PROTO.bits, "first")))
+
+
+# ---------------------------------------------------------------------------
+# zero recompiles across fault parameters (the trace contract, executed)
+# ---------------------------------------------------------------------------
+
+def test_jit_zero_recompiles_across_fault_params_and_state():
+    traces = []
+
+    @jax.jit
+    def f(proto, fm, fs, h, key):
+        traces.append(1)
+        pooled, ns, acct = faults.aggregate(proto, fm, fs, h, key)
+        return pooled, ns, acct.outage
+
+    base = Protocol.ocs(8)
+    fs = _state()
+    fm = None
+    for p in (0.0, 0.05, 0.4):
+        fm = FaultModel.gilbert_elliott(
+            p_gb=p, p_bg=0.1 + p, p_miss_good=p,
+            p_miss_bad=0.5).with_dropout(p, 1.0 - p)
+        _, fs, _ = f(base, fm, fs, H, jax.random.fold_in(KEY, int(p * 100)))
+    assert len(traces) == 1       # perturbed probs + evolved state: one trace
+    # a policy change IS a new program (static metadata)
+    f(base, fm.with_policy(DegradePolicy.stale()), fs, H, KEY)
+    assert len(traces) == 2
+
+
+# ---------------------------------------------------------------------------
+# scenario registry entries
+# ---------------------------------------------------------------------------
+
+def test_fault_scenarios_registered_and_buildable():
+    for name in ("burst_cell", "worker_outage_cell"):
+        s = get_scenario(name)
+        assert s.fault is not None
+        fm = s.fault.model()
+        assert isinstance(fm, FaultModel)
+        assert float(fm.p_bg) == pytest.approx(1.0 / s.fault.burst_len)
+    assert float(get_scenario("worker_outage_cell").fault.p_drop) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# the full training carry: checkpoint round-trip + stall checkpointing
+# ---------------------------------------------------------------------------
+
+VCFG = vertical.VerticalConfig(
+    n_workers=3, input_dim=6, encoder_dims=(8,), embed_dim=4, head_dims=(8,),
+    output_dim=3, task="classification",
+    aggregation=Protocol.ocs(8, p_miss=0.0, max_rounds=2))
+FM_TRAIN = FaultModel.burst(
+    burst_len=3.0, gap_len=3.0, p_miss_bad=0.6, p_miss_good=0.0,
+    policy=DegradePolicy.stale()).with_dropout(0.3, 0.5)
+BATCH = 16
+
+
+def _fault_loss(values, batch, rng_aux):
+    key, fs = rng_aux
+    views, labels = batch
+    loss, metrics = vertical.loss_fn(VCFG, values, views, labels, rng=key,
+                                     fault=FM_TRAIN, fault_state=fs)
+    metrics = dict(metrics)
+    metrics["aux_state"] = metrics.pop("fault_state")
+    return loss, metrics
+
+
+def _data(step):
+    k = jax.random.PRNGKey(1000 + step)
+    views = jax.random.normal(k, (VCFG.n_workers, BATCH, VCFG.input_dim),
+                              jnp.float32)
+    labels = jax.random.randint(jax.random.fold_in(k, 1), (BATCH,), 0,
+                                VCFG.output_dim)
+    return views, labels
+
+
+def _aux0():
+    return faults.init_state(VCFG.n_workers, (BATCH, VCFG.embed_dim))
+
+
+def _tcfg(**kw):
+    kw.setdefault("log_every", 4)
+    kw.setdefault("channel_rng_seed", 7)
+    kw.setdefault("aux_state", _aux0())
+    kw.setdefault("compress_k", 0.5)
+    return TrainerConfig(**kw)
+
+
+def _params():
+    return vertical.init(VCFG, jax.random.PRNGKey(0))
+
+
+def _opt(steps):
+    return optimizers.adamw(schedules.linear_warmup_cosine(1e-2, 2, steps))
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_resume_equals_uninterrupted_bitwise(tmp_path):
+    """Satellite 1 acceptance: the checkpoint carries the FULL training
+    state — params, opt state, error-feedback memory AND the fault carry
+    (burst chains, dropout mask, stale cache) — so interrupt + resume is
+    bitwise indistinguishable from an uninterrupted run."""
+    steps = 8
+    full = trainer.train(_fault_loss, _params(), _opt(steps), _data,
+                         _tcfg(steps=steps, ckpt_dir=None))
+    d = str(tmp_path)
+    trainer.train(_fault_loss, _params(), _opt(steps), _data,
+                  _tcfg(steps=4, ckpt_dir=d, ckpt_every=4))
+    resumed = trainer.train(_fault_loss, _params(), _opt(steps), _data,
+                            _tcfg(steps=steps, ckpt_dir=d, ckpt_every=8))
+    assert resumed.history[0]["step"] >= 4       # resumed, not restarted
+    _assert_trees_equal(resumed.values, full.values)
+    _assert_trees_equal(resumed.opt_state, full.opt_state)
+    _assert_trees_equal(resumed.aux_state, full.aux_state)
+    # the evolved carry is a real FaultState (chains actually ran)
+    assert isinstance(full.aux_state, FaultState)
+    assert int(full.aux_state.age) >= 0
+
+
+def test_aux_state_validation():
+    with pytest.raises(ValueError, match="channel_rng_seed"):
+        trainer.train(_fault_loss, _params(), _opt(2), _data,
+                      TrainerConfig(steps=2, aux_state=_aux0()))
+    with pytest.raises(ValueError, match="microbatches == 1"):
+        trainer.train(_fault_loss, _params(), _opt(2), _data,
+                      TrainerConfig(steps=2, aux_state=_aux0(),
+                                    channel_rng_seed=7, microbatches=2))
+
+
+def test_ckpt_on_stall_persists_the_carry_immediately(tmp_path):
+    """The watchdog's stall flag triggers an immediate full-carry
+    checkpoint (driven by the injectable clock — no wall-time sleeping)."""
+    durations = [1.0, 1.0, 1.0, 1.0, 9.0, 1.0]     # step 4 stalls: 9 > 3x1
+    times, t = [], 0.0
+    for dt in durations:
+        times.append(t)
+        t += dt
+        times.append(t)
+    clock = iter(times).__next__
+    res = trainer.train(
+        _fault_loss, _params(), _opt(6), _data,
+        _tcfg(steps=6, ckpt_dir=str(tmp_path), ckpt_every=0,
+              ckpt_on_stall=True, clock=clock, resume=False))
+    assert res.straggler_flags == [4]
+    assert (tmp_path / "step_0000000005" / "COMMIT").exists()

@@ -307,7 +307,8 @@ def test_fixed_schedule_reproduces_run_curves_bit_for_bit():
     tc.reset_dispatch_counts()
     sched = tc.run_scheduled_curves(SCHED_TINY, FixedBits(8))
     assert tc.trace_counts()["sched"] == 1
-    assert tc.dispatch_counts() == {"fused": 0, "sched": 1, "fused_dp": 0}
+    assert tc.dispatch_counts() == {"fused": 0, "sched": 1, "fused_dp": 0,
+                                    "fused_faults": 0}
     assert np.array_equal(sched.acc, plain.acc[0])
     assert np.array_equal(sched.nll, plain.nll[0])
     assert np.array_equal(sched.loss_history, plain.loss_history[0])
